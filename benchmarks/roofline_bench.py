@@ -1,0 +1,33 @@
+"""Roofline summary from the dry-run sweep (EXPERIMENTS.md §Roofline feed)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+RESULTS = pathlib.Path("results/dryrun")
+
+
+def roofline_table(rows):
+    if not RESULTS.exists():
+        rows.append(("roofline/missing", "0", "run repro.launch.dryrun --all"))
+        return
+    recs = []
+    for p in sorted(RESULTS.glob("*_single.json")):
+        r = json.loads(p.read_text())
+        if r.get("skipped") or r.get("error"):
+            continue
+        recs.append(r)
+    for r in recs:
+        t = r["roofline"]
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}",
+            f"{t['roofline_fraction']:.3f}",
+            f"bottleneck={t['bottleneck']};compute={t['compute_s']:.3g};"
+            f"memory={t['memory_s']:.3g};coll={t['collective_s']:.3g};"
+            f"useful={t['useful_flops_ratio']:.2f};"
+            f"mem_GiB={r['memory']['peak_est_bytes'] / 2**30:.1f}"))
+    if recs:
+        worst = min(recs, key=lambda r: r["roofline"]["roofline_fraction"])
+        rows.append(("roofline/worst_cell",
+                     f"{worst['roofline']['roofline_fraction']:.3f}",
+                     f"{worst['arch']}/{worst['shape']}"))

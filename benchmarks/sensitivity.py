@@ -1,0 +1,65 @@
+"""Paper Figs. 6–10: sensitivity to solution-space size, δ(t), g(t), ρ, |E|."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (build_tables, generate_instance, make_esdp_policy,
+                        make_hswf_policy, simulate)
+from repro.core.stats import DELTA_VARIANTS, G_VARIANTS
+
+T = 1500
+SEEDS = (11, 12)
+
+
+def _asw(inst, policy_factory, **kw):
+    tables = build_tables(inst.A, inst.c)
+    vals = [simulate(inst, policy_factory(inst, tables), T, seed=s,
+                     tables=tables).asw[-1] for s in SEEDS]
+    return float(np.mean(vals))
+
+
+def fig6_solution_space(rows):
+    """Grow X via capacities: larger c ⇒ more feasible dispatch vectors."""
+    for c_hi in (1, 2, 4, 6):
+        inst = generate_instance(seed=2, c_lo=1, c_hi=c_hi)
+        e = _asw(inst, lambda i, tb: make_esdp_policy(i, T, tables=tb))
+        h = _asw(inst, lambda i, tb: make_hswf_policy(i))
+        rows.append((f"fig6/c_hi{c_hi}", f"esdp={e:.1f}",
+                     f"hswf={h:.1f};states={build_tables(inst.A, inst.c).n_states}"))
+
+
+def fig7_delta(rows):
+    """δ(t) variants: little ASW effect, big S(t)-size (overhead) effect."""
+    inst = generate_instance(seed=0)
+    from repro.core.stats import s_cap_for_horizon
+    for name, fn in DELTA_VARIANTS.items():
+        e = _asw(inst, lambda i, tb: make_esdp_policy(i, T, delta_fn=fn,
+                                                      tables=tb))
+        rows.append((f"fig7/delta_{name}", f"esdp={e:.1f}",
+                     f"s_cap={s_cap_for_horizon(T, inst.m, fn)}"))
+
+
+def fig8_g(rows):
+    """g(t) variants: ln(t+1) should win 'overwhelmingly' (paper Fig. 8)."""
+    inst = generate_instance(seed=0)
+    for name, fn in G_VARIANTS.items():
+        e = _asw(inst, lambda i, tb: make_esdp_policy(i, T, g_fn=fn,
+                                                      tables=tb))
+        rows.append((f"fig8/g_{name}", f"esdp={e:.1f}", ""))
+
+
+def fig9_rho(rows):
+    for rho in (0.3, 0.6, 0.9):
+        inst = generate_instance(seed=4, rho=rho)
+        e = _asw(inst, lambda i, tb: make_esdp_policy(i, T, tables=tb))
+        h = _asw(inst, lambda i, tb: make_hswf_policy(i))
+        rows.append((f"fig9/rho{rho}", f"esdp={e:.1f}", f"hswf={h:.1f}"))
+
+
+def fig10_edges(rows):
+    for p in (0.05, 0.1, 0.2, 0.4):
+        inst = generate_instance(seed=5, edge_prob=p)
+        e = _asw(inst, lambda i, tb: make_esdp_policy(i, T, tables=tb))
+        h = _asw(inst, lambda i, tb: make_hswf_policy(i))
+        rows.append((f"fig10/p{p}", f"esdp={e:.1f}",
+                     f"hswf={h:.1f};E={inst.n_edges}"))

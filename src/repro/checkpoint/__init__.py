@@ -1,0 +1,4 @@
+"""Checkpointing."""
+from .manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

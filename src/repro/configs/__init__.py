@@ -1,0 +1,31 @@
+"""Architecture registry: ``get_config(arch_id, reduced=False)``."""
+from . import (dbrx_132b, deepseek_v3_671b, gemma3_27b, gemma_7b,
+               mamba2_2_7b, qwen1_5_32b, qwen2_5_32b, qwen2_vl_72b,
+               whisper_medium, zamba2_7b)
+from .base import SHAPES, ModelConfig, Shape, shape_applicable
+
+_MODULES = {
+    "qwen2.5-32b": qwen2_5_32b,
+    "gemma3-27b": gemma3_27b,
+    "gemma-7b": gemma_7b,
+    "qwen1.5-32b": qwen1_5_32b,
+    "zamba2-7b": zamba2_7b,
+    "dbrx-132b": dbrx_132b,
+    "deepseek-v3-671b": deepseek_v3_671b,
+    "whisper-medium": whisper_medium,
+    "mamba2-2.7b": mamba2_2_7b,
+    "qwen2-vl-72b": qwen2_vl_72b,
+}
+
+ARCHS = tuple(_MODULES.keys())
+
+
+def get_config(arch: str, reduced: bool = False) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; choose from {ARCHS}")
+    mod = _MODULES[arch]
+    return mod.REDUCED if reduced else mod.FULL
+
+
+__all__ = ["ARCHS", "SHAPES", "ModelConfig", "Shape", "get_config",
+           "shape_applicable"]

@@ -1,0 +1,23 @@
+"""The paper's contribution: ESDP dispatching of multi-server jobs.
+
+Public API:
+  generate_instance / Instance          — bipartite-graph problem instances
+  build_tables / solve_budgeted_dp      — Algorithm 2 (budgeted DP)
+  make_esdp_policy                      — Algorithm 1 (ESDP)
+  make_hswf_policy / make_lcf_policy / make_lwtf_policy — paper baselines
+  simulate / SimResult                  — the EASW simulation environment
+"""
+from .baselines import make_hswf_policy, make_lcf_policy, make_lwtf_policy
+from .dp import DPTables, build_tables, oracle_knapsack, solve_budgeted_dp
+from .env import SimResult, simulate
+from .esdp import Policy, make_esdp_policy
+from .graph import Instance, generate_instance
+from . import stats
+
+__all__ = [
+    "Instance", "generate_instance",
+    "DPTables", "build_tables", "solve_budgeted_dp", "oracle_knapsack",
+    "Policy", "make_esdp_policy",
+    "make_hswf_policy", "make_lcf_policy", "make_lwtf_policy",
+    "SimResult", "simulate", "stats",
+]

@@ -1,0 +1,107 @@
+"""Handcrafted baseline policies from paper Sec. 4.1: HSWF, LCF, LWTF.
+
+All three estimate Z̃ by the average of historical observations (the shared
+(n, Σz̃) carry) and then dispatch greedily by a ranking until capacity (1)
+blocks. The paper ranks *ports* and is silent on channel choice within a
+port; we rank edges lexicographically (port-rank, then estimated value),
+which is the natural edge-level refinement (DESIGN.md §8.4). Greedy skips
+infeasible edges and keeps scanning (charitable variant — a stronger
+baseline than stop-at-first-violation), and rank ties are broken uniformly
+at random each slot (otherwise an all-zero initial estimate deterministically
+locks a greedy policy onto one arbitrary channel forever — clearly not the
+paper's intent for its strongest baseline).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .esdp import Policy
+from .graph import Instance
+
+__all__ = ["make_hswf_policy", "make_lcf_policy", "make_lwtf_policy", "greedy_pack"]
+
+
+def greedy_pack(scores, eligible, A, c):
+    """Greedily set x_e = 1 in descending score order under A x ≤ c.
+
+    scores: (E,) f32; eligible: (E,) bool; A: (K,E) i32; c: (K,) i32.
+    """
+    E = scores.shape[0]
+    order = jnp.argsort(jnp.where(eligible, scores, -jnp.inf))[::-1]
+
+    def body(j, carry):
+        cap, x = carry
+        e = order[j]
+        ok = eligible[e] & jnp.all(cap >= A[:, e])
+        x = x.at[e].set(ok.astype(jnp.int32))
+        cap = cap - jnp.where(ok, A[:, e], 0)
+        return cap, x
+
+    _, x = jax.lax.fori_loop(
+        0, E, body, (c, jnp.zeros(E, dtype=jnp.int32)))
+    return x
+
+
+def _common(instance: Instance):
+    A = jnp.asarray(instance.A)
+    c = jnp.asarray(instance.c)
+    port = jnp.asarray(instance.port_of_edge)
+    cost = jnp.asarray(instance.cost)
+    return A, c, port, cost
+
+
+def _tiebreak(key, E, scale):
+    if scale == 0.0:
+        return jnp.zeros(E, dtype=jnp.float32)
+    return jax.random.uniform(key, (E,)) * scale
+
+
+def make_hswf_policy(instance: Instance, tiebreak: float = 1e-4) -> Policy:
+    """Highest (estimated) Social Welfare First.
+
+    ``tiebreak=0`` gives the paper-literal deterministic variant (which locks
+    onto one channel under all-zero initial estimates).
+    """
+    A, c, port, _ = _common(instance)
+    E = instance.n_edges
+
+    def step(state, t, arrived, vhat, n, key):
+        eligible = arrived[port]
+        return greedy_pack(vhat + _tiebreak(key, E, tiebreak), eligible, A, c), state
+
+    return Policy(name="hswf", init=lambda: (), step=step)
+
+
+def make_lcf_policy(instance: Instance, tiebreak: float = 1e-4) -> Policy:
+    """Lowest Cost First (ascending supply cost Σ_k f_k(a_k^e))."""
+    A, c, port, cost = _common(instance)
+    E = instance.n_edges
+
+    def step(state, t, arrived, vhat, n, key):
+        eligible = arrived[port]
+        return greedy_pack(-cost + _tiebreak(key, E, tiebreak), eligible, A, c), state
+
+    return Policy(name="lcf", init=lambda: (), step=step)
+
+
+def make_lwtf_policy(instance: Instance, tiebreak: float = 1e-4) -> Policy:
+    """Longest Waiting Time First (port-level priority, value tiebreak)."""
+    A, c, port, _ = _common(instance)
+    L = instance.n_ports
+    E = instance.n_edges
+
+    def init():
+        return jnp.zeros(L, dtype=jnp.int32)   # waiting slots per port
+
+    def step(waiting, t, arrived, vhat, n, key):
+        eligible = arrived[port]
+        # lexicographic: waiting time dominates, v̂ breaks ties within a port
+        score = (waiting[port].astype(jnp.float32) * 1e3 + vhat
+                 + _tiebreak(key, E, tiebreak))
+        x = greedy_pack(score, eligible, A, c)
+        served = jnp.zeros(L, dtype=bool).at[port].max(x > 0)
+        waiting = jnp.where(served, 0, waiting + arrived.astype(jnp.int32))
+        return x, waiting
+
+    return Policy(name="lwtf", init=init, step=step)

@@ -1,0 +1,90 @@
+"""Simulation environment for the EASW maximization problem (paper Sec. 2).
+
+One jitted ``lax.scan`` over the horizon: draw arrivals ~ Bernoulli(ρ_l) and
+net valuations z̃_e(t) = clip(N(μ_e − cost_e, σ_e), 0, 1), ask the policy for
+x(t), enforce constraint (2), realize SW(x(t)) = Σ_e x_e·z̃_e (eq. 4), update
+the shared observation statistics, and account the per-slot regret against
+the omniscient oracle x*(t) (eq. 5–6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dp import DPTables, build_tables, oracle_knapsack
+from .esdp import Policy
+from .graph import Instance
+
+__all__ = ["SimResult", "simulate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    sw: np.ndarray          # (T,) realized social welfare per slot
+    sw_oracle: np.ndarray   # (T,) oracle expected welfare ṽᵀx*(t)
+    regret: np.ndarray      # (T,) ṽᵀx*(t) − ṽᵀx(t)  (expected per-slot gap)
+    n_dispatched: np.ndarray  # (T,) ‖x(t)‖₁
+
+    @property
+    def asw(self) -> np.ndarray:
+        return np.cumsum(self.sw)
+
+    @property
+    def cum_regret(self) -> np.ndarray:
+        return np.cumsum(self.regret)
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "T", "tables"))
+def _run(policy: Policy, T: int, tables: DPTables, arrays, key):
+    v_true, mu, sigma, cost, rho, port = arrays
+    E = v_true.shape[0]
+    L = rho.shape[0]
+
+    def slot(carry, t):
+        n, sumz, pstate, key = carry
+        key, k_arr, k_val, k_pol = jax.random.split(key, 4)
+        arrived = jax.random.uniform(k_arr, (L,)) < rho
+        z = jnp.clip(
+            mu - cost + sigma * jax.random.normal(k_val, (E,)), 0.0, 1.0)
+
+        vhat = jnp.where(n > 0, sumz / jnp.maximum(n, 1).astype(jnp.float32), 0.0)
+        x, pstate = policy.step(pstate, t.astype(jnp.float32), arrived, vhat, n,
+                                k_pol)
+        x = x * arrived[port].astype(jnp.int32)            # constraint (2)
+
+        xf = x.astype(jnp.float32)
+        sw = jnp.sum(xf * z)                               # realized SW (eq. 4)
+        x_star, sw_star = oracle_knapsack(v_true, tables, arrived[port])
+        regret = sw_star - jnp.sum(xf * v_true)            # expected gap (eq. 5)
+
+        n = n + x
+        sumz = sumz + xf * z
+        return (n, sumz, pstate, key), (sw, sw_star, regret, jnp.sum(x))
+
+    carry0 = (jnp.zeros(E, jnp.int32), jnp.zeros(E, jnp.float32),
+              policy.init(), key)
+    ts = jnp.arange(1, T + 1)
+    _, (sw, sw_star, regret, nd) = jax.lax.scan(slot, carry0, ts)
+    return sw, sw_star, regret, nd
+
+
+def simulate(instance: Instance, policy: Policy, T: int, seed: int = 0,
+             tables: DPTables | None = None) -> SimResult:
+    """Run one policy for T slots; identical seeds ⇒ identical arrival and
+    valuation streams across policies (paired comparison, as in the paper)."""
+    if tables is None:
+        tables = build_tables(instance.A, instance.c)
+    arrays = (
+        jnp.asarray(instance.v), jnp.asarray(instance.mu),
+        jnp.asarray(instance.sigma), jnp.asarray(instance.cost),
+        jnp.asarray(instance.rho), jnp.asarray(instance.port_of_edge),
+    )
+    key = jax.random.PRNGKey(seed)
+    sw, sw_star, regret, nd = _run(policy, T, tables, arrays, key)
+    return SimResult(
+        sw=np.asarray(sw), sw_oracle=np.asarray(sw_star),
+        regret=np.asarray(regret), n_dispatched=np.asarray(nd))

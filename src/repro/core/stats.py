@@ -1,0 +1,111 @@
+"""Evolving statistics of ESDP (paper eqs. 7–15).
+
+All schedules take a (possibly traced) time ``t`` (1-based) and return jnp
+scalars, so the whole simulation can live inside one ``lax.scan``.
+
+Integer-domain bounds (why int32 is exact here):
+  Υ̂_e = ⌈ξ v̂_e⌉ ≤ ξ                      (v̂ ∈ [0,1])
+  Σ̂²_e = ⌈ξ² g/(2n)⌉ ≤ ⌈ξ² g/2⌉          (n ≥ 1)
+  With the default schedules at T = 10⁵: ξ ≲ 60·m and g ≲ 200, so
+  Σ̂² ≲ 2.1e5·m² and the UNEXPLORED bonus (m+1)·⌈ξ²g/2⌉ with DP sums over
+  ‖x‖₁ ≤ Σ_k c_k stays far below 2³¹ for every configuration we run.
+  The DP therefore uses exact int32 arithmetic (no float accumulation error),
+  which is also the natural datatype for the TPU VPU — see kernels/budgeted_dp.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+__all__ = [
+    "delta_default", "delta_fast", "delta_slow",
+    "g_default", "g_no_logt", "g_logt_only",
+    "xi_of", "s_cap_for_horizon", "scale_statistics",
+    "DELTA_VARIANTS", "G_VARIANTS",
+]
+
+# --------------------------------------------------------------------------
+# δ(t) — converge-to-zero relaxation sequence (paper eq. 11 & Fig. 7 variants)
+# --------------------------------------------------------------------------
+
+def delta_fast(t):
+    """(ln(t+1)+1)^-1 — fastest decay."""
+    return 1.0 / (jnp.log(t + 1.0) + 1.0)
+
+
+def delta_default(t):
+    """(ln(ln(t+1)+1)+1)^-1 — the paper's default."""
+    return 1.0 / (jnp.log(jnp.log(t + 1.0) + 1.0) + 1.0)
+
+
+def delta_slow(t):
+    """(ln(ln(ln(t+1)+1)+1)+1)^-1 — slowest decay."""
+    return 1.0 / (jnp.log(jnp.log(jnp.log(t + 1.0) + 1.0) + 1.0) + 1.0)
+
+
+DELTA_VARIANTS: dict[str, Callable] = {
+    "fast": delta_fast, "default": delta_default, "slow": delta_slow,
+}
+
+# --------------------------------------------------------------------------
+# g(t) — exploration scale (paper eq. 10 & Fig. 8 variants); m = ⌈α|E|⌉
+# --------------------------------------------------------------------------
+
+def g_default(t, m):
+    """ln(t+1) + 4 ln(ln(t+1)+1)·m — the paper's default experimental g."""
+    return jnp.log(t + 1.0) + 4.0 * jnp.log(jnp.log(t + 1.0) + 1.0) * m
+
+
+def g_no_logt(t, m):
+    """4 ln(ln(t+1)+1)·m."""
+    return 4.0 * jnp.log(jnp.log(t + 1.0) + 1.0) * m
+
+
+def g_logt_only(t, m):
+    """ln(t+1) — the variant the paper found 'overwhelmingly' best (Fig. 8)."""
+    return jnp.log(t + 1.0)
+
+
+G_VARIANTS: dict[str, Callable] = {
+    "default": g_default, "no_logt": g_no_logt, "logt_only": g_logt_only,
+}
+
+# --------------------------------------------------------------------------
+# ξ(t) and scaled statistics (paper eqs. 13–15)
+# --------------------------------------------------------------------------
+
+def xi_of(t, m, delta_fn=delta_default):
+    """ξ(t) = ⌈m / δ(t)⌉ (paper eq. 15)."""
+    return jnp.ceil(m / delta_fn(t)).astype(jnp.int32)
+
+
+def s_cap_for_horizon(T: int, m: int, delta_fn=delta_default) -> int:
+    """Static bound on max_t ξ(t)·m over a horizon (δ decreasing ⇒ at t=T)."""
+    import math
+    # evaluate at t = T with plain floats (host-side, static)
+    xi_T = math.ceil(m / float(delta_fn(jnp.float32(T))))
+    return int(xi_T) * int(m)
+
+
+def scale_statistics(vhat, n, t, m, g_fn=g_default, delta_fn=delta_default):
+    """Compute (Υ̂, Σ̂², ξ, s_limit) at time t — eqs. (13)–(15).
+
+    Unexplored channels (n=0) get a finite *dominance* bonus
+    ``UNEXP = (m+1)·⌈ξ²g/2⌉`` instead of the paper's +∞: any feasible set
+    containing an unexplored channel then strictly beats any set without one
+    (the DP objective is a sum of ≤ m terms each ≤ ⌈ξ²g/2⌉), preserving the
+    forced-exploration semantics in exact int32 (DESIGN.md §4).
+    """
+    xi = xi_of(t, m, delta_fn)
+    g = g_fn(t, m)
+    xif = xi.astype(jnp.float32)
+    upsilon = jnp.ceil(xif * vhat).astype(jnp.int32)
+    max_explored = jnp.ceil(xif * xif * g / 2.0).astype(jnp.int32)
+    sigma2_explored = jnp.ceil(
+        xif * xif * g / (2.0 * jnp.maximum(n, 1).astype(jnp.float32))
+    ).astype(jnp.int32)
+    unexp = (m + 1) * max_explored
+    sigma2 = jnp.where(n > 0, sigma2_explored, unexp)
+    s_limit = xi * m
+    return upsilon, sigma2, xi, s_limit

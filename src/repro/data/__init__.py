@@ -1,0 +1,4 @@
+"""Data pipeline."""
+from .pipeline import SyntheticLM, make_batch_iterator
+
+__all__ = ["SyntheticLM", "make_batch_iterator"]

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships as a triple: kernel.py (pl.pallas_call + BlockSpec VMEM
+tiling), ops.py (jit'd wrapper in substrate layout), ref.py (pure-jnp
+oracle). Validated in interpret mode on CPU; interpret=False on real TPU.
+
+  budgeted_dp      — the paper's Algorithm-2 hot loop (VMEM-resident plane,
+                     shift-slice + one-hot-matmul gathers)
+  flash_attention  — online-softmax attention for prefill/training
+  ssd              — Mamba2 chunked state-space scan
+"""

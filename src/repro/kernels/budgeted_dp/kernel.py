@@ -1,0 +1,83 @@
+"""Pallas TPU kernel for the ESDP budgeted DP (paper Algorithm 2).
+
+TPU-native design (DESIGN.md §4):
+  * the whole (S × C) value plane lives in VMEM (default sizes ≈ 80 KB);
+  * the edge loop runs INSIDE one pallas_call via fori_loop;
+  * the s-shift gather V[max(s−Υ_e, 0)] uses a padded VMEM scratch whose
+    first U_MAX rows hold the clamp row V[0]; a dynamic-START static-SIZE
+    slice (pl.ds) then reads the shifted window — no gather op at all;
+  * the capacity-state gather becomes a tiny (C × C) one-hot MATMUL on the
+    MXU — the standard TPU idiom replacing GPU warp gathers.
+
+Arithmetic is f32 with integer values; exactness holds for values < 2²⁴
+(ops.py asserts the bound — see core/stats.py for why defaults are ≪ 2²⁴).
+Decisions for the backtrack are written as an (E, S, C) f32 0/1 tensor.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -float(2 ** 24)
+
+
+def _dp_kernel(ups_ref, sig_ref, feas_ref, next_oh_ref, v0_ref,
+               vout_ref, dec_ref, vpad_ref, *, n_edges: int, u_max: int):
+    S, C = v0_ref.shape
+    vout_ref[:, :] = v0_ref[:, :]
+
+    def edge_step(j, _):
+        e = n_edges - 1 - j
+        u = ups_ref[e]
+        sig = sig_ref[e].astype(jnp.float32)
+
+        V = vout_ref[:, :]
+        # padded shift buffer: rows [0, u_max) = clamp row V[0], then V
+        vpad_ref[:u_max, :] = jnp.broadcast_to(V[0:1, :], (u_max, C))
+        vpad_ref[pl.ds(u_max, S), :] = V
+        shifted = vpad_ref[pl.ds(u_max - u, S), :]        # V[max(s-u, 0)]
+
+        # capacity gather as one-hot matmul: take[:, c] = shifted[:, next(c)]
+        oh = next_oh_ref[e, :, :]                          # (C, C) one-hot
+        take = jax.lax.dot_general(
+            shifted, oh, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) + sig
+
+        feas = feas_ref[e, :]                              # (C,) 0/1
+        take = jnp.where(feas[None, :] > 0, take, NEG)
+        dec = (take > V).astype(jnp.float32)
+        dec_ref[e, :, :] = dec
+        vout_ref[:, :] = jnp.maximum(V, take)
+        return 0
+
+    jax.lax.fori_loop(0, n_edges, edge_step, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_edges", "u_max", "interpret"))
+def dp_forward_pallas(upsilon, sigma2, feasible, next_onehot, v0,
+                      *, n_edges: int, u_max: int, interpret: bool = True):
+    """upsilon/sigma2: (E,) i32; feasible: (E, C) f32 0/1;
+    next_onehot: (E, C, C) f32 (one_hot of next-state ids, axis 1 = source);
+    v0: (S, C) f32. Returns (V_final (S, C) f32, decisions (E, S, C) f32)."""
+    S, C = v0.shape
+    kernel = functools.partial(_dp_kernel, n_edges=n_edges, u_max=u_max)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(jax.ShapeDtypeStruct((S, C), jnp.float32),
+                   jax.ShapeDtypeStruct((n_edges, S, C), jnp.float32)),
+        in_specs=[
+            pl.BlockSpec((n_edges,), lambda: (0,)),
+            pl.BlockSpec((n_edges,), lambda: (0,)),
+            pl.BlockSpec((n_edges, C), lambda: (0, 0)),
+            pl.BlockSpec((n_edges, C, C), lambda: (0, 0, 0)),
+            pl.BlockSpec((S, C), lambda: (0, 0)),
+        ],
+        out_specs=(pl.BlockSpec((S, C), lambda: (0, 0)),
+                   pl.BlockSpec((n_edges, S, C), lambda: (0, 0, 0))),
+        scratch_shapes=[pltpu.VMEM((u_max + S, C), jnp.float32)],
+        interpret=interpret,
+    )(upsilon, sigma2, feasible, next_onehot, v0)

@@ -1,0 +1,84 @@
+"""jit'd wrapper: ESDP Algorithm 2 on the Pallas budgeted-DP kernel.
+
+Drop-in equivalent of core.dp.solve_budgeted_dp (tested for exact
+agreement): prepares the one-hot gather operands, runs the VMEM-resident
+kernel, then applies the eq.-17 s* rule and backtracks in plain jnp.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.dp import DPTables
+from .kernel import NEG, dp_forward_pallas
+
+__all__ = ["prepare_tables", "solve_budgeted_dp_pallas"]
+
+VALUE_BOUND = 2 ** 24          # f32-exact integer domain (kernel contract)
+
+
+def prepare_tables(tables: DPTables):
+    """(feasible (E,C) f32, next_onehot (E,C,C) f32) kernel operands."""
+    feas = np.asarray(tables.feasible).T.astype(np.float32)        # (E, C)
+    nxt = np.asarray(tables.next_state).T                          # (E, C)
+    C = tables.n_states
+    oh = np.zeros((nxt.shape[0], C, C), np.float32)
+    for e in range(nxt.shape[0]):
+        oh[e][nxt[e], np.arange(C)] = 1.0       # oh[e, src, dst]
+    return jnp.asarray(feas), jnp.asarray(oh)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("s_cap", "u_max", "full_state",
+                                    "interpret"))
+def _solve(upsilon, sigma2, feasible, next_onehot, s_limit,
+           *, s_cap: int, u_max: int, full_state: int, interpret: bool):
+    E = upsilon.shape[0]
+    S = s_cap + 1
+    C = feasible.shape[1]
+    v0 = jnp.full((S, C), NEG, jnp.float32).at[0, :].set(0.0)
+
+    V, decisions = dp_forward_pallas(
+        upsilon, sigma2, feasible, next_onehot, v0,
+        n_edges=E, u_max=u_max, interpret=interpret)
+
+    v_row = V[:, full_state]
+    s_vals = jnp.arange(S, dtype=jnp.int32)
+    ok = (v_row > NEG / 2) & (s_vals <= s_limit)
+    score = s_vals.astype(jnp.float32) + jnp.sqrt(jnp.maximum(v_row, 0.0))
+    s_star = jnp.argmax(jnp.where(ok, score, -jnp.inf)).astype(jnp.int32)
+
+    next_idx = jnp.argmax(next_onehot, axis=1)       # (E, C)
+
+    def back(e, carry):
+        s, cs, x = carry
+        d = decisions[e, s, cs] > 0.5
+        x = x.at[e].set(d.astype(jnp.int32))
+        s_new = jnp.maximum(s - upsilon[e], 0)
+        return (jnp.where(d, s_new, s),
+                jnp.where(d, next_idx[e, cs], cs), x)
+
+    _, _, x = jax.lax.fori_loop(
+        0, E, back, (s_star, jnp.int32(full_state),
+                     jnp.zeros(E, jnp.int32)))
+    return x, s_star, v_row
+
+
+def solve_budgeted_dp_pallas(upsilon, sigma2, tables: DPTables, s_cap: int,
+                             s_limit, u_max: int | None = None,
+                             allowed=None, interpret: bool = True):
+    """Same contract as core.dp.solve_budgeted_dp (+ interpret switch)."""
+    feas, oh = prepare_tables(tables)
+    if allowed is not None:
+        feas = feas * jnp.asarray(allowed, jnp.float32)[:, None]
+    if u_max is None:
+        u_max = s_cap + 1
+    x, s_star, v_row = _solve(
+        jnp.asarray(upsilon, jnp.int32), jnp.asarray(sigma2, jnp.int32),
+        feas, oh, jnp.asarray(s_limit, jnp.int32),
+        s_cap=s_cap, u_max=int(u_max), full_state=tables.full_state,
+        interpret=interpret)
+    return x, {"s_star": s_star, "value_row": v_row}

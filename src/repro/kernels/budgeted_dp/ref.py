@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the budgeted-DP kernel (mirrors core/dp._dp_forward
+in the kernel's f32 value domain)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import NEG
+
+
+def dp_forward_ref(upsilon, sigma2, feasible, next_onehot, v0):
+    """Same contract as kernel.dp_forward_pallas, computed with jnp gathers."""
+    E = upsilon.shape[0]
+    S, C = v0.shape
+    rows = jnp.arange(S)
+    next_idx = jnp.argmax(next_onehot, axis=1)        # (E, C) source index
+
+    def body(V, e_rev):
+        e = E - 1 - e_rev
+        u = upsilon[e]
+        shifted = V[jnp.maximum(rows - u, 0), :]
+        take = jnp.take(shifted, next_idx[e], axis=1) + sigma2[e].astype(
+            jnp.float32)
+        take = jnp.where(feasible[e][None, :] > 0, take, NEG)
+        dec = (take > V).astype(jnp.float32)
+        return jnp.maximum(V, take), dec
+
+    V, decs = jax.lax.scan(body, v0, jnp.arange(E))
+    decisions = decs[::-1]                            # index by edge id
+    return V, decisions

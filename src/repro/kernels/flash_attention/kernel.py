@@ -1,0 +1,99 @@
+"""Pallas TPU flash-attention (forward) for prefill/training compute.
+
+Grid (B, KH, Sq/blk_q): each program owns one q block of one kv-head group
+and streams KV in blk_k slices from VMEM with the online-softmax
+recurrence (m, l, acc in f32). Causal + sliding-window masking is applied
+per block; fully-masked KV blocks are skipped via jax.lax.cond at trip
+granularity (blocks strictly above the diagonal).
+
+Layouts: q (B, KH, g, Sq, hd); k/v (B, KH, Sk, hd) — GQA folds the group
+into the q block (g·blk_q rows hit the MXU together). blk sizes default to
+(128, 512); hd must be a multiple of 8 (MXU/VREG alignment).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
+                  window: int, blk_k: int, sk: int):
+    _, _, g, blk_q, hd = q_ref.shape
+    qb = pl.program_id(2)
+    q = q_ref[0, 0].reshape(g * blk_q, hd).astype(jnp.float32) * scale
+
+    m0 = jnp.full((g * blk_q,), NEG, jnp.float32)
+    l0 = jnp.zeros((g * blk_q,), jnp.float32)
+    acc0 = jnp.zeros((g * blk_q, hd), jnp.float32)
+
+    q_pos = qb * blk_q + jax.lax.broadcasted_iota(
+        jnp.int32, (g, blk_q), 1).reshape(g * blk_q) + (sk - pl.num_programs(2) * blk_q)
+
+    def kv_step(i, carry):
+        m, l, acc = carry
+        k = k_ref[0, 0, pl.ds(i * blk_k, blk_k), :].astype(jnp.float32)
+        v = v_ref[0, 0, pl.ds(i * blk_k, blk_k), :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        k_pos = i * blk_k + jax.lax.broadcasted_iota(
+            jnp.int32, (1, blk_k), 1)[0]
+        mask = jnp.ones((g * blk_q, blk_k), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        s = jnp.where(mask, s, NEG)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    n_kv = sk // blk_k
+    if causal:
+        # skip blocks strictly above the diagonal of this q block
+        last_q = qb * blk_q + blk_q - 1 + (sk - pl.num_programs(2) * blk_q)
+        n_live = jnp.minimum((last_q // blk_k) + 1, n_kv)
+    else:
+        n_live = n_kv
+    m, l, acc = jax.lax.fori_loop(0, n_live, kv_step, (m0, l0, acc0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0, 0] = out.reshape(g, blk_q, hd).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "causal", "window", "blk_q", "blk_k", "interpret"))
+def flash_attention(q, k, v, *, scale: float, causal: bool = True,
+                    window: int = 0, blk_q: int = 128, blk_k: int = 512,
+                    interpret: bool = True):
+    """q: (B, KH, g, Sq, hd); k, v: (B, KH, Sk, hd). Returns like q."""
+    B, KH, g, Sq, hd = q.shape
+    Sk = k.shape[2]
+    blk_q = min(blk_q, Sq)
+    blk_k = min(blk_k, Sk)
+    assert Sq % blk_q == 0 and Sk % blk_k == 0, (Sq, blk_q, Sk, blk_k)
+
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               window=window, blk_k=blk_k, sk=Sk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, KH, Sq // blk_q),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, blk_q, hd),
+                         lambda b, h, i: (b, h, 0, i, 0)),
+            pl.BlockSpec((1, 1, Sk, hd), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, Sk, hd), lambda b, h, i: (b, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, blk_q, hd),
+                               lambda b, h, i: (b, h, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,29 @@
+"""jit'd wrapper over the flash-attention kernel, standard (B,S,H,hd) layout.
+
+On this CPU container the kernel is validated with interpret=True; on TPU
+the same call site sets interpret=False. ``flash_attention_op`` is layout-
+compatible with models.attention.chunked_attention.
+"""
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_attention
+
+__all__ = ["flash_attention_op"]
+
+
+def flash_attention_op(q, k, v, *, scale: float, causal: bool = True,
+                       window: int = 0, blk_q: int = 128, blk_k: int = 512,
+                       interpret: bool = True):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KH, hd) with H = KH·g."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KH, _ = k.shape
+    g = H // KH
+    qk = q.reshape(B, Sq, KH, g, hd).transpose(0, 2, 3, 1, 4)
+    kk = k.transpose(0, 2, 1, 3)
+    vk = v.transpose(0, 2, 1, 3)
+    o = flash_attention(qk, kk, vk, scale=scale, causal=causal,
+                        window=window, blk_q=blk_q, blk_k=blk_k,
+                        interpret=interpret)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle: full-softmax attention (materializes logits)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, scale: float, causal: bool = True,
+                  window: int = 0):
+    """q: (B, Sq, H, hd); k/v: (B, Sk, KH, hd). Returns (B, Sq, H, vh)."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KH, _ = k.shape
+    g = H // KH
+    qg = q.reshape(B, Sq, KH, g, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qi = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    kj = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kj <= qi
+    if window > 0:
+        mask &= qi - kj < window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    attn = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", attn, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)

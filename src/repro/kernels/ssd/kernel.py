@@ -1,0 +1,99 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan (train/prefill).
+
+Grid (B·H, n_chunks): the chunk axis is the innermost (sequential) grid
+dimension; the (P, N) recurrent state lives in a VMEM scratch that persists
+across grid steps of the same (b, h) program row and is reset at chunk 0.
+Per chunk (all f32 in VMEM):
+
+  cum   = cumsum(dt·A)                              (Q,)
+  decay = exp(cum_i − cum_j)·[i ≥ j]                (Q, Q)
+  y     = ((C Bᵀ) ⊙ decay ⊙ dt_j) x                 intra-chunk, MXU
+        + (C state) ⊙ exp(cum)                      inter-chunk
+  state = exp(cum_last)·state + Bᵀ((exp(cum_last−cum)·dt) ⊙ x)
+
+This is the TPU-native blocking of the SSD algorithm: the quadratic
+intra-chunk term is a dense (Q×Q)(Q×P) MXU matmul, the state update a
+(N×Q)(Q×P) matmul — no sequential per-token work at all.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
+                state_ref):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[:, :] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (Q,)
+    A = a_ref[0]                                  # scalar (per head)
+    Bm = b_ref[0, 0].astype(jnp.float32)         # (Q, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)         # (Q, N)
+    Q = x.shape[0]
+
+    dA = dt * A
+    cum = jnp.cumsum(dA)
+    seg = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    decay = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (Q, Q)
+    M = cb * decay * dt[None, :]
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)    # (Q, P)
+
+    state = state_ref[:, :]                       # (N, P)
+    y += jax.lax.dot_general(Cm, state, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32) \
+        * jnp.exp(cum)[:, None]
+
+    wj = jnp.exp(cum[-1] - cum) * dt              # (Q,)
+    upd = jax.lax.dot_general(Bm, x * wj[:, None],
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (N, P)
+    state = state * jnp.exp(cum[-1]) + upd
+    state_ref[:, :] = state
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == pl.num_programs(1) - 1)
+    def _emit_state():
+        state_out_ref[0] = state.astype(state_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_scan(x, dt, A, B_, C_, *, interpret: bool = True):
+    """x: (BH, NC, Q, P); dt: (BH, NC, Q); A: (BH,); B_/C_: (BH, NC, Q, N).
+    Returns (y: (BH, NC, Q, P), final_state: (BH, N, P))."""
+    BH, NC, Q, P = x.shape
+    N = B_.shape[-1]
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=(BH, NC),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1,), lambda b, c: (b,)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c: (b, c, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, Q, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, N, P), lambda b, c: (b, 0, 0)),
+        ),
+        out_shape=(jax.ShapeDtypeStruct((BH, NC, Q, P), x.dtype),
+                   jax.ShapeDtypeStruct((BH, N, P), jnp.float32)),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B_, C_)

@@ -1,0 +1,44 @@
+"""jit'd wrapper over the SSD kernel, substrate (B,S,H,P) layout."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import ssd_scan
+
+__all__ = ["ssd_op"]
+
+
+def ssd_op(x, dt, A, B_, C_, chunk: int, interpret: bool = True):
+    """Same contract as models.ssm.ssd_chunked (B/C shared across heads).
+
+    x: (B, S, H, P); dt: (B, S, H); A: (H,); B_/C_: (B, S, N).
+    Returns (y (B,S,H,P) f32, final_state (B,H,N,P) f32).
+    """
+    B, S, H, P = x.shape
+    N = B_.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    NC = Sp // Q
+
+    xk = (x.reshape(B, NC, Q, H, P).transpose(0, 3, 1, 2, 4)
+          .reshape(B * H, NC, Q, P))
+    dtk = (dt.reshape(B, NC, Q, H).transpose(0, 3, 1, 2)
+           .reshape(B * H, NC, Q))
+    Ak = jnp.broadcast_to(A[None, :], (B, H)).reshape(B * H)
+    Bk = jnp.broadcast_to(B_.reshape(B, 1, NC, Q, N),
+                          (B, H, NC, Q, N)).reshape(B * H, NC, Q, N)
+    Ck = jnp.broadcast_to(C_.reshape(B, 1, NC, Q, N),
+                          (B, H, NC, Q, N)).reshape(B * H, NC, Q, N)
+
+    y, state = ssd_scan(xk.astype(jnp.float32), dtk.astype(jnp.float32),
+                        Ak.astype(jnp.float32), Bk.astype(jnp.float32),
+                        Ck.astype(jnp.float32), interpret=interpret)
+    y = (y.reshape(B, H, NC, Q, P).transpose(0, 2, 3, 1, 4)
+         .reshape(B, Sp, H, P)[:, :S])
+    return y, state.reshape(B, H, N, P)

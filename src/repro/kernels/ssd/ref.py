@@ -1,0 +1,16 @@
+"""Pure-jnp oracle: delegates to the substrate's chunked SSD (single source
+of truth — models/ssm.py is itself validated by the prefill/decode
+consistency tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...models.ssm import ssd_chunked
+
+
+def ssd_ref(x, dt, A, B_, C_, chunk: int):
+    """x: (B, S, H, P); dt: (B, S, H); A: (H,); B_/C_: (B, S, N).
+    Returns (y (B,S,H,P), final_state (B,H,N,P))."""
+    return ssd_chunked(x.astype(jnp.float32), dt.astype(jnp.float32),
+                       A.astype(jnp.float32), B_.astype(jnp.float32),
+                       C_.astype(jnp.float32), chunk)

@@ -1,0 +1,4 @@
+"""Launchers: production meshes, dry-run, training and serving drivers."""
+from .mesh import make_mesh_shape, make_production_mesh
+
+__all__ = ["make_mesh_shape", "make_production_mesh"]

@@ -1,0 +1,200 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms (seconds, per chip — cost_analysis is post-SPMD per-device):
+    compute    = HLO_FLOPs / peak_FLOPs            (197 TFLOP/s bf16, v5e)
+    memory     = HLO_bytes / HBM_bw                (819 GB/s)
+    collective = wire_bytes / link_bw              (~50 GB/s ICI)
+
+wire_bytes comes from parsing the compiled HLO: for each collective op we
+take the per-device result shape and convert to ring-algorithm wire traffic:
+    all-gather        : out_bytes · (N-1)/N        (receives all other shards)
+    reduce-scatter    : out_bytes · (N-1)          (N-1 chunk passes)
+    all-reduce        : out_bytes · 2(N-1)/N       (RS + AG at full size)
+    all-to-all        : out_bytes · (N-1)/N
+    collective-permute: out_bytes
+Replica groups are parsed from both iota ([G,N]<=[T]) and explicit ({{..}})
+forms to recover the group size N.
+
+MODEL_FLOPS uses the 6·N_active·D (train) / 2·N_active·D (inference)
+convention with N_active counted from the spec tree (routed expert tensors
+scaled by top_k/E; embedding gather excluded, tied head counted once).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+
+__all__ = ["HW", "parse_collective_bytes", "active_param_count",
+           "roofline_terms", "model_flops"]
+
+HW = {
+    "peak_flops": 197e12,       # bf16 / chip
+    "hbm_bw": 819e9,            # B/s
+    "link_bw": 50e9,            # B/s per ICI link
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|([a-z0-9]+)\[([\d,]*)\][^=]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", )
+
+_TUPLE_RE = re.compile(r"=\s*\(([^)]*)\)\s*"
+                       r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                       r"collective-permute)(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]")
+_EXPL_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _line_out_bytes(line: str) -> int:
+    """Bytes of the op result (first shape(s) after '=')."""
+    eq = line.find("=")
+    if eq < 0:
+        return 0
+    # result type is between '=' and the op name
+    m = re.match(r"\s*(\(?[^(]*?\)?)\s*(?:all-gather|all-reduce|"
+                 r"reduce-scatter|all-to-all|collective-permute)", line[eq + 1:])
+    if not m:
+        return 0
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(m.group(1)):
+        if dt in _DTYPE_BYTES:
+            total += _shape_bytes(dt, dims)
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        g, n = int(m.group(1)), int(m.group(2))
+        # iota form [G,N]<=[T]: either G groups of N or transposed; the
+        # second dim is the per-group size in HLO's row-major convention
+        return max(n, 1)
+    m = _EXPL_GROUPS_RE.search(line)
+    if m:
+        first = [s for s in m.group(1).split(",") if s.strip() != ""]
+        return max(len(first), 1)
+    return total_devices
+
+
+_WIRE_FACTOR = {
+    "all-gather": lambda n: (n - 1) / n,
+    "reduce-scatter": lambda n: float(n - 1),
+    "all-reduce": lambda n: 2 * (n - 1) / n,
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+
+
+def parse_collective_bytes(hlo_text: str, total_devices: int) -> dict:
+    """Per-device wire bytes by collective kind + op counts."""
+    out_bytes = {k: 0.0 for k in _WIRE_FACTOR}
+    counts = {k: 0 for k in _WIRE_FACTOR}
+    for line in hlo_text.splitlines():
+        for kind in _WIRE_FACTOR:
+            # match op occurrence as an instruction (not operand reference)
+            if f" {kind}(" in line or f" {kind}-start(" in line:
+                b = _line_out_bytes(line)
+                if b == 0:
+                    continue
+                n = _group_size(line, total_devices)
+                out_bytes[kind] += b * _WIRE_FACTOR[kind](n)
+                counts[kind] += 1
+                break
+    total = sum(out_bytes.values())
+    return {"by_kind": out_bytes, "counts": counts, "total_wire_bytes": total}
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS
+# ---------------------------------------------------------------------------
+
+def _spec_leaves(tree, prefix=()):
+    if isinstance(tree, dict) and tree.get("__leaf__", False):
+        yield prefix, tree
+        return
+    for k, v in tree.items():
+        yield from _spec_leaves(v, prefix + (k,))
+
+
+def active_param_count(model) -> tuple[int, int]:
+    """(total_params, active_params): routed experts scaled by top_k/E,
+    embedding gather excluded (tied head counted once as the head matmul)."""
+    cfg = model.config
+    total = 0
+    active = 0
+    for path, leaf in _spec_leaves(model.spec.tree):
+        n = int(np.prod(leaf["shape"]))
+        total += n
+        name = "/".join(path)
+        if name == "embed":
+            if cfg.tie_embeddings:
+                active += n          # used as the output head matmul
+            continue
+        if name == "pos_embed":
+            continue
+        if "expert" in leaf["axes"]:  # routed expert tensor (E, d, f)
+            active += int(n * cfg.top_k / cfg.n_experts)
+            continue
+        active += n
+    return total, active
+
+
+def model_flops(model, shape) -> float:
+    """6·N_active·D for train, 2·N_active·D for inference shapes (global)."""
+    _, active = active_param_count(model)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    tokens = shape.global_batch * 1          # decode: one token per row
+    return 2.0 * active * tokens
+
+
+def roofline_terms(cost: dict, coll: dict, n_devices: int,
+                   model=None, shape=None) -> dict:
+    flops = float(cost.get("flops", 0.0))
+    bytes_ = float(cost.get("bytes accessed", 0.0))
+    wire = float(coll["total_wire_bytes"])
+    terms = {
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_,
+        "wire_bytes_per_device": wire,
+        "compute_s": flops / HW["peak_flops"],
+        "memory_s": bytes_ / HW["hbm_bw"],
+        "collective_s": wire / HW["link_bw"],
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"),
+              key=lambda k: terms[k])
+    terms["bottleneck"] = dom.replace("_s", "")
+    if model is not None and shape is not None:
+        mf = model_flops(model, shape)
+        terms["model_flops_global"] = mf
+        terms["model_flops_per_device"] = mf / n_devices
+        terms["useful_flops_ratio"] = (
+            mf / n_devices / flops if flops > 0 else 0.0)
+        step_s = max(terms["compute_s"], terms["memory_s"],
+                     terms["collective_s"])
+        terms["roofline_fraction"] = (
+            (mf / n_devices / HW["peak_flops"]) / step_s if step_s > 0 else 0.0)
+    return terms

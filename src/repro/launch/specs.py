@@ -1,0 +1,76 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) cell.
+
+Everything is weak-type-correct and shardable; nothing allocates. The
+returned (abstract_batch, batch_axes) pair feeds Rules.tree_shardings for
+in_shardings of the lowered step.
+
+Conventions:
+  train   : tokens (B, S_text+1) — loss shifts internally
+  prefill : tokens (B, S_text)
+  decode  : token (B, 1) + pos (B,) + cache sized seq_len
+  vlm     : n_vision_tokens of the seq budget are patch embeddings
+            (precomputed by the stub frontend), positions are M-RoPE (3,B,S)
+  encdec  : enc_embeds (B, enc_len, d) from the stub conv frontend
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES, Shape, get_config
+from ..models import build_model
+from ..models.layers import DTYPES
+
+__all__ = ["input_specs", "batch_axes"]
+
+I32 = jnp.int32
+
+
+def _sd(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def input_specs(cfg, shape: Shape, model=None):
+    """Returns (abstract_batch, axes_tree) for the step this shape lowers."""
+    B, S = shape.global_batch, shape.seq_len
+    cdt = DTYPES[cfg.compute_dtype]
+    kind = shape.kind
+
+    if kind in ("train", "prefill"):
+        extra = 1 if kind == "train" else 0
+        batch, axes = {}, {}
+        if cfg.family == "vlm":
+            nv = cfg.n_vision_tokens
+            s_text = S - nv
+            batch["tokens"] = _sd((B, s_text + extra), I32)
+            axes["tokens"] = ("batch", None)
+            batch["patch_embeds"] = _sd((B, nv, cfg.d_model), cdt)
+            axes["patch_embeds"] = ("batch", None, None)
+            batch["positions"] = _sd((3, B, S), I32)
+            axes["positions"] = (None, "batch", None)
+        elif cfg.family == "encdec":
+            batch["tokens"] = _sd((B, S + extra), I32)
+            axes["tokens"] = ("batch", None)
+            batch["enc_embeds"] = _sd((B, cfg.enc_len, cfg.d_model), cdt)
+            axes["enc_embeds"] = ("batch", None, None)
+        else:
+            batch["tokens"] = _sd((B, S + extra), I32)
+            axes["tokens"] = ("batch", None)
+        return batch, axes
+
+    assert kind == "decode"
+    if model is None:
+        model = build_model(cfg)
+    cache, cache_axes = model.cache_spec(B, S)
+    batch = {"token": _sd((B, 1), I32), "pos": _sd((B,), I32),
+             "cache": cache}
+    axes = {"token": ("batch", None), "pos": ("batch",),
+            "cache": cache_axes}
+    if cfg.family == "vlm":
+        batch["positions"] = _sd((3, B, 1), I32)
+        axes["positions"] = (None, "batch", None)
+    return batch, axes
+
+
+def batch_axes(cfg, shape: Shape):
+    return input_specs(cfg, shape)[1]

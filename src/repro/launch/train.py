@@ -1,0 +1,106 @@
+"""Training driver: fault-tolerant loop over the jitted train step.
+
+CPU-scale usage (examples, tests):
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-32b \
+        --reduced --steps 200 --batch 8 --seq 128 --fail-p 0.02
+
+On a real cluster the same driver runs with the production mesh and the
+FULL config; the dry-run (launch/dryrun.py) proves that combination lowers
+and fits, so this file stays mesh-agnostic: pass --mesh data,model sizes
+that multiply to the local device count.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+from ..configs import get_config
+from ..data import SyntheticLM, make_batch_iterator
+from ..models import build_model
+from ..optim import AdamW, linear_warmup_cosine
+from ..runtime import init_train_state, make_rules, make_train_step
+from ..runtime.fault import FailureInjector, TrainSupervisor
+from .mesh import make_mesh_shape
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-32b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress", type=float, default=0.0,
+                    help="top-k gradient compression ratio (0 = off)")
+    ap.add_argument("--fail-p", type=float, default=0.0)
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--mesh", default="", help="e.g. '1,1' => data,model")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    model = build_model(cfg)
+
+    rules = None
+    if args.mesh:
+        sizes = tuple(int(x) for x in args.mesh.split(","))
+        mesh = make_mesh_shape(sizes, ("data", "model")[:len(sizes)])
+        rules = make_rules(mesh, "train")
+
+    opt = AdamW(lr=linear_warmup_cosine(args.lr, 10, args.steps))
+    step_fn = make_train_step(
+        model, opt, rules=rules, remat=args.remat,
+        microbatches=args.microbatches,
+        compress_ratio=args.compress or None)
+    step_fn = jax.jit(step_fn, donate_argnums=(0,))
+
+    state = init_train_state(model, jax.random.PRNGKey(args.seed), opt,
+                             compress=args.compress > 0)
+
+    ds = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq,
+                     global_batch=args.batch, seed=args.seed)
+    ckpt = CheckpointManager(args.ckpt_dir)
+    injector = FailureInjector(p_fail=args.fail_p, seed=args.seed,
+                               scheduled=tuple(args.fail_at))
+    sup = TrainSupervisor(step_fn, ckpt, injector,
+                          save_every=args.save_every)
+
+    losses = []
+
+    def on_metrics(step, metrics):
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % 10 == 0:
+            print(f"step {step:5d} loss {loss:7.4f} "
+                  f"gnorm {float(metrics['grad_norm']):7.3f}", flush=True)
+
+    t0 = time.time()
+    state, final_step = sup.run(
+        state,
+        make_iterator=lambda s: make_batch_iterator(ds, start_step=s),
+        total_steps=args.steps, on_metrics=on_metrics)
+    wall = time.time() - t0
+
+    summary = {
+        "arch": cfg.name, "steps": final_step, "wall_s": round(wall, 1),
+        "first_loss": losses[0] if losses else None,
+        "last_loss": float(np.mean(losses[-10:])) if losses else None,
+        "restarts": sup.restarts, "lost_steps": sup.lost_steps,
+        "straggler_slow_steps": sup.straggler.slow_steps,
+    }
+    print(json.dumps(summary))
+    return summary
+
+
+if __name__ == "__main__":
+    main()

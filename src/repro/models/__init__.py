@@ -1,0 +1,6 @@
+"""Pure-JAX model substrate for the assigned architectures."""
+from .transformer import Model, build_model
+from .layers import SpecTree, abstract_params, init_params, param_axes
+
+__all__ = ["Model", "build_model", "SpecTree", "abstract_params",
+           "init_params", "param_axes"]

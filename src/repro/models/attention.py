@@ -1,0 +1,310 @@
+"""Attention: GQA/MQA/MHA (+bias, sliding-window, M-RoPE), cross-attn, MLA.
+
+All weights are flattened 2D (in, out) so sharding rules stay uniform.
+``rules`` is a callable (x, logical_axes_tuple) -> x inserting sharding
+constraints; the default identity is used on CPU smoke tests.
+
+Full-sequence attention always goes through ``chunked_attention`` — an
+online-softmax scan over KV chunks (flash-attention recurrence in pure
+JAX). That keeps the compiled temp footprint at O(S·chunk) instead of
+O(S²) for the 32k prefill shapes and mirrors `kernels/flash_attention`,
+which is the TPU execution target for the same math.
+
+Caches:
+  GQA : k/v (B, S_max, KV, hd) per layer (stacked (L, ...) by the stack).
+  MLA : compressed c_kv (B, S_max, kv_lora) + k_rope (B, S_max, rope_hd) —
+        decode runs in the *absorbed* form entirely in compressed space
+        (the DeepSeek-V3 trick; never expands the 32k cache to 128 heads).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import SpecTree, apply_rope, rms_norm
+
+__all__ = [
+    "chunked_attention",
+    "attn_specs", "attn_train", "attn_decode",
+    "mla_specs", "mla_train", "mla_decode",
+    "cross_attn_specs", "cross_attn", "cross_kv",
+]
+
+_ID = lambda x, axes: x
+_NEG = -1e30
+
+
+def chunked_attention(q, k, v, *, scale: float, causal: bool = True,
+                      window=None, chunk: int = 1024):
+    """Online-softmax attention over KV chunks.
+
+    q: (B, Sq, H, hd); k: (B, Sk, KH, hd); v: (B, Sk, KH, vh) with H = KH·g.
+    ``window`` may be None (no sliding window), a static int, or a traced
+    scalar (per-layer windows inside a layer scan; ≤0 means "no window").
+    Returns (B, Sq, H, vh). f32 softmax state regardless of input dtype.
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KH, _ = k.shape
+    vh = v.shape[-1]
+    g = H // KH
+    chunk = min(chunk, Sk)
+    pad = (-Sk) % chunk
+    if pad:                      # padded keys are masked out below (kj < Sk)
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = (Sk + pad) // chunk
+
+    qg = q.reshape(B, Sq, KH, g, hd)
+    kc = k.reshape(B, n_chunks, chunk, KH, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, KH, vh).transpose(1, 0, 2, 3, 4)
+
+    qi = jnp.arange(Sq)[:, None] + (Sk - Sq)      # absolute q positions
+    m0 = jnp.full((B, KH, g, Sq), _NEG, jnp.float32)
+    l0 = jnp.zeros((B, KH, g, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, KH, g, vh), jnp.float32)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        c_idx, kb, vb = inp                        # kb (B, chunk, KH, hd)
+        kj = c_idx * chunk + jnp.arange(chunk)[None, :]
+        mask = kj < Sk                             # exclude pad keys
+        if causal:
+            mask &= kj <= qi
+        if window is not None:
+            w = jnp.asarray(window)
+            mask &= (qi - kj < w) | (w <= 0)
+        logits = jnp.einsum("bqkgh,bckh->bkgqc", qg, kb).astype(jnp.float32)
+        logits = jnp.where(mask[None, None, None], logits * scale, _NEG)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqc,bckv->bqkgv", p.astype(vb.dtype), vb)
+        acc = acc * alpha.transpose(0, 3, 1, 2)[..., None] + pv
+        return (m_new, l, acc), None
+
+    xs = (jnp.arange(n_chunks), kc, vc)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), xs)
+    denom = jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    out = (acc / denom).reshape(B, Sq, H, vh)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def attn_specs(spec: SpecTree, path: str, cfg):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    spec.param(path + "/wq", (d, H * hd), ("embed", "heads"))
+    spec.param(path + "/wk", (d, KV * hd), ("embed", "heads"))
+    spec.param(path + "/wv", (d, KV * hd), ("embed", "heads"))
+    spec.param(path + "/wo", (H * hd, d), ("heads", "embed"))
+    if cfg.qkv_bias:
+        spec.param(path + "/bq", (H * hd,), ("heads",), init="zeros")
+        spec.param(path + "/bk", (KV * hd,), ("heads",), init="zeros")
+        spec.param(path + "/bv", (KV * hd,), ("heads",), init="zeros")
+
+
+def _qkv(p, cfg, x):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, k, v = x @ p["wq"], x @ p["wk"], x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (q.reshape(B, S, H, hd), k.reshape(B, S, KV, hd),
+            v.reshape(B, S, KV, hd))
+
+
+def attn_train(p, cfg, x, positions, *, window=None, theta=None,
+               chunk: int = 1024, rules=_ID):
+    """Full-sequence attention (training / prefill). Returns (out, (k, v))."""
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    theta = cfg.rope_theta if theta is None else theta
+    q, k, v = _qkv(p, cfg, x)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, theta, cfg.mrope_sections)
+        k = apply_rope(k, positions, theta, cfg.mrope_sections)
+    q = rules(q, ("batch", "seq", "heads", None))
+    k = rules(k, ("batch", "seq", "kv_heads", None))
+    v = rules(v, ("batch", "seq", "kv_heads", None))
+
+    ctx = chunked_attention(q, k, v, scale=1.0 / math.sqrt(hd),
+                            causal=True, window=window, chunk=chunk)
+    ctx = rules(ctx.reshape(B, S, H * hd), ("batch", "seq", "heads"))
+    return ctx @ p["wo"], (k, v)
+
+
+def _scatter_kv(cache, new, pos):
+    """cache (B, S_max, ...) ← new (B, 1, ...) at per-row pos (B,)."""
+    B = cache.shape[0]
+    return cache.at[jnp.arange(B), pos].set(new[:, 0].astype(cache.dtype))
+
+
+def attn_decode(p, cfg, x, pos, kv_cache, *, window=None, theta=None,
+                rope_positions=None, rules=_ID):
+    """One-token decode. x: (B, 1, d); pos: (B,) absolute positions (cache
+    write index + mask); rope_positions overrides the rotary stream (M-RoPE
+    decode passes (3, B, 1)); kv_cache: (k, v) each (B, S_max, KV, hd)."""
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    theta = cfg.rope_theta if theta is None else theta
+    k_cache, v_cache = kv_cache
+    S_max = k_cache.shape[1]
+
+    q, k_new, v_new = _qkv(p, cfg, x)
+    pos_b = pos[:, None] if rope_positions is None else rope_positions
+    if cfg.use_rope:
+        q = apply_rope(q, pos_b, theta, cfg.mrope_sections)
+        k_new = apply_rope(k_new, pos_b, theta, cfg.mrope_sections)
+
+    k_cache = rules(_scatter_kv(k_cache, k_new, pos),
+                    ("batch", "cache_seq", "kv_heads", None))
+    v_cache = rules(_scatter_kv(v_cache, v_new, pos),
+                    ("batch", "cache_seq", "kv_heads", None))
+
+    g = H // KV
+    qg = q.reshape(B, 1, KV, g, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg,
+                        k_cache.astype(q.dtype)) / math.sqrt(hd)
+    idx = jnp.arange(S_max)[None, None, None, None, :]
+    m = idx <= pos[:, None, None, None, None]
+    if window is not None:
+        w = jnp.asarray(window)
+        m &= (pos[:, None, None, None, None] - idx < w) | (w <= 0)
+    attn = jax.nn.softmax(
+        jnp.where(m, logits.astype(jnp.float32), _NEG), axis=-1)
+    ctx = jnp.einsum("bkgqs,bskh->bqkgh", attn.astype(v_cache.dtype), v_cache)
+    out = ctx.reshape(B, 1, H * hd).astype(x.dtype) @ p["wo"]
+    return out, (k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_specs(spec: SpecTree, path: str, cfg):
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    spec.param(path + "/wq", (d, H * hd), ("embed", "heads"))
+    spec.param(path + "/wk", (d, H * hd), ("embed", "heads"))
+    spec.param(path + "/wv", (d, H * hd), ("embed", "heads"))
+    spec.param(path + "/wo", (H * hd, d), ("heads", "embed"))
+
+
+def cross_kv(p, cfg, enc_out):
+    B, Se, _ = enc_out.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    k = (enc_out @ p["wk"]).reshape(B, Se, H, hd)
+    v = (enc_out @ p["wv"]).reshape(B, Se, H, hd)
+    return k, v
+
+
+def cross_attn(p, cfg, x, enc_kv, chunk: int = 1024, rules=_ID):
+    """x: (B, Sq, d); enc_kv: (k, v) each (B, Se, H, hd) precomputed."""
+    B, Sq, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    k, v = enc_kv
+    q = (x @ p["wq"]).reshape(B, Sq, H, hd)
+    ctx = chunked_attention(q, k, v, scale=1.0 / math.sqrt(hd),
+                            causal=False, chunk=chunk)
+    return ctx.reshape(B, Sq, H * hd) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+def mla_specs(spec: SpecTree, path: str, cfg):
+    d, H = cfg.d_model, cfg.n_heads
+    nh, rh, vh = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    spec.param(path + "/wq_a", (d, cfg.q_lora_rank), ("embed", None))
+    spec.param(path + "/q_norm", (cfg.q_lora_rank,), (None,), init="ones")
+    spec.param(path + "/wq_b", (cfg.q_lora_rank, H * (nh + rh)),
+               (None, "heads"))
+    spec.param(path + "/wkv_a", (d, cfg.kv_lora_rank + rh), ("embed", None))
+    spec.param(path + "/kv_norm", (cfg.kv_lora_rank,), (None,), init="ones")
+    spec.param(path + "/wk_b", (cfg.kv_lora_rank, H * nh), (None, "heads"))
+    spec.param(path + "/wv_b", (cfg.kv_lora_rank, H * vh), (None, "heads"))
+    spec.param(path + "/wo", (H * vh, d), ("heads", "embed"))
+
+
+def _mla_q(p, cfg, x, positions):
+    B, S, _ = x.shape
+    H, nh, rh = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim
+    ql = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps, False)
+    q = (ql @ p["wq_b"]).reshape(B, S, H, nh + rh)
+    q_nope, q_rope = q[..., :nh], q[..., nh:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(p, cfg, x, positions):
+    kv = x @ p["wkv_a"]
+    c_kv, k_rope = kv[..., :cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps, False)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_train(p, cfg, x, positions, chunk: int = 1024, rules=_ID):
+    """Naive-expansion MLA for train/prefill. Returns (out, (c_kv, k_rope))."""
+    B, S, _ = x.shape
+    H, nh, rh, vh = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_kv, k_rope = _mla_ckv(p, cfg, x, positions)
+
+    k_nope = (c_kv @ p["wk_b"]).reshape(B, S, H, nh)
+    v = (c_kv @ p["wv_b"]).reshape(B, S, H, vh)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, rh))],
+        axis=-1)
+    q = rules(q, ("batch", "seq", "heads", None))
+    k = rules(k, ("batch", "seq", "heads", None))
+    v = rules(v, ("batch", "seq", "heads", None))
+
+    ctx = chunked_attention(q, k, v, scale=1.0 / math.sqrt(nh + rh),
+                            causal=True, chunk=chunk)
+    out = rules(ctx.reshape(B, S, H * vh), ("batch", "seq", "heads")) @ p["wo"]
+    return out, (c_kv, k_rope)
+
+
+def mla_decode(p, cfg, x, pos, cache, rules=_ID):
+    """Absorbed-form decode: attention entirely in compressed (kv_lora) space.
+
+    cache: (c_kv (B, S_max, kv_lora), k_rope (B, S_max, rh)).
+    """
+    B = x.shape[0]
+    H, nh, rh, vh = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    R = cfg.kv_lora_rank
+    c_cache, r_cache = cache
+    S_max = c_cache.shape[1]
+
+    q_nope, q_rope = _mla_q(p, cfg, x, pos[:, None])
+    c_new, r_new = _mla_ckv(p, cfg, x, pos[:, None])
+
+    c_cache = rules(_scatter_kv(c_cache, c_new, pos),
+                    ("batch", "cache_seq", None))
+    r_cache = _scatter_kv(r_cache, r_new, pos)
+
+    # absorb W_k^b into q:  q_eff[h] = q_nope[h] @ W_k^b[h]^T  ∈ R^R
+    wk = p["wk_b"].reshape(R, H, nh)
+    q_eff = jnp.einsum("bqhn,rhn->bqhr", q_nope, wk)        # (B,1,H,R)
+
+    scale = 1.0 / math.sqrt(nh + rh)
+    logits = (jnp.einsum("bqhr,bsr->bhqs", q_eff, c_cache.astype(q_eff.dtype))
+              + jnp.einsum("bqhp,bsp->bhqs", q_rope,
+                           r_cache.astype(q_rope.dtype))) * scale
+    idx = jnp.arange(S_max)[None, None, None, :]
+    attn = jax.nn.softmax(
+        jnp.where(idx <= pos[:, None, None, None],
+                  logits.astype(jnp.float32), _NEG), axis=-1)
+
+    ctx = jnp.einsum("bhqs,bsr->bqhr", attn.astype(c_cache.dtype), c_cache)
+    wv = p["wv_b"].reshape(R, H, vh)
+    o = jnp.einsum("bqhr,rhv->bqhv", ctx.astype(x.dtype), wv)
+    return o.reshape(B, 1, H * vh) @ p["wo"], (c_cache, r_cache)

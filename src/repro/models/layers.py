@@ -1,0 +1,200 @@
+"""Parameter-spec system and basic layers (norm, rope, MLP, embeddings).
+
+Params are nested dicts of arrays. Every leaf is declared through a
+``SpecTree`` so three things derive from one source of truth:
+  * ``init_params``      — materialized random init (reduced/smoke configs),
+  * ``abstract_params``  — ShapeDtypeStructs (dry-run; no allocation),
+  * ``param_axes``       — logical-axis names per dim, consumed by
+                           runtime/sharding.py to build NamedShardings.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "SpecTree", "init_params", "abstract_params", "param_axes",
+    "rms_norm", "layer_norm", "rope_freqs", "apply_rope", "mlp_apply",
+    "mlp_specs", "norm_specs", "DTYPES",
+]
+
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+          "float16": jnp.float16}
+
+
+class SpecTree:
+    """Collects parameter declarations as a nested dict of leaf specs."""
+
+    def __init__(self, dtype: str = "float32"):
+        self.tree: dict[str, Any] = {}
+        self.dtype = dtype
+
+    def param(self, path: str, shape: tuple[int, ...], axes: tuple,
+              init: str = "fan_in", scale: float | None = None):
+        """Declare a leaf at 'a/b/c'. axes has one logical name (or None)
+        per dim. init ∈ {fan_in, zeros, ones, normal}."""
+        assert len(shape) == len(axes), (path, shape, axes)
+        node = self.tree
+        parts = path.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        assert parts[-1] not in node, f"duplicate param {path}"
+        node[parts[-1]] = {"shape": tuple(int(s) for s in shape), "axes": axes,
+                           "init": init, "scale": scale, "dtype": self.dtype,
+                           "__leaf__": True}
+
+    def subtree(self, path: str, other: "SpecTree"):
+        """Mount another SpecTree under a path prefix."""
+        node = self.tree
+        for p in path.split("/"):
+            node = node.setdefault(p, {})
+        node.update(other.tree)
+
+
+def _is_leaf(n) -> bool:
+    return isinstance(n, dict) and n.get("__leaf__", False)
+
+
+def _map_specs(tree, fn):
+    if _is_leaf(tree):
+        return fn(tree)
+    return {k: _map_specs(v, fn) for k, v in tree.items()}
+
+
+def _leaves(tree, prefix=()):
+    if _is_leaf(tree):
+        yield prefix, tree
+        return
+    for k, v in tree.items():
+        yield from _leaves(v, prefix + (k,))
+
+
+def init_params(spec: SpecTree, key) -> dict:
+    """Materialize with deterministic per-leaf keys (order-independent)."""
+    leaves = sorted(_leaves(spec.tree), key=lambda kv: kv[0])
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = {}
+    for (path, leaf), k in zip(leaves, keys):
+        shape, dtype = leaf["shape"], DTYPES[leaf["dtype"]]
+        kind = leaf["init"]
+        if kind == "zeros":
+            arr = jnp.zeros(shape, dtype)
+        elif kind == "ones":
+            arr = jnp.ones(shape, dtype)
+        elif kind == "normal":
+            arr = (jax.random.normal(k, shape, jnp.float32)
+                   * (leaf["scale"] or 0.02)).astype(dtype)
+        else:  # fan_in
+            fan = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = leaf["scale"] or (1.0 / math.sqrt(max(fan, 1)))
+            arr = (jax.random.normal(k, shape, jnp.float32) * std).astype(dtype)
+        node = out
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = arr
+    return out
+
+
+def abstract_params(spec: SpecTree) -> dict:
+    return _map_specs(
+        spec.tree,
+        lambda l: jax.ShapeDtypeStruct(l["shape"], DTYPES[l["dtype"]]))
+
+
+def param_axes(spec: SpecTree) -> dict:
+    return _map_specs(spec.tree, lambda l: l["axes"])
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_specs(spec: SpecTree, path: str, d: int, plus_one: bool):
+    spec.param(path + "/w", (d,), (None,),
+               init="zeros" if plus_one else "ones")
+
+
+def rms_norm(x, w, eps: float, plus_one: bool):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if plus_one else w.astype(jnp.float32)
+    return (x * scale).astype(dt)
+
+
+def layer_norm(x, w, b, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta) -> jnp.ndarray:
+    """theta may be a static float or a traced scalar (per-layer gemma3)."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return jnp.asarray(theta, jnp.float32) ** (-exponents)
+
+
+def apply_rope(x, positions, theta,
+               mrope_sections: tuple[int, int, int] | None = None):
+    """x: (B, S, H, hd); positions: (B, S) or (3, B, S) for M-RoPE.
+
+    M-RoPE (qwen2-vl): the hd/2 frequency pairs are split into (t, h, w)
+    sections; each section rotates by its own position stream. Text-only
+    inputs pass identical streams, reducing to standard RoPE.
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                                   # (hd/2,)
+    if mrope_sections is None:
+        if positions.ndim == 3:
+            positions = positions[0]
+        angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    else:
+        assert positions.ndim == 3, "M-RoPE needs (3, B, S) positions"
+        sec = mrope_sections
+        assert sum(sec) == hd // 2, (sec, hd)
+        parts = []
+        start = 0
+        for i, n in enumerate(sec):
+            f = freqs[start:start + n]
+            parts.append(positions[i][..., None].astype(jnp.float32) * f)
+            start += n
+        angles = jnp.concatenate(parts, axis=-1)                    # (B,S,hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU / plain GELU)
+# ---------------------------------------------------------------------------
+
+def mlp_specs(spec: SpecTree, path: str, d: int, d_ff: int, activation: str):
+    if activation in ("swiglu", "geglu"):
+        spec.param(path + "/w_gate", (d, d_ff), ("embed", "mlp"))
+        spec.param(path + "/w_up", (d, d_ff), ("embed", "mlp"))
+    else:
+        spec.param(path + "/w_up", (d, d_ff), ("embed", "mlp"))
+    spec.param(path + "/w_down", (d_ff, d), ("mlp", "embed"))
+
+
+def mlp_apply(p, x, activation: str):
+    if activation == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif activation == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"], approximate=True) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"], approximate=True)
+    return h @ p["w_down"]

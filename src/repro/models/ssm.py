@@ -1,0 +1,192 @@
+"""Mamba2 (SSD — state-space duality) block: chunked train/prefill scan and
+O(1)-state decode.
+
+Shapes follow the Mamba2 convention: d_inner = expand·d_model, H heads of
+size P = ssm_head_dim, state size N = ssm_state, n_groups = 1 (B/C shared
+across heads). The chunked algorithm (chunk Q):
+
+  intra-chunk (quadratic within Q):
+      Y_intra[i] = Σ_{j≤i} (C_i·B_j) · exp(cum_i − cum_j) · dt_j · x_j
+  chunk states: S_c = Σ_j exp(cum_last − cum_j) · dt_j · B_j ⊗ x_j
+  inter-chunk recurrence (lax.scan over chunks):
+      S←exp(cum_last)·S_prev + S_c;  Y_inter[i] = exp(cum_i) · C_i · S_prev
+
+This mirrors `kernels/ssd` (the TPU Pallas target, validated against the
+pure-jnp math here). Decode keeps (ssm_state (B,H,P,N), conv_state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import SpecTree, rms_norm
+
+__all__ = ["ssm_specs", "mamba_train", "mamba_decode", "ssd_chunked",
+           "conv_dim"]
+
+_ID = lambda x, axes: x
+
+
+def conv_dim(cfg) -> int:
+    """channels that pass through the causal depthwise conv: x ++ B ++ C."""
+    return cfg.d_inner + 2 * cfg.ssm_state          # n_groups = 1
+
+
+def ssm_specs(spec: SpecTree, path: str, cfg):
+    d, di, H, N = cfg.d_model, cfg.d_inner, cfg.n_ssm_heads, cfg.ssm_state
+    spec.param(path + "/wz", (d, di), ("embed", "heads"))
+    spec.param(path + "/wxbc", (d, conv_dim(cfg)), ("embed", "heads"))
+    spec.param(path + "/wdt", (d, H), ("embed", None))
+    spec.param(path + "/dt_bias", (H,), (None,), init="zeros")
+    spec.param(path + "/A_log", (H,), (None,), init="zeros")
+    spec.param(path + "/D", (H,), (None,), init="ones")
+    spec.param(path + "/conv_w", (cfg.conv_width, conv_dim(cfg)),
+               (None, "heads"), init="normal", scale=0.1)
+    spec.param(path + "/conv_b", (conv_dim(cfg),), ("heads",), init="zeros")
+    spec.param(path + "/gate_norm", (di,), ("heads",), init="ones")
+    spec.param(path + "/wo", (di, d), ("heads", "embed"))
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv. xbc: (B, S, Ch); w: (W, Ch)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x, dt, A, B_, C_, chunk: int, unroll: bool = False):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P) values; dt: (B,S,H) post-softplus; A: (H,) negative;
+    B_, C_: (B,S,N). Returns (y: (B,S,H,P), final_state: (B,H,N,P))
+    (no D skip / gate). ``unroll`` unrolls the inter-chunk scan (cost
+    compiles — launch/cost_model.py).
+    """
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+    Q = min(chunk, S)
+    # pad to a chunk multiple: dt=0 steps are exact no-ops (no decay, no
+    # state update, zero output weight), so padding preserves the final state
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+
+    xr = x.reshape(Bb, nc, Q, H, P)
+    dtr = dt.reshape(Bb, nc, Q, H)
+    Br = B_.reshape(Bb, nc, Q, N)
+    Cr = C_.reshape(Bb, nc, Q, N)
+
+    dA = dtr * A[None, None, None, :]                     # (B,nc,Q,H) ≤ 0
+    cum = jnp.cumsum(dA, axis=2)                          # within-chunk cumsum
+
+    # ---- intra-chunk (quadratic in Q) ----
+    # decay(i,j) = exp(cum_i - cum_j) for i ≥ j else 0
+    ii = jnp.arange(Q)[:, None]
+    jj = jnp.arange(Q)[None, :]
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q_i,Q_j,H)
+    decay = jnp.where((ii >= jj)[None, None, :, :, None],
+                      jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cr, Br)            # (B,nc,Q,Q)
+    M = cb[..., None] * decay * dtr[:, :, None, :, :]     # (B,nc,Qi,Qj,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xr)
+
+    # ---- chunk summaries ----
+    last = cum[:, :, -1:, :]                              # (B,nc,1,H)
+    wj = jnp.exp(last - cum) * dtr                        # (B,nc,Q,H)
+    S_c = jnp.einsum("bcqh,bcqn,bcqhp->bchnp", wj, Br, xr)  # (B,nc,H,N,P)
+
+    # ---- inter-chunk recurrence ----
+    def body(S_prev, inp):
+        S_chunk, decay_last = inp                          # (B,H,N,P), (B,H)
+        S_new = S_prev * jnp.exp(decay_last)[:, :, None, None] + S_chunk
+        return S_new, S_prev
+
+    S0 = jnp.zeros((Bb, H, N, P), x.dtype)
+    xs = (S_c.transpose(1, 0, 2, 3, 4), last[:, :, 0, :].transpose(1, 0, 2))
+    S_final, S_prevs = jax.lax.scan(body, S0, xs,
+                                    unroll=True if unroll else 1)  # (nc,...)
+    S_prevs = S_prevs.transpose(1, 0, 2, 3, 4)            # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcqn,bchnp->bcqhp",
+                         Cr, S_prevs) * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(Bb, Sp, H, P)[:, :S]
+    return y, S_final
+
+
+def mamba_train(p, cfg, x, chunk: int | None = None, return_state: bool = False,
+                rules=_ID):
+    """Full-sequence Mamba2 block. x: (B,S,d) -> (y, final_state).
+
+    final_state (when requested) is a dict {"ssm": (B,H,P,N), "conv":
+    (B, W-1, conv_dim)} — exactly the decode-step carry, so prefill can hand
+    off to `mamba_decode`.
+    """
+    B, S, d = x.shape
+    di, H, P, N = cfg.d_inner, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    chunk = chunk or cfg.ssm_chunk
+
+    z = x @ p["wz"]                                        # (B,S,di)
+    xbc_raw = x @ p["wxbc"]
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xs, B_, C_ = jnp.split(xbc, [di, di + N], axis=-1)
+    xs = rules(xs, ("batch", "seq", "heads"))
+    dt = jax.nn.softplus((x @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    xh = xs.reshape(B, S, H, P)
+    y, S_final = ssd_chunked(xh.astype(jnp.float32), dt, A,
+                             B_.astype(jnp.float32), C_.astype(jnp.float32),
+                             chunk, unroll=cfg.unroll_scans)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps, False)
+    out = y @ p["wo"]
+    if not return_state:
+        return out, None
+    W = cfg.conv_width
+    state = {
+        "ssm": S_final.transpose(0, 1, 3, 2).astype(x.dtype),  # (B,H,P,N)
+        "conv": xbc_raw[:, S - (W - 1):, :].astype(x.dtype),
+    }
+    return out, state
+
+
+def mamba_decode(p, cfg, x, state, rules=_ID):
+    """One-token step. x: (B,1,d); state: {"ssm": (B,H,P,N),
+    "conv": (B, W-1, conv_dim)}. Returns (y, new_state)."""
+    B = x.shape[0]
+    di, H, P, N = cfg.d_inner, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    W = cfg.conv_width
+
+    z = x @ p["wz"]
+    xbc_new = (x @ p["wxbc"])[:, 0, :]                     # (B, Ch)
+    conv_in = jnp.concatenate([state["conv"], xbc_new[:, None, :]], axis=1)
+    w = p["conv_w"]
+    out = sum(conv_in[:, i, :] * w[i] for i in range(W)) + p["conv_b"]
+    xbc = jax.nn.silu(out)                                 # (B, Ch)
+    new_conv = conv_in[:, 1:, :]
+
+    xs, B_, C_ = jnp.split(xbc, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(
+        (x[:, 0, :] @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A[None, :])                          # (B,H)
+
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    ssm = state["ssm"].astype(jnp.float32)
+    upd = (dt[:, :, None] * xh)[:, :, :, None] * B_[:, None, None, :].astype(jnp.float32)
+    ssm_new = ssm * dA[:, :, None, None] + upd             # (B,H,P,N)
+    y = jnp.einsum("bhpn,bn->bhp", ssm_new, C_.astype(jnp.float32))
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B, 1, di).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps, False)
+    return y @ p["wo"], {"ssm": ssm_new.astype(state["ssm"].dtype),
+                         "conv": new_conv}

@@ -1,0 +1,835 @@
+"""Model stacks for all assigned families + the unified Model facade.
+
+Every homogeneous run of layers is a ``lax.scan`` over stacked parameters
+(leading "layers" dim), keeping HLO size O(1) in depth — essential for the
+512-device dry-run compiles. Heterogeneous patterns decompose into scans:
+
+  dense/moe/vlm : one scan over L blocks (deepseek: 3 dense + 58 moe scans)
+  gemma3        : one scan with per-layer (window, theta) arrays as scan xs
+  ssm           : one scan over L mamba blocks
+  hybrid zamba2 : outer scan over 13 groups of [5 stacked mamba + one
+                  SHARED attention block (params outside the scan — weight
+                  sharing is zamba2's hallmark)] + a 3-layer mamba tail
+  encdec whisper: encoder scan + decoder scan (self + cross attention)
+
+``rules(x, logical_axes)`` inserts sharding constraints; identity on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import math
+
+from .attention import (_qkv, attn_decode, attn_specs, attn_train,
+                        chunked_attention, cross_attn, cross_attn_specs,
+                        cross_kv, mla_decode, mla_specs, mla_train)
+from .layers import (DTYPES, SpecTree, abstract_params, init_params,
+                     layer_norm, mlp_apply, mlp_specs, norm_specs,
+                     param_axes, rms_norm)
+from .moe import moe_apply, moe_specs
+from .ssm import conv_dim, mamba_decode, mamba_train, ssm_specs
+
+_ID = lambda x, axes: x
+
+
+def _cfg_scan(cfg, body, init, xs):
+    """lax.scan that fully unrolls under cfg.unroll_scans (cost compiles)."""
+    return jax.lax.scan(body, init, xs,
+                        unroll=True if cfg.unroll_scans else 1)
+
+REMAT_POLICIES = {
+    "full": None,                                            # save nothing
+    "dots": "dots_with_no_batch_dims_saveable",
+    "none": "everything_saveable",
+}
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "full":
+        return jax.checkpoint(fn)
+    policy = getattr(jax.checkpoint_policies, REMAT_POLICIES[remat])
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# spec stacking
+# ---------------------------------------------------------------------------
+
+def stack_specs(spec: SpecTree, path: str, n: int, build: Callable[[SpecTree], None]):
+    """Build a one-layer spec and lift every leaf to (n, ...) + 'layers' axis."""
+    sub = SpecTree(spec.dtype)
+    build(sub)
+
+    def lift(node):
+        if isinstance(node, dict) and node.get("__leaf__", False):
+            out = dict(node)
+            out["shape"] = (n,) + node["shape"]
+            out["axes"] = ("layers",) + tuple(node["axes"])
+            return out
+        return {k: lift(v) for k, v in node.items()}
+
+    lifted = lift(sub.tree)
+    host = spec.tree
+    for p in path.split("/"):
+        host = host.setdefault(p, {})
+    host.update(lifted)
+
+
+# ---------------------------------------------------------------------------
+# per-family block bodies
+# ---------------------------------------------------------------------------
+
+def _norm(p, cfg, x):
+    return rms_norm(x, p["w"], cfg.norm_eps, cfg.norm_plus_one)
+
+
+def _dense_block_specs(cfg, moe: bool):
+    def build(s):
+        norm_specs(s, "ln1", cfg.d_model, cfg.norm_plus_one)
+        if cfg.mla:
+            mla_specs(s, "attn", cfg)
+        else:
+            attn_specs(s, "attn", cfg)
+        norm_specs(s, "ln2", cfg.d_model, cfg.norm_plus_one)
+        if moe:
+            moe_specs(s, "moe", cfg)
+        else:
+            mlp_specs(s, "mlp", cfg.d_model, cfg.d_ff, cfg.activation)
+    return build
+
+
+def _dense_block_train(p, cfg, h, positions, window, theta, moe: bool, rules):
+    x = _norm(p["ln1"], cfg, h)
+    if cfg.mla:
+        a, kv = mla_train(p["attn"], cfg, x, positions,
+                          chunk=cfg.attn_chunk, rules=rules)
+    else:
+        a, kv = attn_train(p["attn"], cfg, x, positions, window=window,
+                           theta=theta, chunk=cfg.attn_chunk, rules=rules)
+    h = h + a
+    x = _norm(p["ln2"], cfg, h)
+    if moe:
+        f, aux = moe_apply(p["moe"], cfg, x, rules=rules)
+    else:
+        f, aux = mlp_apply(p["mlp"], x, cfg.activation), jnp.float32(0)
+    h = rules(h + f, ("batch", "seq_sp", None))
+    return h, kv, aux
+
+
+def _dense_block_decode(p, cfg, h, pos, cache, window, theta, moe: bool, rules,
+                        rope_positions=None):
+    x = _norm(p["ln1"], cfg, h)
+    if cfg.mla:
+        a, cache = mla_decode(p["attn"], cfg, x, pos, cache, rules=rules)
+    else:
+        a, cache = attn_decode(p["attn"], cfg, x, pos, cache, window=window,
+                               theta=theta, rope_positions=rope_positions,
+                               rules=rules)
+    h = h + a
+    x = _norm(p["ln2"], cfg, h)
+    if moe:
+        f, _ = moe_apply(p["moe"], cfg, x, rules=rules)
+    else:
+        f = mlp_apply(p["mlp"], x, cfg.activation)
+    return h + f, cache
+
+
+def _layer_pattern(cfg, n_layers: int):
+    """(window, theta) arrays for gemma3-style local:global patterns."""
+    if cfg.global_every <= 0:
+        return None, None
+    is_global = (np.arange(n_layers) % cfg.global_every) == (cfg.global_every - 1)
+    window = np.where(is_global, 0, cfg.window).astype(np.int32)
+    theta = np.where(is_global, 1_000_000.0, cfg.rope_theta).astype(np.float32)
+    return jnp.asarray(window), jnp.asarray(theta)
+
+
+# ---------------------------------------------------------------------------
+# the Model facade
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Model:
+    config: Any
+    spec: SpecTree
+    loss: Callable          # (params, batch, rules=, remat=) -> (loss, metrics)
+    prefill: Callable       # (params, batch, rules=) -> (last_logits, cache)
+    decode: Callable        # (params, batch, rules=) -> (logits, cache)
+    cache_spec: Callable    # (batch_size, s_max) -> (ShapeDtypeStruct tree, axes tree)
+
+    def init(self, key):
+        return init_params(self.spec, key)
+
+    def abstract(self):
+        return abstract_params(self.spec)
+
+    def axes(self):
+        return param_axes(self.spec)
+
+
+def build_model(cfg) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _build_decoder_lm(cfg)
+    if cfg.family == "ssm":
+        return _build_ssm_lm(cfg)
+    if cfg.family == "hybrid":
+        return _build_hybrid_lm(cfg)
+    if cfg.family == "encdec":
+        return _build_encdec(cfg)
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# decoder-only LM (dense / moe / vlm)
+# ---------------------------------------------------------------------------
+
+def _lm_head_specs(spec: SpecTree, cfg):
+    spec.param("embed", (cfg.vocab, cfg.d_model), ("vocab", "embed"),
+               init="normal")
+    norm_specs(spec, "final_norm", cfg.d_model, cfg.norm_plus_one)
+    if not cfg.tie_embeddings:
+        spec.param("head", (cfg.d_model, cfg.vocab), ("embed", "vocab"))
+
+
+def _logits(params, cfg, h, rules):
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = (h @ head).astype(jnp.float32)
+    return rules(logits, ("batch", "seq_sp", "vocab"))
+
+
+def _xent(logits, labels, mask=None):
+    """mean token cross-entropy in f32. labels: (B, S) int32."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return nll.mean(), nll.size
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0), mask.sum()
+
+
+def _ce_from_hidden(params, cfg, h, labels, rules):
+    """Cross-entropy with seq-chunked logits (never materializes the full
+    (B, S, vocab) tensor — decisive for the 256k-vocab archs). The chunk
+    body is checkpointed so backward recomputes its logits."""
+    B, S, _ = h.shape
+    chunk = cfg.xent_chunk
+    if chunk <= 0 or S <= chunk:
+        logits = _logits(params, cfg, h, rules)
+        return _xent(logits, labels)
+
+    pad = (-S) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+    valid = (jnp.arange(S + pad) < S)
+    nc = (S + pad) // chunk
+    hc = h.reshape(B, nc, chunk, -1).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+    vc = valid.reshape(nc, chunk)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        hs, ls, vs = inp
+        logits = _logits(params, cfg, hs, rules)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+        nll = jnp.where(vs[None, :], lse - gold, 0.0)
+        return carry + nll.sum(), None
+
+    total, _ = _cfg_scan(cfg, body, jnp.float32(0), (hc, lc, vc))
+    n = jnp.float32(B * S)
+    return total / n, n
+
+
+def _split_layers(cfg):
+    """deepseek: first `moe_layer_start` layers dense, remainder MoE."""
+    if cfg.n_experts > 0:
+        n_dense = cfg.moe_layer_start
+        return n_dense, cfg.n_layers - n_dense
+    return cfg.n_layers, 0
+
+
+def _build_decoder_lm(cfg):
+    n_dense, n_moe = _split_layers(cfg)
+    spec = SpecTree(cfg.param_dtype)
+    _lm_head_specs(spec, cfg)
+    if n_dense:
+        stack_specs(spec, "blocks", n_dense, _dense_block_specs(cfg, moe=False))
+    if n_moe:
+        stack_specs(spec, "moe_blocks", n_moe, _dense_block_specs(cfg, moe=True))
+    if cfg.mtp:
+        spec.param("mtp/proj", (2 * cfg.d_model, cfg.d_model),
+                   ("embed", "embed2"))
+        norm_specs(spec, "mtp/norm_h", cfg.d_model, cfg.norm_plus_one)
+        norm_specs(spec, "mtp/norm_e", cfg.d_model, cfg.norm_plus_one)
+        _dense_block_specs(cfg, moe=False)(_mtp_sub := SpecTree(cfg.param_dtype))
+        spec.subtree("mtp/block", _mtp_sub)
+
+    wpat, tpat = _layer_pattern(cfg, n_dense)   # moe archs here are uniform
+
+    def embed_input(params, batch, S_expected):
+        """tokens (+ optional patch embeds for vlm) -> (h, positions, text_mask)."""
+        cdt = DTYPES[cfg.compute_dtype]
+        tok_emb = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cdt)
+        if cfg.embed_scale:
+            tok_emb = tok_emb * jnp.sqrt(jnp.float32(cfg.d_model)).astype(cdt)
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            h = jnp.concatenate(
+                [batch["patch_embeds"].astype(cdt), tok_emb], axis=1)
+        else:
+            h = tok_emb
+        B, S, _ = h.shape
+        if "positions" in batch:
+            positions = batch["positions"]
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        return h, positions
+
+    def run_stack(params, h, positions, rules, remat, collect_cache=False):
+        auxes = []
+        caches = {}
+
+        def scan_blocks(name, stacked, moe, wpat_, tpat_):
+            def body(carry, xs):
+                h = carry
+                if wpat_ is not None:
+                    lp, w, th = xs
+                else:
+                    lp, w, th = xs, None, None
+                h, kv, aux = _dense_block_train(
+                    lp, cfg, h, positions, w, th, moe, rules)
+                return h, (kv, aux) if collect_cache else (None, aux)
+
+            body = _maybe_remat(body, remat)
+            xs = (stacked, wpat_, tpat_) if wpat_ is not None else stacked
+            h2, (kv, aux) = _cfg_scan(cfg, body, h, xs)
+            return h2, kv, aux
+
+        if n_dense:
+            h, kv, aux = scan_blocks("blocks", params["blocks"], False, wpat, tpat)
+            auxes.append(aux.sum())
+            if collect_cache:
+                caches["dense"] = kv
+        if n_moe:
+            h, kv, aux = scan_blocks("moe_blocks", params["moe_blocks"], True,
+                                     None, None)
+            auxes.append(aux.sum())
+            if collect_cache:
+                caches["moe"] = kv
+        h = _norm(params["final_norm"], cfg, h)
+        return h, sum(auxes), caches
+
+    def loss(params, batch, rules=_ID, remat="full"):
+        tokens = batch["tokens"]                       # (B, S_text+1)
+        inputs = {**batch, "tokens": tokens[:, :-1]}
+        labels = tokens[:, 1:]
+        h, positions = embed_input(params, inputs, None)
+        h, aux, _ = run_stack(params, h, positions, rules, remat)
+        n_vis = h.shape[1] - labels.shape[1]
+        ce, ntok = _ce_from_hidden(params, cfg, h[:, n_vis:], labels, rules)
+        total = ce + 0.01 * aux
+        metrics = {"ce": ce, "aux": aux, "ntok": ntok}
+        if cfg.mtp:
+            mtp_loss = _mtp_loss(params, cfg, h[:, n_vis:], tokens, rules)
+            total = total + 0.3 * mtp_loss
+            metrics["mtp"] = mtp_loss
+        return total, metrics
+
+    def _mtp_loss(params, cfg_, h, tokens, rules):
+        # h at position i encodes prefix ..t_i; combine with emb(t_{i+1})
+        # to predict t_{i+2} (one-depth MTP, DeepSeek-V3 style).
+        cdt = DTYPES[cfg_.compute_dtype]
+        emb_next = jnp.take(params["embed"], tokens[:, 1:-1], axis=0).astype(cdt)
+        hh = _norm(params["mtp"]["norm_h"], cfg_, h[:, :-1])
+        ee = _norm(params["mtp"]["norm_e"], cfg_, emb_next)
+        hm = jnp.concatenate([hh, ee], axis=-1) @ params["mtp"]["proj"]
+        B, S, _ = hm.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        hm = _dense_block_train(
+            params["mtp"]["block"], cfg_, hm, positions, None, None, False,
+            rules)[0]
+        mtp, _ = _ce_from_hidden(params, cfg_, hm, tokens[:, 2:], rules)
+        return mtp
+
+    def prefill(params, batch, rules=_ID):
+        h, positions = embed_input(params, batch, None)
+        h, _, caches = run_stack(params, h, positions, rules, "none",
+                                 collect_cache=True)
+        logits = _logits(params, cfg, h[:, -1:], rules)[:, 0]
+        return logits, caches
+
+    def decode(params, batch, rules=_ID):
+        cache, pos = batch["cache"], batch["pos"]
+        rope_positions = batch.get("positions")     # (3, B, 1) for M-RoPE
+        cdt = DTYPES[cfg.compute_dtype]
+        h = jnp.take(params["embed"], batch["token"], axis=0).astype(cdt)
+        if cfg.embed_scale:
+            h = h * jnp.sqrt(jnp.float32(cfg.d_model)).astype(cdt)
+
+        def scan_blocks(stacked, layer_cache, moe, wpat_, tpat_):
+            def body(h, xs):
+                if wpat_ is not None:
+                    lp, lc, w, th = xs
+                else:
+                    lp, lc = xs[0], xs[1]
+                    w, th = None, None
+                h, lc = _dense_block_decode(lp, cfg, h, pos, lc, w, th, moe,
+                                            rules, rope_positions=rope_positions)
+                return h, lc
+
+            xs = ((stacked, layer_cache, wpat_, tpat_) if wpat_ is not None
+                  else (stacked, layer_cache))
+            return _cfg_scan(cfg, body, h, xs)
+
+        new_cache = {}
+        if n_dense:
+            h, kv = scan_blocks(params["blocks"], cache["dense"], False,
+                                wpat, tpat)
+            new_cache["dense"] = kv
+        if n_moe:
+            h, kv = scan_blocks(params["moe_blocks"], cache["moe"], True,
+                                None, None)
+            new_cache["moe"] = kv
+        h = _norm(params["final_norm"], cfg, h)
+        logits = _logits(params, cfg, h, rules)[:, 0]
+        return logits, new_cache
+
+    def cache_spec(B, s_max):
+        cdt = DTYPES[cfg.compute_dtype]
+        def kv(n):
+            if cfg.mla:
+                c = jax.ShapeDtypeStruct((n, B, s_max, cfg.kv_lora_rank), cdt)
+                r = jax.ShapeDtypeStruct((n, B, s_max, cfg.rope_head_dim), cdt)
+                return ((c, r),
+                        (("layers", "batch", "cache_seq", None),
+                         ("layers", "batch", "cache_seq", None)))
+            k = jax.ShapeDtypeStruct(
+                (n, B, s_max, cfg.n_kv_heads, cfg.head_dim), cdt)
+            ax = ("layers", "batch", "cache_seq", "kv_heads", None)
+            return (k, k), (ax, ax)
+
+        tree, axes = {}, {}
+        if n_dense:
+            tree["dense"], axes["dense"] = kv(n_dense)
+        if n_moe:
+            tree["moe"], axes["moe"] = kv(n_moe)
+        return tree, axes
+
+    return Model(cfg, spec, loss, prefill, decode, cache_spec)
+
+
+# ---------------------------------------------------------------------------
+# attention-free SSM LM (mamba2)
+# ---------------------------------------------------------------------------
+
+def _ssm_block_specs(cfg):
+    def build(s):
+        norm_specs(s, "ln", cfg.d_model, cfg.norm_plus_one)
+        ssm_specs(s, "mixer", cfg)
+    return build
+
+
+def _build_ssm_lm(cfg):
+    spec = SpecTree(cfg.param_dtype)
+    _lm_head_specs(spec, cfg)
+    stack_specs(spec, "blocks", cfg.n_layers, _ssm_block_specs(cfg))
+
+    def run(params, h, rules, remat):
+        def body(h, lp):
+            y, _ = mamba_train(lp["mixer"], cfg, _norm(lp["ln"], cfg, h),
+                               rules=rules)
+            return rules(h + y, ("batch", "seq_sp", None)), None
+        body = _maybe_remat(body, remat)
+        h, _ = _cfg_scan(cfg, body, h, params["blocks"])
+        return _norm(params["final_norm"], cfg, h)
+
+    def loss(params, batch, rules=_ID, remat="full"):
+        tokens = batch["tokens"]
+        cdt = DTYPES[cfg.compute_dtype]
+        h = jnp.take(params["embed"], tokens[:, :-1], axis=0).astype(cdt)
+        h = run(params, h, rules, remat)
+        ce, ntok = _ce_from_hidden(params, cfg, h, tokens[:, 1:], rules)
+        return ce, {"ce": ce, "ntok": ntok}
+
+    def prefill(params, batch, rules=_ID):
+        """Chunked-scan prefill; the 'cache' is the final recurrent state."""
+        tokens = batch["tokens"]
+        cdt = DTYPES[cfg.compute_dtype]
+        h = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+
+        def body(h, lp):
+            y, st = mamba_train(lp["mixer"], cfg, _norm(lp["ln"], cfg, h),
+                                return_state=True, rules=rules)
+            return rules(h + y, ("batch", "seq_sp", None)), (st["ssm"],
+                                                             st["conv"])
+
+        h, (ssm, conv) = _cfg_scan(cfg, body, h, params["blocks"])
+        h = _norm(params["final_norm"], cfg, h)
+        logits = _logits(params, cfg, h[:, -1:], rules)[:, 0]
+        return logits, {"ssm": ssm, "conv": conv}
+
+    def decode(params, batch, rules=_ID):
+        cache, pos = batch["cache"], batch["pos"]
+        cdt = DTYPES[cfg.compute_dtype]
+        h = jnp.take(params["embed"], batch["token"], axis=0).astype(cdt)
+
+        def body(h, xs):
+            lp, lssm, lconv = xs
+            y, st = mamba_decode(lp["mixer"], cfg, _norm(lp["ln"], cfg, h),
+                                 {"ssm": lssm, "conv": lconv}, rules=rules)
+            return h + y, (st["ssm"], st["conv"])
+
+        h, (ssm, conv) = _cfg_scan(cfg, 
+            body, h, (params["blocks"], cache["ssm"], cache["conv"]))
+        h = _norm(params["final_norm"], cfg, h)
+        logits = _logits(params, cfg, h, rules)[:, 0]
+        return logits, {"ssm": ssm, "conv": conv}
+
+    def cache_spec(B, s_max):
+        cdt = DTYPES[cfg.compute_dtype]
+        L, H, P, N = cfg.n_layers, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        tree = {
+            "ssm": jax.ShapeDtypeStruct((L, B, H, P, N), cdt),
+            "conv": jax.ShapeDtypeStruct((L, B, cfg.conv_width - 1,
+                                          conv_dim(cfg)), cdt),
+        }
+        axes = {
+            "ssm": ("layers", "batch", "heads", None, None),
+            "conv": ("layers", "batch", None, "heads"),
+        }
+        return tree, axes
+
+    return Model(cfg, spec, loss, prefill, decode, cache_spec)
+
+
+# ---------------------------------------------------------------------------
+# hybrid (zamba2): groups of mamba blocks + one shared attention block
+# ---------------------------------------------------------------------------
+
+def _hybrid_layout(cfg):
+    """81 layers = n_groups · (hybrid_every-1 mamba + 1 shared attn) + tail."""
+    per = cfg.hybrid_every                      # e.g. 6 ⇒ 5 mamba + 1 attn
+    n_groups = cfg.n_layers // per
+    tail = cfg.n_layers - n_groups * per
+    return n_groups, per - 1, tail
+
+
+def _build_hybrid_lm(cfg):
+    n_groups, mamba_per, tail = _hybrid_layout(cfg)
+    spec = SpecTree(cfg.param_dtype)
+    _lm_head_specs(spec, cfg)
+
+    def group_build(s):
+        stack_specs(s, "mamba", mamba_per, _ssm_block_specs(cfg))
+    # groups: (n_groups, mamba_per, ...) double-stacked mamba params
+    stack_specs(spec, "groups", n_groups, group_build)
+    # ONE shared attention block (zamba2 weight sharing)
+    shared = SpecTree(cfg.param_dtype)
+    _dense_block_specs(cfg, moe=False)(shared)
+    spec.subtree("shared_attn", shared)
+    if tail:
+        stack_specs(spec, "tail", tail, _ssm_block_specs(cfg))
+
+    def mamba_scan(stacked, h, rules, remat):
+        def body(h, lp):
+            y, _ = mamba_train(lp["mixer"], cfg, _norm(lp["ln"], cfg, h),
+                               rules=rules)
+            return rules(h + y, ("batch", "seq_sp", None)), None
+        body = _maybe_remat(body, remat)
+        h, _ = _cfg_scan(cfg, body, h, stacked)
+        return h
+
+    def run(params, h, positions, rules, remat, collect=False):
+        kvs = None
+
+        def group_body(h, gp):
+            h = mamba_scan(gp["mamba"], h, rules, remat)
+            h, kv, _ = _dense_block_train(
+                params["shared_attn"], cfg, h, positions, None, None, False,
+                rules)
+            return h, kv if collect else None
+
+        h, kvs = _cfg_scan(cfg, group_body, h, params["groups"])
+        if tail:
+            h = mamba_scan(params["tail"], h, rules, remat)
+        return _norm(params["final_norm"], cfg, h), kvs
+
+    def loss(params, batch, rules=_ID, remat="full"):
+        tokens = batch["tokens"]
+        cdt = DTYPES[cfg.compute_dtype]
+        h = jnp.take(params["embed"], tokens[:, :-1], axis=0).astype(cdt)
+        B, S, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        h, _ = run(params, h, positions, rules, remat)
+        ce, ntok = _ce_from_hidden(params, cfg, h, tokens[:, 1:], rules)
+        return ce, {"ce": ce, "ntok": ntok}
+
+    def mamba_scan_state(stacked, h, rules):
+        def body(h, lp):
+            y, st = mamba_train(lp["mixer"], cfg, _norm(lp["ln"], cfg, h),
+                                return_state=True, rules=rules)
+            return rules(h + y, ("batch", "seq_sp", None)), (st["ssm"],
+                                                             st["conv"])
+        return _cfg_scan(cfg, body, h, stacked)
+
+    def prefill(params, batch, rules=_ID):
+        tokens = batch["tokens"]
+        cdt = DTYPES[cfg.compute_dtype]
+        h = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+        B, S, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        def group_body(h, gp):
+            h, (ssm, conv) = mamba_scan_state(gp["mamba"], h, rules)
+            h, kv, _ = _dense_block_train(
+                params["shared_attn"], cfg, h, positions, None, None, False,
+                rules)
+            return h, (ssm, conv, kv)
+
+        h, (g_ssm, g_conv, g_kv) = _cfg_scan(cfg, group_body, h,
+                                                params["groups"])
+        new = {"g_ssm": g_ssm, "g_conv": g_conv,
+               "k": g_kv[0], "v": g_kv[1]}
+        if tail:
+            h, (tssm, tconv) = mamba_scan_state(params["tail"], h, rules)
+            new["t_ssm"], new["t_conv"] = tssm, tconv
+        h = _norm(params["final_norm"], cfg, h)
+        logits = _logits(params, cfg, h[:, -1:], rules)[:, 0]
+        return logits, new
+
+    def decode(params, batch, rules=_ID):
+        cache, pos = batch["cache"], batch["pos"]
+        cdt = DTYPES[cfg.compute_dtype]
+        h = jnp.take(params["embed"], batch["token"], axis=0).astype(cdt)
+
+        def mamba_step(h, xs):
+            lp, lssm, lconv = xs
+            y, st = mamba_decode(lp["mixer"], cfg, _norm(lp["ln"], cfg, h),
+                                 {"ssm": lssm, "conv": lconv}, rules=rules)
+            return h + y, (st["ssm"], st["conv"])
+
+        def group_body(h, xs):
+            gp, gssm, gconv, gkv = xs
+            h, (ssm, conv) = _cfg_scan(cfg, mamba_step, h,
+                                          (gp["mamba"], gssm, gconv))
+            h, kv = _dense_block_decode(
+                params["shared_attn"], cfg, h, pos, gkv, None, None, False,
+                rules)
+            return h, (ssm, conv, kv)
+
+        h, (g_ssm, g_conv, g_kv) = _cfg_scan(cfg, 
+            group_body, h,
+            (params["groups"], cache["g_ssm"], cache["g_conv"],
+             (cache["k"], cache["v"])))
+        new = {"g_ssm": g_ssm, "g_conv": g_conv,
+               "k": g_kv[0], "v": g_kv[1]}
+        if tail:
+            h, (tssm, tconv) = _cfg_scan(cfg, 
+                mamba_step, h,
+                (params["tail"], cache["t_ssm"], cache["t_conv"]))
+            new["t_ssm"], new["t_conv"] = tssm, tconv
+        h = _norm(params["final_norm"], cfg, h)
+        logits = _logits(params, cfg, h, rules)[:, 0]
+        return logits, new
+
+    def cache_spec(B, s_max):
+        cdt = DTYPES[cfg.compute_dtype]
+        H, P, N = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        G, M = n_groups, mamba_per
+        tree = {
+            "g_ssm": jax.ShapeDtypeStruct((G, M, B, H, P, N), cdt),
+            "g_conv": jax.ShapeDtypeStruct((G, M, B, cfg.conv_width - 1,
+                                            conv_dim(cfg)), cdt),
+            "k": jax.ShapeDtypeStruct(
+                (G, B, s_max, cfg.n_kv_heads, cfg.head_dim), cdt),
+            "v": jax.ShapeDtypeStruct(
+                (G, B, s_max, cfg.n_kv_heads, cfg.head_dim), cdt),
+        }
+        axes = {
+            "g_ssm": ("layers", None, "batch", "heads", None, None),
+            "g_conv": ("layers", None, "batch", None, "heads"),
+            "k": ("layers", "batch", "cache_seq", "kv_heads", None),
+            "v": ("layers", "batch", "cache_seq", "kv_heads", None),
+        }
+        if tail:
+            tree["t_ssm"] = jax.ShapeDtypeStruct((tail, B, H, P, N), cdt)
+            tree["t_conv"] = jax.ShapeDtypeStruct(
+                (tail, B, cfg.conv_width - 1, conv_dim(cfg)), cdt)
+            axes["t_ssm"] = ("layers", "batch", "heads", None, None)
+            axes["t_conv"] = ("layers", "batch", None, "heads")
+        return tree, axes
+
+    return Model(cfg, spec, loss, prefill, decode, cache_spec)
+
+
+# ---------------------------------------------------------------------------
+# enc-dec (whisper): conv frontend is a STUB — input_specs provide frame
+# embeddings (B, enc_len, d); sinusoidal positions on the encoder, learned
+# positional table on the decoder.
+# ---------------------------------------------------------------------------
+
+def _sinusoid(S, d):
+    pos = np.arange(S)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / (10_000 ** (2 * i / d))
+    out = np.concatenate([np.sin(ang), np.cos(ang)], axis=1)
+    return jnp.asarray(out, jnp.float32)
+
+
+def _ln(p, cfg, x):
+    return layer_norm(x, p["w"], p["b"], cfg.norm_eps)
+
+
+def _ln_specs(s, path, d):
+    s.param(path + "/w", (d,), (None,), init="ones")
+    s.param(path + "/b", (d,), (None,), init="zeros")
+
+
+def _build_encdec(cfg):
+    spec = SpecTree(cfg.param_dtype)
+    spec.param("embed", (cfg.vocab, cfg.d_model), ("vocab", "embed"),
+               init="normal")
+    spec.param("pos_embed", (cfg.max_positions, cfg.d_model),
+               (None, "embed"), init="normal")
+    _ln_specs(spec, "enc_final_ln", cfg.d_model)
+    _ln_specs(spec, "dec_final_ln", cfg.d_model)
+
+    def enc_build(s):
+        _ln_specs(s, "ln1", cfg.d_model)
+        attn_specs(s, "attn", cfg)
+        _ln_specs(s, "ln2", cfg.d_model)
+        mlp_specs(s, "mlp", cfg.d_model, cfg.d_ff, "gelu")
+
+    def dec_build(s):
+        _ln_specs(s, "ln1", cfg.d_model)
+        attn_specs(s, "attn", cfg)
+        _ln_specs(s, "ln2", cfg.d_model)
+        cross_attn_specs(s, "xattn", cfg)
+        _ln_specs(s, "ln3", cfg.d_model)
+        mlp_specs(s, "mlp", cfg.d_model, cfg.d_ff, "gelu")
+
+    stack_specs(spec, "enc", cfg.n_enc_layers, enc_build)
+    stack_specs(spec, "dec", cfg.n_layers, dec_build)
+
+    def encode(params, enc_embeds, rules, remat):
+        cdt = DTYPES[cfg.compute_dtype]
+        Se = enc_embeds.shape[1]
+        h = enc_embeds.astype(cdt) + _sinusoid(Se, cfg.d_model).astype(cdt)
+
+        def body(h, lp):
+            # whisper encoder: bidirectional self-attention, no RoPE
+            x = _ln(lp["ln1"], cfg, h)
+            q, k, v = _qkv(lp["attn"], cfg, x)
+            ctx = chunked_attention(q, k, v,
+                                    scale=1.0 / math.sqrt(cfg.head_dim),
+                                    causal=False, chunk=cfg.attn_chunk)
+            B, S, _ = x.shape
+            a = ctx.reshape(B, S, cfg.n_heads * cfg.head_dim) @ lp["attn"]["wo"]
+            h = h + a
+            f = mlp_apply(lp["mlp"], _ln(lp["ln2"], cfg, h), "gelu")
+            return rules(h + f, ("batch", "seq_sp", None)), None
+
+        body = _maybe_remat(body, remat)
+        h, _ = _cfg_scan(cfg, body, h, params["enc"])
+        return _ln(params["enc_final_ln"], cfg, h)
+
+    def dec_block_train(lp, h, enc_out, positions, rules):
+        a, kv = attn_train(lp["attn"], cfg, _ln(lp["ln1"], cfg, h), positions,
+                           chunk=cfg.attn_chunk, rules=rules)
+        h = h + a
+        ckv = cross_kv(lp["xattn"], cfg, enc_out)
+        h = h + cross_attn(lp["xattn"], cfg, _ln(lp["ln2"], cfg, h), ckv,
+                           chunk=cfg.attn_chunk, rules=rules)
+        f = mlp_apply(lp["mlp"], _ln(lp["ln3"], cfg, h), "gelu")
+        return rules(h + f, ("batch", "seq_sp", None)), kv, ckv
+
+    def loss(params, batch, rules=_ID, remat="full"):
+        tokens = batch["tokens"]
+        cdt = DTYPES[cfg.compute_dtype]
+        enc_out = encode(params, batch["enc_embeds"], rules, remat)
+        inp = tokens[:, :-1]
+        B, S = inp.shape
+        h = (jnp.take(params["embed"], inp, axis=0)
+             + params["pos_embed"][None, :S]).astype(cdt)
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        def body(h, lp):
+            h, _, _ = dec_block_train(lp, h, enc_out, positions, rules)
+            return h, None
+
+        body = _maybe_remat(body, remat)
+        h, _ = _cfg_scan(cfg, body, h, params["dec"])
+        h = _ln(params["dec_final_ln"], cfg, h)
+        ce, ntok = _ce_from_hidden(params, cfg, h, tokens[:, 1:], rules)
+        return ce, {"ce": ce, "ntok": ntok}
+
+    def prefill(params, batch, rules=_ID):
+        tokens = batch["tokens"]
+        cdt = DTYPES[cfg.compute_dtype]
+        enc_out = encode(params, batch["enc_embeds"], rules, "none")
+        B, S = tokens.shape
+        h = (jnp.take(params["embed"], tokens, axis=0)
+             + params["pos_embed"][None, :S]).astype(cdt)
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        def body(h, lp):
+            h, kv, ckv = dec_block_train(lp, h, enc_out, positions, rules)
+            return h, (kv, ckv)
+
+        h, (kv, ckv) = _cfg_scan(cfg, body, h, params["dec"])
+        h = _ln(params["dec_final_ln"], cfg, h)
+        logits = (h[:, -1] @ params["embed"].T).astype(jnp.float32)
+        return logits, {"k": kv[0], "v": kv[1], "ck": ckv[0], "cv": ckv[1]}
+
+    def decode(params, batch, rules=_ID):
+        cache, pos = batch["cache"], batch["pos"]
+        cdt = DTYPES[cfg.compute_dtype]
+        tok = batch["token"]
+        B = tok.shape[0]
+        pe = jnp.take(params["pos_embed"], pos, axis=0)[:, None, :]
+        h = (jnp.take(params["embed"], tok, axis=0) + pe).astype(cdt)
+
+        def body(h, xs):
+            lp, lk, lv, lck, lcv = xs
+            a, kv = attn_decode(lp["attn"], cfg, _ln(lp["ln1"], cfg, h), pos,
+                                (lk, lv), rules=rules)
+            h = h + a
+            h = h + cross_attn(lp["xattn"], cfg, _ln(lp["ln2"], cfg, h),
+                               (lck, lcv), rules=rules)
+            f = mlp_apply(lp["mlp"], _ln(lp["ln3"], cfg, h), "gelu")
+            return h + f, kv
+
+        h, kv = _cfg_scan(cfg, 
+            body, h, (params["dec"], cache["k"], cache["v"],
+                      cache["ck"], cache["cv"]))
+        h = _ln(params["dec_final_ln"], cfg, h)
+        logits = (h[:, 0] @ params["embed"].T).astype(jnp.float32)
+        return logits, {"k": kv[0], "v": kv[1],
+                        "ck": cache["ck"], "cv": cache["cv"]}
+
+    def cache_spec(B, s_max):
+        cdt = DTYPES[cfg.compute_dtype]
+        L, H, hd = cfg.n_layers, cfg.n_heads, cfg.head_dim
+        Se = cfg.enc_len
+        tree = {
+            "k": jax.ShapeDtypeStruct((L, B, s_max, cfg.n_kv_heads, hd), cdt),
+            "v": jax.ShapeDtypeStruct((L, B, s_max, cfg.n_kv_heads, hd), cdt),
+            "ck": jax.ShapeDtypeStruct((L, B, Se, H, hd), cdt),
+            "cv": jax.ShapeDtypeStruct((L, B, Se, H, hd), cdt),
+        }
+        ax = ("layers", "batch", "cache_seq", "kv_heads", None)
+        axes = {"k": ax, "v": ax,
+                "ck": ("layers", "batch", None, "heads", None),
+                "cv": ("layers", "batch", None, "heads", None)}
+        return tree, axes
+
+    return Model(cfg, spec, loss, prefill, decode, cache_spec)

@@ -1,0 +1,7 @@
+"""Optimizer substrate: AdamW, LR schedules, gradient compression."""
+from .adamw import AdamW, OptState
+from .schedule import cosine_schedule, linear_warmup_cosine
+from .compression import topk_compress_with_feedback
+
+__all__ = ["AdamW", "OptState", "cosine_schedule", "linear_warmup_cosine",
+           "topk_compress_with_feedback"]

@@ -1,0 +1,81 @@
+"""AdamW in plain JAX, dtype-policy aware.
+
+Moments are kept in f32 regardless of the parameter dtype (bf16 params at
+the giant dry-run scale still get f32 moments — the standard mixed-precision
+recipe). State shards exactly like the parameters (same logical axes), so
+the Rules.tree_shardings of params applies verbatim to (m, v).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "OptState"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptState:
+    step: jnp.ndarray            # () int32
+    m: Any                       # f32 tree, same structure as params
+    v: Any
+
+
+jax.tree_util.register_dataclass(
+    OptState, data_fields=["step", "m", "v"], meta_fields=[])
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class AdamW:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+
+    def init(self, params) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        m=jax.tree.map(zeros, params),
+                        v=jax.tree.map(zeros, params))
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def update(self, grads, state: OptState, params):
+        step = state.step + 1
+        if self.grad_clip is not None:
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-9))
+        else:
+            gnorm = jnp.float32(0)
+            scale = jnp.float32(1)
+
+        lr = jnp.asarray(self._lr(step), jnp.float32)
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * g * g
+            mhat = m / b1c
+            vhat = v / b2c
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * delta
+            return new_p.astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, OptState(step=step, m=new_m, v=new_v), gnorm

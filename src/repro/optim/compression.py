@@ -1,0 +1,43 @@
+"""Gradient compression: top-k sparsification with error feedback.
+
+At 1000+-node scale the DP all-reduce of dense grads dominates the
+collective roofline term; top-k + error feedback (Stich et al.) keeps
+convergence while shrinking the reduced payload by ~1/ratio. The compressed
+tensor is materialized densely (zeros off the top-k support) so the same
+psum path applies — on real hardware one would pair this with a sparse
+collective; the *numerics* (what the optimizer sees) are exact either way,
+which is what the integration test checks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["topk_compress_with_feedback"]
+
+
+def _compress_leaf(g, err, ratio: float):
+    flat = (g.astype(jnp.float32) + err).reshape(-1)
+    k = max(1, int(flat.size * ratio))
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    kept = jnp.zeros_like(flat).at[idx].set(flat[idx])
+    new_err = flat - kept
+    return kept.reshape(g.shape).astype(g.dtype), new_err.reshape(g.shape)
+
+
+def topk_compress_with_feedback(grads, err_state, ratio: float = 0.01):
+    """Returns (compressed_grads, new_error_state).
+
+    err_state: f32 tree like grads (init zeros). The dropped mass is carried
+    into the next step (error feedback), so no gradient signal is lost.
+    """
+    if err_state is None:
+        err_state = jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    out = jax.tree.map(lambda g, e: _compress_leaf(g, e, ratio),
+                       grads, err_state)
+    comp = jax.tree.map(lambda o: o[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda o: o[1], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return comp, err

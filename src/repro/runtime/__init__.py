@@ -1,0 +1,8 @@
+"""Distributed runtime: sharding rules, train/serve steps, fault handling."""
+from .sharding import PRESETS, Rules, make_rules
+from .train_step import TrainState, init_train_state, make_train_step
+from .serve_step import greedy_generate, make_decode_step, make_prefill_step
+
+__all__ = ["PRESETS", "Rules", "make_rules",
+           "TrainState", "init_train_state", "make_train_step",
+           "greedy_generate", "make_decode_step", "make_prefill_step"]

@@ -1,0 +1,119 @@
+"""Fault-tolerance machinery: failure injection, detection, restart policy,
+straggler tracking.
+
+On real hardware, failures surface as collective timeouts / ICI errors; here
+the FailureInjector models them as a seeded random process so the restart
+logic is exercised deterministically in tests. The TrainSupervisor owns the
+loop: step → (maybe) failure → restore-from-checkpoint → continue, counting
+lost steps. StragglerTracker implements the per-step detection that feeds
+the ESDP dispatcher (repro/sched): slices whose observed rate drops are
+learned to be slow and routed around — the paper's fluctuating-service-rate
+premise, closed-loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+__all__ = ["FailureInjector", "StragglerTracker", "TrainSupervisor"]
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Bernoulli(p) node failure per step + optional deterministic schedule.
+
+    A scheduled failure fires ONCE — node failures are transient; replaying
+    through the same step after restore must not re-kill the job (otherwise
+    recovery live-locks — caught by test_supervisor_restart_exact).
+    """
+    p_fail: float = 0.0
+    seed: int = 0
+    scheduled: tuple[int, ...] = ()
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self._fired: set[int] = set()
+
+    def check(self, step: int) -> bool:
+        if step in self.scheduled and step not in self._fired:
+            self._fired.add(step)
+            return True
+        return self._rng.random() < self.p_fail
+
+
+@dataclasses.dataclass
+class StragglerTracker:
+    """EMA of per-step wall time; flags steps slower than k× the EMA."""
+    alpha: float = 0.1
+    k: float = 2.0
+    _ema: Optional[float] = None
+    slow_steps: int = 0
+
+    def observe(self, dt: float) -> bool:
+        if self._ema is None:
+            self._ema = dt
+            return False
+        slow = dt > self.k * self._ema
+        self._ema = (1 - self.alpha) * self._ema + self.alpha * dt
+        self.slow_steps += int(slow)
+        return slow
+
+    @property
+    def rate_estimate(self) -> float:
+        return 1.0 / self._ema if self._ema else 0.0
+
+
+class TrainSupervisor:
+    """Checkpoint/restart loop around a jitted step function.
+
+    step_fn(state, batch) -> (state, metrics); batches come from a
+    restart-exact iterator (data/pipeline.py), so recovery replays the
+    exact stream from the restored step.
+    """
+
+    def __init__(self, step_fn: Callable, ckpt, injector: FailureInjector,
+                 save_every: int = 50, async_save: bool = True):
+        self.step_fn = step_fn
+        self.ckpt = ckpt
+        self.injector = injector
+        self.save_every = save_every
+        self.async_save = async_save
+        self.straggler = StragglerTracker()
+        self.restarts = 0
+        self.lost_steps = 0
+
+    def run(self, state, make_iterator, total_steps: int, start_step: int = 0,
+            on_metrics: Optional[Callable] = None):
+        step = start_step
+        it = make_iterator(step)
+        while step < total_steps:
+            t0 = time.time()
+            if self.injector.check(step):
+                # simulate node loss: restore latest checkpoint, rebuild
+                # the data iterator at the restored step (restart-exact)
+                self.restarts += 1
+                restored = self.ckpt.latest_step()
+                if restored is None:
+                    restored = start_step
+                    state_r = state     # no checkpoint yet: lose nothing but time
+                else:
+                    state_r, restored = self.ckpt.restore(like=state,
+                                                          step=restored)
+                self.lost_steps += max(step - restored, 0)
+                step = restored
+                it = make_iterator(step)
+                state = state_r
+                continue
+            _, batch = next(it)
+            state, metrics = self.step_fn(state, batch)
+            self.straggler.observe(time.time() - t0)
+            if on_metrics is not None:
+                on_metrics(step, metrics)
+            step += 1
+            if step % self.save_every == 0:
+                self.ckpt.save(step, state, async_=self.async_save)
+        self.ckpt.wait()
+        return state, step

@@ -1,0 +1,68 @@
+"""Serving steps: batched prefill and single-token decode over a KV cache.
+
+The decode step is exactly what ``decode_32k`` / ``long_500k`` lower in the
+dry-run: one new token against a seq_len-sized cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["make_prefill_step", "make_decode_step", "greedy_generate"]
+
+
+def make_prefill_step(model, rules=None):
+    rules = rules if rules is not None else (lambda x, a: x)
+
+    def prefill(params, batch):
+        return model.prefill(params, batch, rules=rules)
+
+    return prefill
+
+
+def make_decode_step(model, rules=None):
+    rules = rules if rules is not None else (lambda x, a: x)
+
+    def decode(params, batch):
+        logits, cache = model.decode(params, batch, rules=rules)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, cache
+
+    return decode
+
+
+def greedy_generate(model, params, batch, steps: int, s_max: int, rules=None):
+    """Prefill then greedy-decode ``steps`` tokens (CPU-scale examples).
+
+    batch["tokens"]: (B, S0). Caches are padded to s_max before decoding.
+    """
+    rules = rules if rules is not None else (lambda x, a: x)
+    B, S0 = batch["tokens"].shape
+    logits, cache = model.prefill(params, batch, rules=rules)
+
+    _, axes = model.cache_spec(B, s_max)
+
+    def pad(leaf, ax):
+        if ax is None or "cache_seq" not in ax:
+            return leaf
+        i = ax.index("cache_seq")
+        pads = [(0, 0)] * leaf.ndim
+        pads[i] = (0, s_max - leaf.shape[i])
+        return jnp.pad(leaf, pads)
+
+    cache = jax.tree.map(pad, cache, axes)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    out = [tok]
+    pos0 = S0 + (model.config.n_vision_tokens
+                 if model.config.family == "vlm" else 0)
+
+    decode = jax.jit(lambda p, b: model.decode(p, b, rules=rules))
+    for i in range(steps - 1):
+        dec_batch = {"token": tok, "pos": jnp.full((B,), pos0 + i, jnp.int32),
+                     "cache": cache}
+        if model.config.family == "vlm":
+            dec_batch["positions"] = jnp.full((3, B, 1), pos0 + i, jnp.int32)
+        logits, cache = decode(params, dec_batch)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,111 @@
+"""The jittable train step: loss → grad → AdamW, with remat policy,
+microbatch gradient accumulation, and optional gradient compression.
+
+Everything is expressed in global-array pjit style: the step function is
+pure; shardings are applied by the caller (launch/train.py, launch/dryrun.py)
+through in_shardings/out_shardings built from Rules.
+
+Distributed-optimization levers (each a §Perf knob):
+  * remat ∈ {full, dots, none}            — recompute vs HBM
+  * microbatches > 1                      — accumulate grads in f32; on real
+    hardware the per-microbatch reduce overlaps the next microbatch compute
+  * compress_ratio < 1                    — top-k grad compression + error
+    feedback carried in TrainState
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..optim import AdamW, OptState, topk_compress_with_feedback
+
+__all__ = ["TrainState", "make_train_step", "init_train_state"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainState:
+    params: Any
+    opt: OptState
+    err: Any            # compression error-feedback tree (or None)
+
+
+jax.tree_util.register_dataclass(
+    TrainState, data_fields=["params", "opt", "err"], meta_fields=[])
+
+
+def init_train_state(model, key, optimizer: AdamW,
+                     compress: bool = False) -> TrainState:
+    params = model.init(key)
+    err = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+           if compress else None)
+    return TrainState(params=params, opt=optimizer.init(params), err=err)
+
+
+def make_train_step(model, optimizer: AdamW, *, rules=None, remat: str = "full",
+                    microbatches: int = 1,
+                    compress_ratio: Optional[float] = None):
+    """Returns step(state, batch) -> (state, metrics)."""
+    rules = rules if rules is not None else (lambda x, a: x)
+    param_axes = model.axes()
+
+    def constrain_grads(grads):
+        """Pin gradient shardings to the parameter shardings. Without this
+        GSPMD all-reduces FULL gradients across the data axis instead of
+        reduce-scattering to the FSDP shard (ZeRO) — measured 324 GB/device
+        of all-reduce on gemma-7b before this constraint."""
+        return jax.tree.map(lambda g, ax: rules(g, ax), grads, param_axes)
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch, rules=rules, remat=remat)
+        return loss, metrics
+
+    _vg = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def grad_fn(params, batch):
+        (loss, metrics), grads = _vg(params, batch)
+        return (loss, metrics), constrain_grads(grads)
+
+    def compute_grads(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        def split(x):
+            b = x.shape[0] if x.ndim >= 1 else None
+            # batch-dim leaves only; positions for vlm are (3, B, S)
+            if x.ndim >= 3 and x.shape[0] == 3 and x.shape[1] % microbatches == 0:
+                return x.reshape(3, microbatches, -1, *x.shape[2:]).swapaxes(0, 1)
+            assert b is not None and b % microbatches == 0, x.shape
+            return x.reshape(microbatches, -1, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def body(carry, mb):
+            acc, loss_sum = carry
+            (loss, _), grads = grad_fn(params, mb)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return (acc, loss_sum + loss), None
+
+        acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (acc, loss_sum), _ = jax.lax.scan(body, (acc0, jnp.float32(0)), micro)
+        grads = jax.tree.map(lambda a: a / microbatches, acc)
+        # metrics from the mean loss only (cheap)
+        return loss_sum / microbatches, {"ce": loss_sum / microbatches}, grads
+
+    def step(state: TrainState, batch):
+        loss, metrics, grads = compute_grads(state.params, batch)
+        err = state.err
+        if compress_ratio is not None:
+            grads, err = topk_compress_with_feedback(grads, err,
+                                                     compress_ratio)
+        params, opt, gnorm = optimizer.update(grads, state.opt, state.params)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = gnorm
+        return TrainState(params=params, opt=opt, err=err), metrics
+
+    return step

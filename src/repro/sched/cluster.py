@@ -1,0 +1,95 @@
+"""Cluster model: TPU slices as the paper's servers, training/serving jobs
+as multi-server job types (ports), device inventories as the K device types.
+
+A job gang-requests chips + hosts + interconnect-domain units across a
+slice — dispatching its components is All-or-Nothing (the paper's Gang
+property): either the whole mesh slice is granted or the job cannot start.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.graph import Instance, clipped_normal_mean
+
+__all__ = ["Slice", "JobType", "build_instance"]
+
+# device types (K = 3): accelerator chips, host CPUs, ICI domains
+K_CHIPS, K_HOSTS, K_ICI = 0, 1, 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Slice:
+    name: str
+    accel: str                    # "v5e" | "v5p" | "trn2" — service locality
+    chips: int                    # e.g. 256 = one pod slice
+    hosts: int
+    ici_domains: int
+
+
+@dataclasses.dataclass(frozen=True)
+class JobType:
+    name: str                     # e.g. "qwen2.5-32b:train_4k"
+    arch: str
+    shape: str
+    accel_ok: tuple[str, ...]     # service-locality set
+    chips: int                    # gang requirement
+    hosts: int
+    ici_domains: int
+    value_rate: float             # $-value per unit normalized throughput
+    arrival_p: float = 0.9
+
+
+def build_instance(slices: list[Slice], jobs: list[JobType],
+                   mean_rates: np.ndarray, *, alpha: float = 0.5,
+                   seed: int = 0) -> tuple[Instance, np.ndarray]:
+    """Map (jobs × slices) onto the paper's bipartite Instance.
+
+    mean_rates[l, r]: expected normalized throughput of job l on slice r
+    (from the roofline model — sched/ratemodel.py); <= 0 means no edge
+    (service locality violated or capacity insufficient).
+
+    Returns (instance, edge_rate) where edge_rate aligns with instance.edges.
+    """
+    L, R = len(jobs), len(slices)
+    edges, A_cols, mu, rate = [], [], [], []
+    for l, job in enumerate(jobs):
+        for r, sl in enumerate(slices):
+            if sl.accel not in job.accel_ok:
+                continue
+            if (sl.chips < job.chips or sl.hosts < job.hosts
+                    or sl.ici_domains < job.ici_domains):
+                continue                      # not solely-servable (Sec 2.1)
+            if mean_rates[l, r] <= 0:
+                continue
+            edges.append((l, r))
+            A_cols.append([job.chips, job.hosts, job.ici_domains])
+            mu.append(job.value_rate * mean_rates[l, r])
+            rate.append(mean_rates[l, r])
+    edges = np.asarray(edges, np.int32)
+    A = np.asarray(A_cols, np.int64).T.astype(np.int32)      # (K, E)
+
+    # cluster-wide capacities (constraint (1)): totals over the fleet
+    c = np.asarray([sum(s.chips for s in slices),
+                    sum(s.hosts for s in slices),
+                    sum(s.ici_domains for s in slices)], np.int64)
+    # normalize requirement units so the DP capacity state space stays small:
+    # express chips/hosts/ici in slice-granularity units
+    unit = np.maximum(A.min(axis=1), 1)
+    A_u = (A + unit[:, None] - 1) // unit[:, None]
+    c_u = np.minimum(c // unit, 12).astype(np.int32)
+
+    mu = np.asarray(mu, np.float32)
+    mu = 0.1 + 0.9 * mu / max(float(mu.max()), 1e-9)          # into [0.1, 1]
+    sigma = mu / 2.0
+    cost = np.full(len(edges), 0.15, np.float32)              # supply cost
+    v = np.asarray([clipped_normal_mean(float(m - co), float(s))
+                    for m, s, co in zip(mu, sigma, cost)], np.float32)
+
+    inst = Instance(
+        n_ports=L, n_servers=R, edges=edges,
+        A=A_u.astype(np.int32), c=c_u, cost=cost, mu=mu, sigma=sigma, v=v,
+        rho=np.asarray([j.arrival_p for j in jobs], np.float32),
+        alpha=alpha)
+    return inst, np.asarray(rate, np.float32)

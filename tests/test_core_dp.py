@@ -1,0 +1,153 @@
+"""Correctness of the budgeted DP (Algorithm 2) against brute force."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dp import NEG, build_tables, oracle_knapsack, solve_budgeted_dp
+from repro.core.graph import generate_instance
+
+import jax.numpy as jnp
+
+
+def brute_force_p4(upsilon, sigma2, A, c, s, allowed=None):
+    """max Σ̂²ᵀx  s.t. Ax ≤ c, Υ̂ᵀx ≥ s over all x ∈ {0,1}^E."""
+    E = len(upsilon)
+    best = None
+    for bits in itertools.product([0, 1], repeat=E):
+        x = np.array(bits)
+        if allowed is not None and np.any(x > allowed):
+            continue
+        if np.any(A @ x > c):
+            continue
+        if upsilon @ x < s:
+            continue
+        val = int(sigma2 @ x)
+        if best is None or val > best:
+            best = val
+    return best
+
+
+def brute_force_eq17(upsilon, sigma2, A, c, s_limit, allowed=None):
+    """The full Alg.-2 objective: max over s of s + sqrt(P4(s))."""
+    best_score, best_s = -1.0, None
+    for s in range(s_limit + 1):
+        v = brute_force_p4(upsilon, sigma2, A, c, s, allowed)
+        if v is None:
+            continue
+        score = s + np.sqrt(v)
+        if score > best_score:
+            best_score, best_s = score, s
+    return best_score, best_s
+
+
+def _rand_problem(rng, E=6, K=2, cmax=3, umax=5, smax=50):
+    A = rng.integers(1, 3, size=(K, E))
+    c = rng.integers(1, cmax + 1, size=K)
+    A = np.minimum(A, c[:, None])
+    upsilon = rng.integers(0, umax + 1, size=E)
+    sigma2 = rng.integers(1, smax + 1, size=E)
+    return A, c, upsilon, sigma2
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_dp_matches_bruteforce_eq17(seed):
+    rng = np.random.default_rng(seed)
+    A, c, upsilon, sigma2 = _rand_problem(rng)
+    tables = build_tables(A, c)
+    s_limit = int(upsilon.sum())
+    s_cap = s_limit
+    x, info = solve_budgeted_dp(
+        jnp.asarray(upsilon, jnp.int32), jnp.asarray(sigma2, jnp.int32),
+        tables, s_cap, jnp.int32(s_limit))
+    x = np.asarray(x)
+    # solution must be feasible
+    assert np.all(A @ x <= c)
+    # and achieve the brute-force-optimal eq.-17 score
+    bf_score, _ = brute_force_eq17(upsilon, sigma2, A, c, s_limit)
+    assert upsilon @ x >= int(info["s_star"])
+    got_score = float(info["s_star"]) + np.sqrt(float(sigma2 @ x))
+    assert got_score == pytest.approx(bf_score, rel=1e-6)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_dp_with_allowed_mask(seed):
+    rng = np.random.default_rng(100 + seed)
+    A, c, upsilon, sigma2 = _rand_problem(rng)
+    allowed = rng.integers(0, 2, size=len(upsilon)).astype(bool)
+    tables = build_tables(A, c)
+    s_limit = int(upsilon[allowed].sum())
+    x, info = solve_budgeted_dp(
+        jnp.asarray(upsilon, jnp.int32), jnp.asarray(sigma2, jnp.int32),
+        tables, s_limit, jnp.int32(s_limit), allowed=jnp.asarray(allowed))
+    x = np.asarray(x)
+    assert np.all(x <= allowed.astype(int))
+    assert np.all(A @ x <= c)
+    bf_score, _ = brute_force_eq17(upsilon, sigma2, A, c, s_limit,
+                                   allowed.astype(int))
+    got_score = float(info["s_star"]) + np.sqrt(float(sigma2 @ x))
+    assert got_score == pytest.approx(bf_score, rel=1e-6)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_oracle_knapsack_matches_bruteforce(seed):
+    rng = np.random.default_rng(200 + seed)
+    A, c, _, _ = _rand_problem(rng)
+    E = A.shape[1]
+    values = rng.uniform(0.0, 1.0, size=E).astype(np.float32)
+    allowed = rng.integers(0, 2, size=E).astype(bool)
+    tables = build_tables(A, c)
+    x, v = oracle_knapsack(jnp.asarray(values), tables, jnp.asarray(allowed))
+    x = np.asarray(x)
+    assert np.all(A @ x <= c)
+    assert np.all(x <= allowed.astype(int))
+    best = -1.0
+    for bits in itertools.product([0, 1], repeat=E):
+        xx = np.array(bits)
+        if np.any(xx > allowed.astype(int)) or np.any(A @ xx > c):
+            continue
+        best = max(best, float(values @ xx))
+    assert float(v) == pytest.approx(best, rel=1e-5)
+    assert float(values @ x) == pytest.approx(best, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests: DP invariants on random problems
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_dp_solution_always_feasible(seed):
+    rng = np.random.default_rng(seed)
+    E = int(rng.integers(2, 9))
+    K = int(rng.integers(1, 4))
+    A, c, upsilon, sigma2 = _rand_problem(rng, E=E, K=K)
+    tables = build_tables(A, c)
+    s_limit = int(upsilon.sum())
+    x, info = solve_budgeted_dp(
+        jnp.asarray(upsilon, jnp.int32), jnp.asarray(sigma2, jnp.int32),
+        tables, s_limit, jnp.int32(s_limit))
+    x = np.asarray(x)
+    assert set(np.unique(x)).issubset({0, 1})
+    assert np.all(A @ x <= c)                       # capacity (1)
+    assert upsilon @ x >= int(info["s_star"])        # budget (16)
+    row = np.asarray(info["value_row"])
+    assert row[int(info["s_star"])] == sigma2 @ x    # value consistency
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_dp_value_row_monotone(seed):
+    """V(s) is non-increasing in s (larger budget ⇒ smaller feasible set)."""
+    rng = np.random.default_rng(seed)
+    A, c, upsilon, sigma2 = _rand_problem(rng)
+    tables = build_tables(A, c)
+    s_limit = int(upsilon.sum())
+    _, info = solve_budgeted_dp(
+        jnp.asarray(upsilon, jnp.int32), jnp.asarray(sigma2, jnp.int32),
+        tables, s_limit, jnp.int32(s_limit))
+    row = np.asarray(info["value_row"], dtype=np.int64)
+    ok = row > int(NEG) // 2
+    vals = row[ok]
+    assert np.all(np.diff(vals) <= 0)

@@ -1,0 +1,123 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention_op
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd.ops import ssd_op
+from repro.kernels.ssd.ref import ssd_ref
+from repro.core.dp import build_tables, solve_budgeted_dp
+from repro.kernels.budgeted_dp.ops import solve_budgeted_dp_pallas
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,KH,hd,causal,window", [
+    (2, 256, 4, 4, 64, True, 0),
+    (1, 256, 8, 2, 64, True, 0),       # GQA g=4
+    (2, 128, 4, 1, 32, True, 0),       # MQA
+    (1, 512, 2, 2, 128, True, 128),    # sliding window
+    (2, 256, 4, 4, 64, False, 0),      # bidirectional (whisper encoder)
+])
+def test_flash_attention_matches_ref(B, S, H, KH, hd, causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KH, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KH, hd), dtype)
+    scale = 1.0 / np.sqrt(hd)
+    got = flash_attention_op(q, k, v, scale=scale, causal=causal,
+                             window=window, blk_q=64, blk_k=128)
+    want = attention_ref(q, k, v, scale=scale, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_cross_lengths():
+    """Sq < Sk (query block at the end of a longer KV) — prefill tail."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64))
+    k = jax.random.normal(ks[1], (1, 512, 4, 64))
+    v = jax.random.normal(ks[2], (1, 512, 4, 64))
+    got = flash_attention_op(q, k, v, scale=0.125, blk_q=64, blk_k=128)
+    want = attention_ref(q, k, v, scale=0.125)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,P,N,Q", [
+    (2, 128, 2, 32, 16, 32),
+    (1, 96, 4, 64, 32, 32),      # S not multiple of Q after pad? 96%32=0
+    (2, 80, 2, 32, 16, 32),      # padding path (80 % 32 != 0)
+    (1, 256, 2, 64, 64, 64),
+])
+def test_ssd_matches_ref(B, S, H, P, N, Q, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    x = jax.random.normal(ks[0], (B, S, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N), dtype)
+    Cm = jax.random.normal(ks[0], (B, S, N), dtype)
+    y_got, st_got = ssd_op(x, dt, A, Bm, Cm, chunk=Q)
+    y_want, st_want = ssd_ref(x, dt, A, Bm, Cm, chunk=Q)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y_got), np.asarray(y_want),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(st_got), np.asarray(st_want),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# budgeted_dp
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(6))
+def test_budgeted_dp_matches_core(seed):
+    rng = np.random.default_rng(seed)
+    E, K = int(rng.integers(4, 14)), int(rng.integers(1, 4))
+    A = rng.integers(1, 3, (K, E))
+    c = rng.integers(1, 4, K)
+    A = np.minimum(A, c[:, None])
+    ups = rng.integers(0, 9, E)
+    sig = rng.integers(1, 5000, E)
+    tables = build_tables(A, c)
+    s_cap = int(ups.sum())
+    x1, i1 = solve_budgeted_dp(jnp.asarray(ups, jnp.int32),
+                               jnp.asarray(sig, jnp.int32), tables, s_cap,
+                               jnp.int32(s_cap))
+    x2, i2 = solve_budgeted_dp_pallas(ups, sig, tables, s_cap, s_cap,
+                                      u_max=int(ups.max() + 1))
+    assert int(i1["s_star"]) == int(i2["s_star"])
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+
+
+def test_budgeted_dp_with_arrival_mask():
+    rng = np.random.default_rng(7)
+    E, K = 10, 2
+    A = rng.integers(1, 3, (K, E))
+    c = rng.integers(2, 4, K)
+    A = np.minimum(A, c[:, None])
+    ups = rng.integers(0, 6, E)
+    sig = rng.integers(1, 900, E)
+    allowed = rng.integers(0, 2, E).astype(bool)
+    tables = build_tables(A, c)
+    s_cap = int(ups.sum())
+    x1, i1 = solve_budgeted_dp(jnp.asarray(ups, jnp.int32),
+                               jnp.asarray(sig, jnp.int32), tables, s_cap,
+                               jnp.int32(s_cap), allowed=jnp.asarray(allowed))
+    x2, i2 = solve_budgeted_dp_pallas(ups, sig, tables, s_cap, s_cap,
+                                      u_max=int(ups.max() + 1),
+                                      allowed=allowed)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+    assert np.all(np.asarray(x2) <= allowed.astype(int))

@@ -1,0 +1,95 @@
+"""Cluster-dispatcher integration tests: straggler avoidance, elastic
+events, and ESDP vs greedy on the roofline-grounded instance."""
+import numpy as np
+import pytest
+
+from repro.sched import ClusterSim, JobType, Slice, build_instance, rate_matrix
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    slices = [
+        Slice("pod-a", "v5e", 256, 32, 4),
+        Slice("pod-b", "v5e", 256, 32, 4),
+        Slice("pod-c", "v5e", 256, 32, 4),
+        Slice("pod-d", "v5p", 256, 32, 4),
+    ]
+    jobs = [
+        JobType("qwen-train", "qwen2.5-32b", "train_4k", ("v5e", "v5p"),
+                256, 32, 4, value_rate=1.0),
+        JobType("mamba-train", "mamba2-2.7b", "train_4k", ("v5e",),
+                256, 32, 4, value_rate=0.6),
+        JobType("ds-decode", "deepseek-v3-671b", "decode_32k", ("v5e", "v5p"),
+                256, 32, 4, value_rate=1.4),
+        JobType("whisper", "whisper-medium", "train_4k", ("v5p",),
+                256, 32, 4, value_rate=0.5),
+    ]
+    rates = rate_matrix(jobs, slices,
+                        slice_speed={"pod-b": 0.55})   # chronic straggler
+    inst, edge_rate = build_instance(slices, jobs, rates, seed=0)
+    return slices, jobs, inst
+
+
+def test_instance_construction(cluster):
+    slices, jobs, inst = cluster
+    assert inst.n_ports == len(jobs)
+    assert inst.n_servers == len(slices)
+    # service locality respected: whisper (v5p-only) has no v5e edges
+    wl = [e for e in inst.edges if e[0] == 3]
+    assert all(slices[e[1]].accel == "v5p" for e in wl)
+    assert np.all(inst.A <= inst.c[:, None])
+
+
+def test_esdp_beats_greedy_on_cluster(cluster):
+    _, _, inst = cluster
+    T = 600
+    esdp = ClusterSim(inst, T, seed=3).run("esdp")
+    for pol in ("hswf", "lcf", "lwtf"):
+        base = ClusterSim(inst, T, seed=3).run(pol, tiebreak=0.0)
+        assert esdp.asw > base.asw, pol
+
+
+def test_straggler_avoidance(cluster):
+    """A slice that degrades mid-run loses dispatch share under ESDP."""
+    slices, jobs, inst = cluster
+    T = 800
+    R = inst.n_servers
+
+    def speed_fn(t):
+        s = np.ones(R, np.float32)
+        if t > T // 3:
+            s[0] = 0.3            # pod-a brownout after t=T/3
+        return s
+
+    out = ClusterSim(inst, T, speed_fn=speed_fn, seed=1).run("esdp")
+    early = out.dispatch_share[:T // 3, 0].mean()
+    late = out.dispatch_share[-T // 4:, 0].mean()
+    assert late < early * 0.6, (early, late)
+
+
+def test_elastic_slice_loss(cluster):
+    """A dead slice receives ZERO dispatches while dead, and traffic
+    resumes after it rejoins (elastic scale-down/up)."""
+    _, _, inst = cluster
+    T = 300
+    R = inst.n_servers
+    dead = (100, 200)
+
+    def alive_fn(t):
+        a = np.ones(R, bool)
+        if dead[0] <= t < dead[1]:
+            a[1] = False
+        return a
+
+    out = ClusterSim(inst, T, alive_fn=alive_fn, seed=2).run("esdp")
+    assert out.dispatch_share[dead[0]:dead[1], 1].sum() == 0.0
+    assert out.dispatch_share[dead[1]:, 1].sum() > 0.0
+
+
+def test_regret_sublinear_on_cluster(cluster):
+    _, _, inst = cluster
+    T = 900
+    out = ClusterSim(inst, T, seed=5).run("esdp")
+    cr = out.cum_regret
+    first, second = cr[T // 2 - 1], cr[-1] - cr[T // 2 - 1]
+    assert second < first

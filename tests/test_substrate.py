@@ -1,0 +1,206 @@
+"""Substrate tests: data pipeline, optimizer, compression, checkpointing,
+fault-tolerant restart, serving."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import SyntheticLM, make_batch_iterator
+from repro.models import build_model
+from repro.optim import AdamW, linear_warmup_cosine, topk_compress_with_feedback
+from repro.runtime import (greedy_generate, init_train_state, make_train_step)
+from repro.runtime.fault import FailureInjector, StragglerTracker, TrainSupervisor
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_restart_exact():
+    ds = SyntheticLM(vocab=512, seq_len=32, global_batch=8, seed=3)
+    a = [b for _, b in zip(range(5), make_batch_iterator(ds, 0))]
+    b = [b for _, b in zip(range(3), make_batch_iterator(ds, 2))]
+    np.testing.assert_array_equal(a[2][1]["tokens"], b[0][1]["tokens"])
+    np.testing.assert_array_equal(a[4][1]["tokens"], b[2][1]["tokens"])
+
+
+def test_data_host_sharding():
+    ds = SyntheticLM(vocab=512, seq_len=16, global_batch=8, seed=1)
+    full = ds.batch(7)["tokens"]
+    lo = ds.batch(7, host_slice=slice(0, 4))["tokens"]
+    hi = ds.batch(7, host_slice=slice(4, 8))["tokens"]
+    np.testing.assert_array_equal(np.concatenate([lo, hi]), full)
+
+
+def test_data_has_learnable_signal():
+    """A bigram table predicts the stream better than chance."""
+    ds = SyntheticLM(vocab=128, seq_len=256, global_batch=4, seed=0)
+    toks = ds.batch(0)["tokens"]
+    # simple structure check: consecutive-difference entropy is low
+    diffs = np.diff(toks, axis=1) % 128
+    _, counts = np.unique(diffs, return_counts=True)
+    p = counts / counts.sum()
+    ent = -(p * np.log(p)).sum()
+    assert ent < 0.9 * np.log(128)
+
+
+# ---------------------------------------------------------------------------
+# optimizer + compression
+# ---------------------------------------------------------------------------
+
+def test_adamw_reduces_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(60):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.2
+
+
+def test_warmup_cosine_shape():
+    lr = linear_warmup_cosine(1e-3, warmup=10, total_steps=100)
+    assert float(lr(jnp.int32(0))) < 1e-4
+    assert float(lr(jnp.int32(10))) == pytest.approx(1e-3, rel=0.05)
+    assert float(lr(jnp.int32(100))) < 5e-4
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(0.01, 0.5))
+def test_compression_error_feedback_conserves_mass(seed, ratio):
+    """compressed + error == original (+ previous error): nothing is lost."""
+    rng = np.random.default_rng(seed)
+    g = {"a": jnp.asarray(rng.normal(size=(37,)), jnp.float32),
+         "b": jnp.asarray(rng.normal(size=(8, 9)), jnp.float32)}
+    comp, err = topk_compress_with_feedback(g, None, ratio)
+    for k in g:
+        np.testing.assert_allclose(np.asarray(comp[k]) + np.asarray(err[k]),
+                                   np.asarray(g[k]), rtol=1e-5, atol=1e-6)
+    # second round carries the error forward
+    comp2, err2 = topk_compress_with_feedback(g, err, ratio)
+    for k in g:
+        np.testing.assert_allclose(
+            np.asarray(comp2[k]) + np.asarray(err2[k]),
+            np.asarray(g[k]) + np.asarray(err[k]), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    cm = CheckpointManager(tmp_path, keep_n=2)
+    state = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+             "step": jnp.int32(5)}
+    cm.save(5, state)
+    cm.save(10, state, async_=True)
+    cm.wait()
+    restored, step = cm.restore(like=state)
+    assert step == 10
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    cm = CheckpointManager(tmp_path, keep_n=2)
+    s = {"x": jnp.zeros(3)}
+    for step in (1, 2, 3, 4):
+        cm.save(step, s)
+    assert cm.all_steps() == [3, 4]
+    assert cm.latest_step() == 4
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant training loop (tiny model, real steps)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = get_config("qwen2.5-32b", reduced=True)
+    model = build_model(cfg)
+    opt = AdamW(lr=3e-3)
+    step_fn = jax.jit(make_train_step(model, opt), donate_argnums=(0,))
+    ds = SyntheticLM(vocab=cfg.vocab, seq_len=48, global_batch=4, seed=0)
+    return cfg, model, opt, step_fn, ds
+
+
+def test_training_reduces_loss(tiny_setup):
+    """Loss trends down on the synthetic stream (the end-to-end ~100M-param
+    demo in examples/train_tiny_lm.py asserts a much larger drop over 300
+    steps; this is the fast CI version)."""
+    cfg, model, opt, step_fn, ds = tiny_setup
+    state = init_train_state(model, jax.random.PRNGKey(0), opt)
+    losses = []
+    for step, batch in make_batch_iterator(ds, 0):
+        state, m = step_fn(state, batch)
+        losses.append(float(m["loss"]))
+        if step >= 90:
+            break
+    assert np.mean(losses[-5:]) < losses[0] * 0.95
+
+
+def test_supervisor_restart_exact(tiny_setup, tmp_path):
+    """A failure mid-run restores the checkpoint and replays the stream —
+    final state must equal the no-failure run's state."""
+    cfg, model, opt, step_fn, ds = tiny_setup
+
+    def run(fail_at):
+        cm = CheckpointManager(tmp_path / f"ck{bool(fail_at)}", keep_n=3)
+        sup = TrainSupervisor(step_fn, cm,
+                              FailureInjector(scheduled=fail_at),
+                              save_every=10, async_save=False)
+        state = init_train_state(model, jax.random.PRNGKey(1), opt)
+        state, final = sup.run(
+            state, lambda s: make_batch_iterator(ds, start_step=s),
+            total_steps=30)
+        return state, sup
+
+    clean, _ = run(())
+    failed, sup = run((17,))
+    assert sup.restarts == 1 and sup.lost_steps == 7   # 17 -> restored 10
+    for a, b in zip(jax.tree.leaves(clean.params),
+                    jax.tree.leaves(failed.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_straggler_tracker():
+    st_ = StragglerTracker(alpha=0.5, k=2.0)
+    assert not st_.observe(1.0)
+    assert not st_.observe(1.1)
+    assert st_.observe(5.0)          # 5x slower than EMA
+    assert st_.slow_steps == 1
+
+
+def test_compressed_training_still_learns(tiny_setup):
+    cfg, model, opt, _, ds = tiny_setup
+    step_fn = jax.jit(make_train_step(model, opt, compress_ratio=0.05),
+                      donate_argnums=(0,))
+    state = init_train_state(model, jax.random.PRNGKey(0), opt,
+                             compress=True)
+    losses = []
+    for step, batch in make_batch_iterator(ds, 0):
+        state, m = step_fn(state, batch)
+        losses.append(float(m["loss"]))
+        if step >= 50:
+            break
+    assert np.mean(losses[-5:]) < losses[0] * 0.95
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def test_greedy_generate_deterministic(tiny_setup):
+    cfg, model, opt, _, _ = tiny_setup
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.arange(24).reshape(2, 12) % cfg.vocab}
+    out1 = greedy_generate(model, params, batch, steps=6, s_max=20)
+    out2 = greedy_generate(model, params, batch, steps=6, s_max=20)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert out1.shape == (2, 6)
