@@ -1,76 +1,86 @@
-"""Paper Figs. 2–4: accumulative social welfare vs the baselines."""
+"""Paper Figs. 2–4: accumulative social welfare vs the baselines.
+
+Each figure is ONE declarative :class:`SweepSpec` over the sweep engine —
+the engine vmaps every (policy × grid-point) over the seed batch in a single
+jitted call (no per-seed Python loops).
+"""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (build_tables, generate_instance, make_esdp_policy,
-                        make_hswf_policy, make_lcf_policy, make_lwtf_policy,
-                        simulate)
 from repro.core.stats import g_logt_only
+from repro.experiments import GridPoint, SweepSpec, default_policies, run_spec
 
 T_DEFAULT = 2000
 SEEDS = (41, 42, 43)
 
+FIG2_SPECS = {
+    tag: SweepSpec(
+        name=f"fig2/{tag}", T=T_DEFAULT, seeds=SEEDS,
+        policies=default_policies(g_fn=g),
+        instance_kwargs={"seed": 0},
+    )
+    for tag, g in (("default_g", None), ("logt_g", g_logt_only))
+}
 
-def _run_all(T=T_DEFAULT, g_fn=None, tiebreak=1e-4, seed_inst=0):
-    inst = generate_instance(seed=seed_inst)
-    tables = build_tables(inst.A, inst.c)
-    kw = {"g_fn": g_fn} if g_fn else {}
-    out = {}
-    mk = {
-        "esdp": lambda: make_esdp_policy(inst, T, tables=tables, **kw),
-        "hswf": lambda: make_hswf_policy(inst, tiebreak=tiebreak),
-        "lcf": lambda: make_lcf_policy(inst, tiebreak=tiebreak),
-        "lwtf": lambda: make_lwtf_policy(inst, tiebreak=tiebreak),
-    }
-    for name, f in mk.items():
-        runs = [simulate(inst, f(), T, seed=s, tables=tables) for s in SEEDS]
-        out[name] = {
-            "asw": np.mean([r.asw[-1] for r in runs]),
-            "asw_curve": np.mean([r.asw for r in runs], axis=0),
-            "regret": np.mean([r.cum_regret[-1] for r in runs]),
-        }
-    return out
+FIG3_SPEC = SweepSpec(
+    name="fig3", T=T_DEFAULT, seeds=SEEDS,
+    policies=default_policies(g_fn=g_logt_only, tiebreak=0.0),
+    instance_kwargs={"seed": 0},
+    grid=tuple(GridPoint(f"T{T}", T=T) for T in (250, 500, 1000, 2000)),
+)
+
+FIG4_SPEC = SweepSpec(
+    name="fig4", T=T_DEFAULT, seeds=(42,),
+    policies=default_policies(g_fn=g_logt_only, names=("esdp",)),
+    instance_kwargs={"seed": 0},
+)
 
 
-def fig2_asw_vs_time(rows):
+def fig2_asw_vs_time(rows, smoke=False):
     """ASW at t ∈ {500, 1000, 2000} for each policy (default params;
     both the paper's default g(t) and its Fig-8 winner ln(t+1))."""
-    for tag, g in (("default_g", None), ("logt_g", g_logt_only)):
-        res = _run_all(g_fn=g)
-        for name, d in res.items():
-            c = d["asw_curve"]
+    for tag, spec in FIG2_SPECS.items():
+        spec = spec.smoke() if smoke else spec
+        res = {r.policy: r for r in run_spec(spec)}
+        marks = [min(t, spec.T) for t in (500, 1000, 2000)]
+        for name, r in res.items():
+            c = r.result.asw.mean(axis=0)
             rows.append((f"fig2/{tag}/{name}",
-                         f"asw@500={c[499]:.1f}",
-                         f"asw@1000={c[999]:.1f};asw@2000={c[1999]:.1f}"))
-        e = res["esdp"]["asw"]
+                         f"asw@{marks[0]}={c[marks[0] - 1]:.1f}",
+                         f"asw@{marks[1]}={c[marks[1] - 1]:.1f};"
+                         f"asw@{marks[2]}={c[marks[2] - 1]:.1f}"))
+        e = res["esdp"].asw_mean
         for b in ("hswf", "lcf", "lwtf"):
             rows.append((f"fig2/{tag}/improvement_vs_{b}",
-                         f"{(e / res[b]['asw'] - 1) * 100:.1f}%",
-                         f"esdp={e:.1f};{b}={res[b]['asw']:.1f}"))
+                         f"{(e / res[b].asw_mean - 1) * 100:.1f}%",
+                         f"esdp={e:.1f};{b}={res[b].asw_mean:.1f}"))
 
 
-def fig3_asw_ratio(rows):
+def fig3_asw_ratio(rows, smoke=False):
     """Ratio ESDP/baseline vs horizon length (paper-literal baselines)."""
-    for T in (250, 500, 1000, 2000):
-        res = _run_all(T=T, g_fn=g_logt_only, tiebreak=0.0)
-        e = res["esdp"]["asw"]
-        rows.append((f"fig3/T{T}",
-                     f"vs_hswf={e / res['hswf']['asw']:.2f}",
-                     f"vs_lcf={e / res['lcf']['asw']:.2f};"
-                     f"vs_lwtf={e / res['lwtf']['asw']:.2f}"))
+    spec = FIG3_SPEC.smoke() if smoke else FIG3_SPEC
+    by_point: dict[str, dict] = {}
+    for r in run_spec(spec):
+        by_point.setdefault(r.point, {})[r.policy] = r.asw_mean
+    for point, res in by_point.items():
+        e = res["esdp"]
+        rows.append((f"fig3/{point}",
+                     f"vs_hswf={e / res['hswf']:.2f}",
+                     f"vs_lcf={e / res['lcf']:.2f};"
+                     f"vs_lwtf={e / res['lwtf']:.2f}"))
 
 
-def fig4_avg_asw(rows):
+def fig4_avg_asw(rows, smoke=False):
     """Average per-slot welfare over the horizon — ESDP's curve steepens
     then flattens toward the oracle bound."""
-    inst = generate_instance(seed=0)
-    tables = build_tables(inst.A, inst.c)
-    pol = make_esdp_policy(inst, T_DEFAULT, g_fn=g_logt_only, tables=tables)
-    r = simulate(inst, pol, T_DEFAULT, seed=42, tables=tables)
-    avg = r.asw / np.arange(1, T_DEFAULT + 1)
-    oracle_avg = np.cumsum(r.sw_oracle) / np.arange(1, T_DEFAULT + 1)
+    spec = FIG4_SPEC.smoke(seeds=(42,)) if smoke else FIG4_SPEC
+    (r,) = run_spec(spec)
+    t_axis = np.arange(1, spec.T + 1)
+    avg = r.result.asw[0] / t_axis
+    oracle_avg = np.cumsum(r.result.sw_oracle[0]) / t_axis
     for T in (250, 500, 1000, 2000):
+        T = min(T, spec.T)
         rows.append((f"fig4/avg_asw@{T}", f"{avg[T - 1]:.3f}",
                      f"oracle={oracle_avg[T - 1]:.3f};"
                      f"frac={avg[T - 1] / oracle_avg[T - 1]:.3f}"))

@@ -7,7 +7,7 @@ import pathlib
 RESULTS = pathlib.Path("results/dryrun")
 
 
-def roofline_table(rows):
+def roofline_table(rows, smoke=False):
     if not RESULTS.exists():
         rows.append(("roofline/missing", "0", "run repro.launch.dryrun --all"))
         return

@@ -1,65 +1,96 @@
-"""Paper Figs. 6–10: sensitivity to solution-space size, δ(t), g(t), ρ, |E|."""
+"""Paper Figs. 6–10: sensitivity to solution-space size, δ(t), g(t), ρ, |E|.
+
+Every figure is a declarative :class:`SweepSpec`; the sweep engine runs one
+jitted vmapped call per (grid-point × policy) instead of the old per-seed
+Python loop, so the printed means are over the same seeds as before.
+"""
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import (build_tables, generate_instance, make_esdp_policy,
-                        make_hswf_policy, simulate)
-from repro.core.stats import DELTA_VARIANTS, G_VARIANTS
+from repro.core.esdp import esdp_factory
+from repro.core.baselines import hswf_factory
+from repro.core.stats import DELTA_VARIANTS, G_VARIANTS, s_cap_for_horizon
+from repro.experiments import GridPoint, SweepSpec, run_spec
 
 T = 1500
 SEEDS = (11, 12)
 
+FIG6_SPEC = SweepSpec(
+    name="fig6", T=T, seeds=SEEDS,
+    policies={"esdp": esdp_factory(), "hswf": hswf_factory()},
+    grid=tuple(GridPoint(f"c_hi{c}", instance_kwargs={"seed": 2, "c_lo": 1,
+                                                      "c_hi": c})
+               for c in (1, 2, 4, 6)),
+)
 
-def _asw(inst, policy_factory, **kw):
-    tables = build_tables(inst.A, inst.c)
-    vals = [simulate(inst, policy_factory(inst, tables), T, seed=s,
-                     tables=tables).asw[-1] for s in SEEDS]
-    return float(np.mean(vals))
+FIG7_SPEC = SweepSpec(
+    name="fig7", T=T, seeds=SEEDS,
+    policies={f"delta_{name}": esdp_factory(delta_fn=fn)
+              for name, fn in DELTA_VARIANTS.items()},
+    instance_kwargs={"seed": 0},
+)
+
+FIG8_SPEC = SweepSpec(
+    name="fig8", T=T, seeds=SEEDS,
+    policies={f"g_{name}": esdp_factory(g_fn=fn)
+              for name, fn in G_VARIANTS.items()},
+    instance_kwargs={"seed": 0},
+)
+
+FIG9_SPEC = SweepSpec(
+    name="fig9", T=T, seeds=SEEDS,
+    policies={"esdp": esdp_factory(), "hswf": hswf_factory()},
+    grid=tuple(GridPoint(f"rho{rho}", instance_kwargs={"seed": 4, "rho": rho})
+               for rho in (0.3, 0.6, 0.9)),
+)
+
+FIG10_SPEC = SweepSpec(
+    name="fig10", T=T, seeds=SEEDS,
+    policies={"esdp": esdp_factory(), "hswf": hswf_factory()},
+    grid=tuple(GridPoint(f"p{p}", instance_kwargs={"seed": 5, "edge_prob": p})
+               for p in (0.05, 0.1, 0.2, 0.4)),
+)
 
 
-def fig6_solution_space(rows):
+def _paired(spec, smoke):
+    """esdp-vs-hswf rows keyed by grid point."""
+    by_point: dict[str, dict] = {}
+    for r in run_spec(spec.smoke() if smoke else spec):
+        by_point.setdefault(r.point, {})[r.policy] = r
+    return by_point
+
+
+def fig6_solution_space(rows, smoke=False):
     """Grow X via capacities: larger c ⇒ more feasible dispatch vectors."""
-    for c_hi in (1, 2, 4, 6):
-        inst = generate_instance(seed=2, c_lo=1, c_hi=c_hi)
-        e = _asw(inst, lambda i, tb: make_esdp_policy(i, T, tables=tb))
-        h = _asw(inst, lambda i, tb: make_hswf_policy(i))
-        rows.append((f"fig6/c_hi{c_hi}", f"esdp={e:.1f}",
-                     f"hswf={h:.1f};states={build_tables(inst.A, inst.c).n_states}"))
+    for point, res in _paired(FIG6_SPEC, smoke).items():
+        rows.append((f"fig6/{point}", f"esdp={res['esdp'].asw_mean:.1f}",
+                     f"hswf={res['hswf'].asw_mean:.1f};"
+                     f"states={res['esdp'].tables.n_states}"))
 
 
-def fig7_delta(rows):
+def fig7_delta(rows, smoke=False):
     """δ(t) variants: little ASW effect, big S(t)-size (overhead) effect."""
-    inst = generate_instance(seed=0)
-    from repro.core.stats import s_cap_for_horizon
-    for name, fn in DELTA_VARIANTS.items():
-        e = _asw(inst, lambda i, tb: make_esdp_policy(i, T, delta_fn=fn,
-                                                      tables=tb))
-        rows.append((f"fig7/delta_{name}", f"esdp={e:.1f}",
-                     f"s_cap={s_cap_for_horizon(T, inst.m, fn)}"))
+    spec = FIG7_SPEC.smoke() if smoke else FIG7_SPEC
+    for r in run_spec(spec):
+        delta_fn = DELTA_VARIANTS[r.policy.removeprefix("delta_")]
+        rows.append((f"fig7/{r.policy}", f"esdp={r.asw_mean:.1f}",
+                     f"s_cap={s_cap_for_horizon(r.T, r.instance.m, delta_fn)}"))
 
 
-def fig8_g(rows):
+def fig8_g(rows, smoke=False):
     """g(t) variants: ln(t+1) should win 'overwhelmingly' (paper Fig. 8)."""
-    inst = generate_instance(seed=0)
-    for name, fn in G_VARIANTS.items():
-        e = _asw(inst, lambda i, tb: make_esdp_policy(i, T, g_fn=fn,
-                                                      tables=tb))
-        rows.append((f"fig8/g_{name}", f"esdp={e:.1f}", ""))
+    spec = FIG8_SPEC.smoke() if smoke else FIG8_SPEC
+    for r in run_spec(spec):
+        rows.append((f"fig8/{r.policy}", f"esdp={r.asw_mean:.1f}", ""))
 
 
-def fig9_rho(rows):
-    for rho in (0.3, 0.6, 0.9):
-        inst = generate_instance(seed=4, rho=rho)
-        e = _asw(inst, lambda i, tb: make_esdp_policy(i, T, tables=tb))
-        h = _asw(inst, lambda i, tb: make_hswf_policy(i))
-        rows.append((f"fig9/rho{rho}", f"esdp={e:.1f}", f"hswf={h:.1f}"))
+def fig9_rho(rows, smoke=False):
+    for point, res in _paired(FIG9_SPEC, smoke).items():
+        rows.append((f"fig9/{point}", f"esdp={res['esdp'].asw_mean:.1f}",
+                     f"hswf={res['hswf'].asw_mean:.1f}"))
 
 
-def fig10_edges(rows):
-    for p in (0.05, 0.1, 0.2, 0.4):
-        inst = generate_instance(seed=5, edge_prob=p)
-        e = _asw(inst, lambda i, tb: make_esdp_policy(i, T, tables=tb))
-        h = _asw(inst, lambda i, tb: make_hswf_policy(i))
-        rows.append((f"fig10/p{p}", f"esdp={e:.1f}",
-                     f"hswf={h:.1f};E={inst.n_edges}"))
+def fig10_edges(rows, smoke=False):
+    for point, res in _paired(FIG10_SPEC, smoke).items():
+        rows.append((f"fig10/{point}", f"esdp={res['esdp'].asw_mean:.1f}",
+                     f"hswf={res['hswf'].asw_mean:.1f};"
+                     f"E={res['esdp'].instance.n_edges}"))

@@ -3,21 +3,28 @@
 Public API:
   generate_instance / Instance          — bipartite-graph problem instances
   build_tables / solve_budgeted_dp      — Algorithm 2 (budgeted DP)
-  make_esdp_policy                      — Algorithm 1 (ESDP)
+  make_esdp_policy / esdp_factory       — Algorithm 1 (ESDP)
   make_hswf_policy / make_lcf_policy / make_lwtf_policy — paper baselines
-  simulate / SimResult                  — the EASW simulation environment
+  hswf_factory / lcf_factory / lwtf_factory — sweep-consumable constructors
+  simulate / simulate_batch / SimResult — the EASW simulation environment
+  Scenario / default_scenario           — pluggable generative regimes
+                                          (registry: repro.experiments)
 """
-from .baselines import make_hswf_policy, make_lcf_policy, make_lwtf_policy
+from .baselines import (hswf_factory, lcf_factory, lwtf_factory,
+                        make_hswf_policy, make_lcf_policy, make_lwtf_policy)
 from .dp import DPTables, build_tables, oracle_knapsack, solve_budgeted_dp
-from .env import SimResult, simulate
-from .esdp import Policy, make_esdp_policy
+from .env import (Scenario, SimResult, default_scenario, simulate,
+                  simulate_batch, simulate_grid)
+from .esdp import Policy, PolicyFactory, esdp_factory, make_esdp_policy
 from .graph import Instance, generate_instance
 from . import stats
 
 __all__ = [
     "Instance", "generate_instance",
     "DPTables", "build_tables", "solve_budgeted_dp", "oracle_knapsack",
-    "Policy", "make_esdp_policy",
+    "Policy", "PolicyFactory", "make_esdp_policy", "esdp_factory",
     "make_hswf_policy", "make_lcf_policy", "make_lwtf_policy",
-    "SimResult", "simulate", "stats",
+    "hswf_factory", "lcf_factory", "lwtf_factory",
+    "Scenario", "default_scenario",
+    "SimResult", "simulate", "simulate_batch", "simulate_grid", "stats",
 ]

@@ -10,16 +10,22 @@ baseline than stop-at-first-violation), and rank ties are broken uniformly
 at random each slot (otherwise an all-zero initial estimate deterministically
 locks a greedy policy onto one arbitrary channel forever — clearly not the
 paper's intent for its strongest baseline).
+
+``*_factory`` helpers expose each baseline through the uniform
+``PolicyFactory`` signature the sweep engine consumes.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from .esdp import Policy
+from .esdp import Policy, PolicyFactory
 from .graph import Instance
 
-__all__ = ["make_hswf_policy", "make_lcf_policy", "make_lwtf_policy", "greedy_pack"]
+__all__ = [
+    "make_hswf_policy", "make_lcf_policy", "make_lwtf_policy", "greedy_pack",
+    "hswf_factory", "lcf_factory", "lwtf_factory",
+]
 
 
 def greedy_pack(scores, eligible, A, c):
@@ -63,11 +69,10 @@ def make_hswf_policy(instance: Instance, tiebreak: float = 1e-4) -> Policy:
     ``tiebreak=0`` gives the paper-literal deterministic variant (which locks
     onto one channel under all-zero initial estimates).
     """
-    A, c, port, _ = _common(instance)
+    A, c, _, _ = _common(instance)
     E = instance.n_edges
 
-    def step(state, t, arrived, vhat, n, key):
-        eligible = arrived[port]
+    def step(state, t, eligible, arrived, vhat, n, key):
         return greedy_pack(vhat + _tiebreak(key, E, tiebreak), eligible, A, c), state
 
     return Policy(name="hswf", init=lambda: (), step=step)
@@ -75,11 +80,10 @@ def make_hswf_policy(instance: Instance, tiebreak: float = 1e-4) -> Policy:
 
 def make_lcf_policy(instance: Instance, tiebreak: float = 1e-4) -> Policy:
     """Lowest Cost First (ascending supply cost Σ_k f_k(a_k^e))."""
-    A, c, port, cost = _common(instance)
+    A, c, _, cost = _common(instance)
     E = instance.n_edges
 
-    def step(state, t, arrived, vhat, n, key):
-        eligible = arrived[port]
+    def step(state, t, eligible, arrived, vhat, n, key):
         return greedy_pack(-cost + _tiebreak(key, E, tiebreak), eligible, A, c), state
 
     return Policy(name="lcf", init=lambda: (), step=step)
@@ -94,8 +98,7 @@ def make_lwtf_policy(instance: Instance, tiebreak: float = 1e-4) -> Policy:
     def init():
         return jnp.zeros(L, dtype=jnp.int32)   # waiting slots per port
 
-    def step(waiting, t, arrived, vhat, n, key):
-        eligible = arrived[port]
+    def step(waiting, t, eligible, arrived, vhat, n, key):
         # lexicographic: waiting time dominates, v̂ breaks ties within a port
         score = (waiting[port].astype(jnp.float32) * 1e3 + vhat
                  + _tiebreak(key, E, tiebreak))
@@ -105,3 +108,24 @@ def make_lwtf_policy(instance: Instance, tiebreak: float = 1e-4) -> Policy:
         return x, waiting
 
     return Policy(name="lwtf", init=init, step=step)
+
+
+def _factory(make, name: str, tiebreak: float) -> PolicyFactory:
+    def factory(instance: Instance, T: int, tables=None) -> Policy:
+        del T, tables   # greedy baselines are horizon-free and DP-free
+        return make(instance, tiebreak=tiebreak)
+
+    factory.policy_name = name
+    return factory
+
+
+def hswf_factory(tiebreak: float = 1e-4) -> PolicyFactory:
+    return _factory(make_hswf_policy, "hswf", tiebreak)
+
+
+def lcf_factory(tiebreak: float = 1e-4) -> PolicyFactory:
+    return _factory(make_lcf_policy, "lcf", tiebreak)
+
+
+def lwtf_factory(tiebreak: float = 1e-4) -> PolicyFactory:
+    return _factory(make_lwtf_policy, "lwtf", tiebreak)

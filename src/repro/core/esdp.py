@@ -2,7 +2,10 @@
 
 A policy is a pair (init, step) consumed by env.simulate inside one
 ``lax.scan``; the shared observation statistics (n, Σz̃) live in the env carry
-and are passed to step as (vhat, n).
+and are passed to step as (vhat, n).  ``step`` receives two masks:
+``eligible`` (E,) — channels dispatchable this slot (port arrival ∧ server
+alive, the scenario-aware Ω(t)) — and ``arrived`` (L,) — raw port arrivals,
+which waiting-time policies need even when a port's channels are all dead.
 """
 from __future__ import annotations
 
@@ -15,14 +18,19 @@ from . import stats as stats_mod
 from .dp import DPTables, build_tables, solve_budgeted_dp
 from .graph import Instance
 
-__all__ = ["Policy", "make_esdp_policy"]
+__all__ = ["Policy", "PolicyFactory", "make_esdp_policy", "esdp_factory"]
 
 
 @dataclasses.dataclass(frozen=True, eq=False)   # identity hash — jit-static-safe
 class Policy:
     name: str
     init: Callable[[], Any]
-    step: Callable[..., tuple]   # (state, t, arrived, vhat, n, key) -> (x, state)
+    step: Callable[..., tuple]   # (state, t, eligible, arrived, vhat, n, key) -> (x, state)
+
+
+# Uniform constructor signature consumed by the sweep engine
+# (repro.experiments.sweep): factory(instance, T, tables) -> Policy.
+PolicyFactory = Callable[[Instance, int, "DPTables | None"], Policy]
 
 
 def make_esdp_policy(
@@ -42,17 +50,30 @@ def make_esdp_policy(
         tables = build_tables(instance.A, instance.c)
     m = instance.m
     s_cap = stats_mod.s_cap_for_horizon(T, m, delta_fn)
-    port_of_edge = jnp.asarray(instance.port_of_edge)
 
     def init():
         return ()   # all ESDP state is the shared (n, Σz̃) in the env carry
 
-    def step(state, t, arrived, vhat, n, key):
+    def step(state, t, eligible, arrived, vhat, n, key):
+        del arrived  # eligibility already folds in arrivals (and aliveness)
         upsilon, sigma2, _, s_limit = stats_mod.scale_statistics(
             vhat, n, t, m, g_fn=g_fn, delta_fn=delta_fn)
         x, _ = solve_budgeted_dp(upsilon, sigma2, tables, s_cap, s_limit,
-                                 allowed=arrived[port_of_edge])
-        x = x * arrived[port_of_edge].astype(jnp.int32)    # Alg. 1 Steps 9–16
+                                 allowed=eligible)
+        x = x * eligible.astype(jnp.int32)                 # Alg. 1 Steps 9–16
         return x, state
 
     return Policy(name="esdp", init=init, step=step)
+
+
+def esdp_factory(**overrides) -> PolicyFactory:
+    """Sweep-consumable factory: ``esdp_factory(g_fn=...)(inst, T, tables)``.
+
+    ``overrides`` are forwarded to :func:`make_esdp_policy` (``delta_fn``,
+    ``g_fn``); the horizon and DP tables come from the sweep grid point.
+    """
+    def make(instance: Instance, T: int, tables: DPTables | None = None) -> Policy:
+        return make_esdp_policy(instance, T, tables=tables, **overrides)
+
+    make.policy_name = "esdp"
+    return make

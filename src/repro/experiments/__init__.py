@@ -1,0 +1,23 @@
+"""Batched scenario-sweep engine for the ESDP reproduction.
+
+Two pieces:
+  scenarios — registry of named generative regimes for fluctuated processing
+              speeds / arrivals (DVFS, MMPP bursts, stragglers, brownouts,
+              elastic outages) behind the ``core.env.Scenario`` protocol.
+  sweep     — declarative (policy × scenario × grid) sweeps, vmapped over
+              seed batches (one jitted call per grid point) with lax.map
+              over scenario-parameter grids, plus CSV/JSON sinks.
+"""
+from .scenarios import (SCENARIOS, get_scenario, register_scenario,
+                        scenario_names, unroll_scenario)
+from .sweep import (POLICY_FACTORIES, GridPoint, SweepRow, SweepSpec,
+                    default_policies, run_spec, summarize,
+                    sweep_scenario_param, write_csv, write_json)
+
+__all__ = [
+    "SCENARIOS", "get_scenario", "register_scenario", "scenario_names",
+    "unroll_scenario",
+    "POLICY_FACTORIES", "GridPoint", "SweepRow", "SweepSpec",
+    "default_policies", "run_spec", "summarize", "sweep_scenario_param",
+    "write_csv", "write_json",
+]

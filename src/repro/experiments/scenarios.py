@@ -1,0 +1,287 @@
+"""Scenario registry: named generative regimes for fluctuated speeds/arrivals.
+
+The paper's motivation (Sec. 1) is that the *actual* service rate a
+multi-server job experiences fluctuates — DVFS, power oversubscription,
+multi-tenant co-location — and ESDP must learn under that fluctuation.  The
+seed repo hard-coded a single iid-Gaussian regime; this module names a
+*family* of regimes behind the :class:`repro.core.env.Scenario` protocol so
+every "does ESDP still win under regime X?" question is a registry lookup,
+not a new script.  See ``docs/scenarios.md`` for the phenomenon each regime
+models and its parameters.
+
+All step functions are pure jnp (traceable): they run inside the jitted
+``lax.scan`` of ``core.env.simulate``, under ``jax.vmap`` over seed batches,
+and under ``lax.map`` over stacked parameter grids.  Stochastic scenarios
+carry their own PRNG key in their state (derived from the simulation seed
+via ``fold_in``), so turning a scenario on never perturbs the base
+arrival/valuation streams — cross-scenario comparisons stay paired.
+
+``unroll_scenario`` materializes a regime into host-side (arr_scale, speed,
+alive) streams; ``sched.dispatcher.ClusterSim`` consumes those, so the
+cluster simulator and the jitted environment share one scenario interface.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.env import Scenario, default_scenario
+
+__all__ = [
+    "SCENARIOS", "register_scenario", "get_scenario", "scenario_names",
+    "unroll_scenario",
+]
+
+# name -> builder(**params) -> Scenario
+SCENARIOS: dict[str, Callable[..., Scenario]] = {}
+
+
+def register_scenario(name: str):
+    """Decorator: register ``builder(**params) -> Scenario`` under ``name``."""
+    def deco(builder: Callable[..., Scenario]):
+        SCENARIOS[name] = builder
+        builder.scenario_name = name
+        return builder
+    return deco
+
+
+def get_scenario(name: str, **overrides) -> Scenario:
+    """Build a registered scenario, overriding its default parameters."""
+    if name not in SCENARIOS:
+        raise KeyError(
+            f"unknown scenario {name!r}; registered: {sorted(SCENARIOS)}")
+    return SCENARIOS[name](**overrides)
+
+
+def scenario_names() -> tuple[str, ...]:
+    return tuple(sorted(SCENARIOS))
+
+
+def _ones_speed(n_servers):
+    return jnp.ones(n_servers, jnp.float32)
+
+
+def _all_alive(n_servers):
+    return jnp.ones(n_servers, dtype=bool)
+
+
+# ---------------------------------------------------------------------------
+# iid — the paper's baseline setting (re-exported from core.env so the
+# registry covers the default regime too)
+# ---------------------------------------------------------------------------
+
+@register_scenario("iid")
+def iid() -> Scenario:
+    """iid clipped-Gaussian valuations, constant ρ, unit speeds (paper Sec. 5)."""
+    return default_scenario()
+
+
+# ---------------------------------------------------------------------------
+# markov_dvfs — per-server two-state Markov-modulated speeds
+# ---------------------------------------------------------------------------
+
+def _dvfs_init(params, key, n_servers):
+    # all servers start in the fast regime; private key drives the switching
+    return (jnp.zeros(n_servers, jnp.int32), key)
+
+
+def _dvfs_step(params, state, t, n_servers):
+    regime, key = state
+    key, k = jax.random.split(key)
+    u = jax.random.uniform(k, (n_servers,))
+    go_slow = (regime == 0) & (u < params["p_slow"])
+    go_fast = (regime == 1) & (u < params["p_fast"])
+    regime = jnp.where(go_slow, 1, jnp.where(go_fast, 0, regime))
+    speed = jnp.where(regime == 1, params["slow_speed"],
+                      1.0).astype(jnp.float32)
+    return ((regime, key), jnp.float32(1.0), speed, _all_alive(n_servers))
+
+
+@register_scenario("markov_dvfs")
+def markov_dvfs(slow_speed: float = 0.5, p_slow: float = 0.05,
+                p_fast: float = 0.25) -> Scenario:
+    """DVFS / co-location throttling: each server's speed follows an
+    independent two-state Markov chain {fast=1, slow=slow_speed}."""
+    return Scenario(
+        name="markov_dvfs",
+        init=_dvfs_init,
+        step=_dvfs_step,
+        params={"slow_speed": slow_speed, "p_slow": p_slow, "p_fast": p_fast},
+        fluctuates=True,
+        description="per-server two-state Markov speed modulation (DVFS)",
+    )
+
+
+# ---------------------------------------------------------------------------
+# mmpp_arrivals — bursty arrivals via a global on/off Markov modulation
+# ---------------------------------------------------------------------------
+
+def _mmpp_init(params, key, n_servers):
+    return (jnp.int32(0), key)          # phase 0 = quiet, 1 = burst
+
+
+def _mmpp_step(params, state, t, n_servers):
+    phase, key = state
+    key, k = jax.random.split(key)
+    u = jax.random.uniform(k, ())
+    to_burst = (phase == 0) & (u < params["p_burst"])
+    to_quiet = (phase == 1) & (u < params["p_quiet"])
+    phase = jnp.where(to_burst, 1, jnp.where(to_quiet, 0, phase))
+    scale = jnp.where(phase == 1, params["burst_scale"],
+                      params["quiet_scale"]).astype(jnp.float32)
+    return ((phase, key), scale, _ones_speed(n_servers),
+            _all_alive(n_servers))
+
+
+@register_scenario("mmpp_arrivals")
+def mmpp_arrivals(quiet_scale: float = 0.4, burst_scale: float = 1.2,
+                  p_burst: float = 0.05, p_quiet: float = 0.1) -> Scenario:
+    """Bursty traffic: a cluster-wide two-phase Markov-modulated Bernoulli
+    process scales every port's arrival probability (MMPP discretization)."""
+    return Scenario(
+        name="mmpp_arrivals",
+        init=_mmpp_init,
+        step=_mmpp_step,
+        params={"quiet_scale": quiet_scale, "burst_scale": burst_scale,
+                "p_burst": p_burst, "p_quiet": p_quiet},
+        fluctuates=False,       # speeds stay 1 ⇒ true means unchanged
+        description="global on/off Markov modulation of arrival intensity",
+    )
+
+
+# ---------------------------------------------------------------------------
+# chronic_straggler — a random subset of servers is persistently degraded
+# ---------------------------------------------------------------------------
+
+def _straggler_init(params, key, n_servers):
+    perm = jax.random.permutation(key, n_servers)
+    n_slow = jnp.ceil(params["frac"] * n_servers).astype(jnp.int32)
+    return perm < n_slow                 # (R,) bool straggler mask
+
+
+def _straggler_step(params, state, t, n_servers):
+    speed = jnp.where(state, params["straggler_speed"],
+                      1.0).astype(jnp.float32)
+    return (state, jnp.float32(1.0), speed, _all_alive(n_servers))
+
+
+@register_scenario("chronic_straggler")
+def chronic_straggler(frac: float = 0.25,
+                      straggler_speed: float = 0.35) -> Scenario:
+    """Chronic stragglers: a seed-dependent ⌈frac·R⌉-subset of servers runs
+    at straggler_speed for the whole horizon (bad hosts / slow pods)."""
+    return Scenario(
+        name="chronic_straggler",
+        init=_straggler_init,
+        step=_straggler_step,
+        params={"frac": frac, "straggler_speed": straggler_speed},
+        fluctuates=True,
+        description="a persistent random subset of servers is degraded",
+    )
+
+
+# ---------------------------------------------------------------------------
+# transient_brownout — deterministic cluster-wide speed dip in a window
+# ---------------------------------------------------------------------------
+
+def _brownout_init(params, key, n_servers):
+    return ()
+
+
+def _brownout_step(params, state, t, n_servers):
+    tf = t.astype(jnp.float32)
+    in_window = (tf >= params["t_start"]) & (tf < params["t_end"])
+    speed = jnp.where(in_window, params["brownout_speed"],
+                      1.0).astype(jnp.float32)
+    return (state, jnp.float32(1.0),
+            jnp.broadcast_to(speed, (n_servers,)), _all_alive(n_servers))
+
+
+@register_scenario("transient_brownout")
+def transient_brownout(t_start: float = 300.0, t_end: float = 600.0,
+                       brownout_speed: float = 0.5) -> Scenario:
+    """Power-oversubscription brownout: every server is throttled to
+    brownout_speed during [t_start, t_end) and recovers afterwards."""
+    return Scenario(
+        name="transient_brownout",
+        init=_brownout_init,
+        step=_brownout_step,
+        params={"t_start": t_start, "t_end": t_end,
+                "brownout_speed": brownout_speed},
+        fluctuates=True,
+        description="cluster-wide speed dip in a fixed time window",
+    )
+
+
+# ---------------------------------------------------------------------------
+# elastic_outage — servers die and rejoin (aliveness, not speed)
+# ---------------------------------------------------------------------------
+
+def _outage_init(params, key, n_servers):
+    perm = jax.random.permutation(key, n_servers)
+    n_dead = jnp.ceil(params["frac"] * n_servers).astype(jnp.int32)
+    return perm < n_dead                 # (R,) bool outage-candidate mask
+
+
+def _outage_step(params, state, t, n_servers):
+    tf = t.astype(jnp.float32)
+    in_window = (tf >= params["t_down"]) & (tf < params["t_up"])
+    alive = ~(state & in_window)
+    return (state, jnp.float32(1.0), _ones_speed(n_servers), alive)
+
+
+@register_scenario("elastic_outage")
+def elastic_outage(frac: float = 0.25, t_down: float = 200.0,
+                   t_up: float = 400.0) -> Scenario:
+    """Elastic scale-down/up: a seed-dependent ⌈frac·R⌉-subset of servers is
+    dead during [t_down, t_up) — their channels become infeasible — and
+    rejoins afterwards."""
+    return Scenario(
+        name="elastic_outage",
+        init=_outage_init,
+        step=_outage_step,
+        params={"frac": frac, "t_down": t_down, "t_up": t_up},
+        fluctuates=False,        # live servers run at unit speed
+        description="a random subset of servers is down for a window",
+    )
+
+
+# ---------------------------------------------------------------------------
+# host-side unrolling (shared interface with sched.dispatcher.ClusterSim)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("scenario", "T", "n_servers", "n_ports"))
+def _unroll(scenario: Scenario, T: int, n_servers: int, n_ports: int, key,
+            params):
+    state0 = scenario.init(params, key, n_servers)
+
+    def slot(state, t):
+        state, arr_scale, speed, alive = scenario.step(
+            params, state, t, n_servers)
+        # contract allows scalar or (L,) arr_scale — normalize to (L,)
+        return state, (jnp.broadcast_to(arr_scale, (n_ports,)), speed, alive)
+
+    _, (arr_scale, speed, alive) = jax.lax.scan(
+        slot, state0, jnp.arange(1, T + 1))
+    return arr_scale, speed, alive
+
+
+def unroll_scenario(scenario: Scenario, T: int, n_servers: int,
+                    seed: int = 0, n_ports: int = 1):
+    """Materialize a scenario into host arrays (arr_scale (T, n_ports),
+    speed (T, R), alive (T, R)), using the same keying as
+    ``core.env.simulate`` (the scenario chain is
+    ``fold_in(PRNGKey(seed), salt)``), so a host-side consumer like
+    ``ClusterSim`` sees the same regime realization the jitted environment
+    would.  Scalar per-slot arrival scales are broadcast across ports."""
+    from ..core import env as _env
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), _env._SCENARIO_SALT)
+    params = jax.tree.map(jnp.asarray, scenario.params)
+    arr_scale, speed, alive = _unroll(scenario, T, n_servers, n_ports, key,
+                                      params)
+    return (np.asarray(arr_scale), np.asarray(speed), np.asarray(alive))

@@ -1,0 +1,247 @@
+"""Batched scenario-sweep engine: (policy × scenario × grid-point) → stats.
+
+Replaces the per-seed Python loops the benchmarks used to run: for every
+grid point, the whole horizon scan is vmapped over the seed batch and run as
+ONE jitted call (``core.env.simulate_batch``); scenario-parameter grids with
+fixed shapes additionally fold into a single compilation via ``lax.map``
+(:func:`sweep_scenario_param`).
+
+A sweep is declared, not scripted::
+
+    spec = SweepSpec(
+        name="fig6", T=1500, seeds=(11, 12),
+        policies={"esdp": esdp_factory(), "hswf": hswf_factory()},
+        grid=tuple(GridPoint(f"c_hi{c}", instance_kwargs={"seed": 2, "c_hi": c})
+                   for c in (1, 2, 4, 6)),
+    )
+    rows = run_spec(spec)
+    write_csv(rows, "results/fig6.csv")
+
+Each :class:`SweepRow` carries the stacked per-seed traces (for curve plots)
+plus mean/CI aggregates; ``write_csv``/``write_json`` sink the aggregates.
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import json
+import math
+import pathlib
+from typing import Mapping, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import (build_tables, generate_instance, simulate_batch,
+                    simulate_grid)
+from ..core.baselines import hswf_factory, lcf_factory, lwtf_factory
+from ..core.dp import DPTables
+from ..core.env import Scenario, SimResult
+from ..core.esdp import PolicyFactory, esdp_factory
+from ..core.graph import Instance
+from .scenarios import get_scenario
+
+__all__ = [
+    "GridPoint", "SweepSpec", "SweepRow",
+    "run_spec", "summarize", "sweep_scenario_param",
+    "write_csv", "write_json", "POLICY_FACTORIES", "default_policies",
+]
+
+# name -> zero-arg factory constructor with that policy's defaults
+POLICY_FACTORIES = {
+    "esdp": esdp_factory,
+    "hswf": hswf_factory,
+    "lcf": lcf_factory,
+    "lwtf": lwtf_factory,
+}
+
+
+def default_policies(g_fn=None, tiebreak: float = 1e-4,
+                     names: Sequence[str] = ("esdp", "hswf", "lcf", "lwtf"),
+                     ) -> dict[str, PolicyFactory]:
+    """The paper's four policies as a sweep-ready dict (Fig. 2–4 lineup)."""
+    out: dict[str, PolicyFactory] = {}
+    for n in names:
+        if n == "esdp":
+            out[n] = esdp_factory(**({"g_fn": g_fn} if g_fn else {}))
+        else:
+            out[n] = POLICY_FACTORIES[n](tiebreak=tiebreak)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class GridPoint:
+    """One cell of a sweep grid: overrides applied on top of the spec."""
+
+    label: str
+    instance_kwargs: Mapping = dataclasses.field(default_factory=dict)
+    scenario_params: Mapping = dataclasses.field(default_factory=dict)
+    T: int | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """Declarative description of one figure/table's worth of runs."""
+
+    name: str
+    T: int
+    seeds: tuple[int, ...]
+    policies: Mapping[str, PolicyFactory]
+    scenario: str | Scenario = "iid"
+    scenario_params: Mapping = dataclasses.field(default_factory=dict)
+    instance_kwargs: Mapping = dataclasses.field(default_factory=dict)
+    grid: tuple[GridPoint, ...] = (GridPoint("default"),)
+
+    def smoke(self, T: int = 120, seeds: tuple[int, ...] = (0,)) -> "SweepSpec":
+        """A cheap variant for CI smoke runs: shrink horizon and seed batch."""
+        grid = tuple(
+            dataclasses.replace(p, T=min(p.T, T) if p.T else None)
+            for p in self.grid)
+        return dataclasses.replace(self, T=min(self.T, T), seeds=seeds,
+                                   grid=grid)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepRow:
+    """One (grid-point × policy) cell: aggregates + full per-seed traces."""
+
+    spec: str
+    point: str
+    policy: str
+    scenario: str
+    T: int
+    seeds: tuple[int, ...]
+    asw_mean: float            # mean over seeds of ASW(T)
+    asw_ci95: float            # 1.96·σ/√S (0 for a single seed)
+    regret_mean: float         # mean over seeds of cumulative regret(T)
+    regret_ci95: float
+    oracle_asw_mean: float     # mean over seeds of Σ_t ṽᵀx*(t)
+    n_dispatched_mean: float   # mean ‖x(t)‖₁ per slot
+    result: SimResult          # stacked (S, T) traces
+    instance: Instance
+    tables: DPTables
+
+    def to_record(self) -> dict:
+        """Sink-friendly flat record (drops the arrays)."""
+        return {
+            "spec": self.spec, "point": self.point, "policy": self.policy,
+            "scenario": self.scenario, "T": self.T,
+            "seeds": ";".join(str(s) for s in self.seeds),
+            "asw_mean": self.asw_mean, "asw_ci95": self.asw_ci95,
+            "regret_mean": self.regret_mean, "regret_ci95": self.regret_ci95,
+            "oracle_asw_mean": self.oracle_asw_mean,
+            "n_dispatched_mean": self.n_dispatched_mean,
+            "n_edges": self.instance.n_edges,
+            "n_states": self.tables.n_states,
+        }
+
+
+def _ci95(x: np.ndarray) -> float:
+    if x.size <= 1:
+        return 0.0
+    return float(1.96 * x.std(ddof=1) / math.sqrt(x.size))
+
+
+def summarize(res: SimResult) -> dict:
+    """Mean/CI aggregates over the leading seed axis of a batched result."""
+    asw = res.asw[..., -1]
+    creg = res.cum_regret[..., -1]
+    return {
+        "asw_mean": float(asw.mean()),
+        "asw_ci95": _ci95(asw),
+        "regret_mean": float(creg.mean()),
+        "regret_ci95": _ci95(creg),
+        "oracle_asw_mean": float(res.sw_oracle.sum(axis=-1).mean()),
+        "n_dispatched_mean": float(res.n_dispatched.mean()),
+    }
+
+
+def _resolve_scenario(scenario, base_params: Mapping,
+                      point_params: Mapping) -> Scenario:
+    params = {**base_params, **point_params}
+    if isinstance(scenario, str):
+        return get_scenario(scenario, **params)
+    if params:
+        return dataclasses.replace(scenario,
+                                   params={**scenario.params, **params})
+    return scenario
+
+
+def run_spec(spec: SweepSpec) -> list[SweepRow]:
+    """Execute a sweep: one jitted vmapped call per (grid-point × policy)."""
+    rows: list[SweepRow] = []
+    for point in spec.grid:
+        inst_kwargs = {**spec.instance_kwargs, **point.instance_kwargs}
+        instance = generate_instance(**inst_kwargs)
+        tables = build_tables(instance.A, instance.c)
+        T = point.T if point.T is not None else spec.T
+        scenario = _resolve_scenario(spec.scenario, spec.scenario_params,
+                                     point.scenario_params)
+        for pname, factory in spec.policies.items():
+            policy = factory(instance, T, tables)
+            res = simulate_batch(instance, policy, T, spec.seeds,
+                                 tables=tables, scenario=scenario)
+            rows.append(SweepRow(
+                spec=spec.name, point=point.label, policy=pname,
+                scenario=scenario.name, T=T, seeds=tuple(spec.seeds),
+                result=res, instance=instance, tables=tables,
+                **summarize(res)))
+    return rows
+
+
+def sweep_scenario_param(instance: Instance, factory: PolicyFactory, T: int,
+                         seeds, scenario_name: str, param: str, values,
+                         tables: DPTables | None = None,
+                         **scenario_kwargs) -> SimResult:
+    """Sweep ONE scenario parameter over a value grid in a single jitted
+    call: ``lax.map`` over the stacked parameter axis, ``vmap`` over seeds.
+
+    Returns a SimResult with shape (len(values), len(seeds), T).  Requires
+    the scenario's state/output shapes to be parameter-independent (true for
+    every registered scenario).
+    """
+    scenario = get_scenario(scenario_name, **scenario_kwargs)
+    if tables is None:
+        tables = build_tables(instance.A, instance.c)
+    params = {k: jnp.asarray(v) for k, v in scenario.params.items()}
+    if param not in params:
+        raise KeyError(f"scenario {scenario.name!r} has no parameter "
+                       f"{param!r}; available: {sorted(params)}")
+    G = len(values)
+    stacked = {
+        k: (jnp.asarray(values, jnp.result_type(v)) if k == param
+            else jnp.broadcast_to(v, (G,) + jnp.shape(v)))
+        for k, v in params.items()
+    }
+    policy = factory(instance, T, tables)
+    return simulate_grid(instance, policy, T, seeds, scenario, stacked,
+                         tables=tables)
+
+
+# ---------------------------------------------------------------------------
+# result sinks
+# ---------------------------------------------------------------------------
+
+def _records(rows: Sequence[SweepRow]) -> list[dict]:
+    return [r.to_record() for r in rows]
+
+
+def write_csv(rows: Sequence[SweepRow], path) -> pathlib.Path:
+    """Write aggregate records as CSV (one row per grid-point × policy)."""
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    recs = _records(rows)
+    with path.open("w", newline="") as f:
+        if recs:
+            w = csv.DictWriter(f, fieldnames=list(recs[0]))
+            w.writeheader()
+            w.writerows(recs)
+    return path
+
+
+def write_json(rows: Sequence[SweepRow], path) -> pathlib.Path:
+    """Write aggregate records as a JSON array."""
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(_records(rows), indent=2))
+    return path

@@ -76,6 +76,8 @@ def _compile_cell(cfg, shape, mesh, rules, remat: str, microbatches: int):
 
 def _extract_costs(compiled, n_dev) -> dict:
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):     # older jax wraps it per-partition
+        cost = cost[0] if cost else {}
     coll = parse_collective_bytes(compiled.as_text(), n_dev)
     vals = {k: float(cost.get(k, 0.0)) for k in COST_KEYS}
     for kind, b in coll["by_kind"].items():

@@ -1,15 +1,16 @@
 """ESDP-backed gang dispatcher over the cluster, with time-varying service
 rates (stragglers) and elastic events (slice loss/join).
 
-The environment extends core/env.py with:
-  * a degradation schedule: slice r runs at speed_r(t) (multi-tenant noise,
-    chronic stragglers, transient brownouts) — the paper's "fluctuated
-    processing speeds", grounded in the roofline rate model;
-  * an aliveness schedule: a dead slice's channels are infeasible (the
-    dispatcher's `allowed` mask) — elastic scale-down/up;
-  * dispatch-share accounting so tests can assert the bandit actually
-    routes AROUND a degraded slice (straggler mitigation at the cluster
-    level — in-job mitigation lives in runtime/fault.py).
+The generative machinery — degradation schedules (multi-tenant noise,
+chronic stragglers, transient brownouts: the paper's "fluctuated processing
+speeds") and aliveness schedules (elastic scale-down/up) — lives in the
+shared ``Scenario`` protocol of ``core.env`` with named regimes registered
+in ``repro.experiments.scenarios``.  ``ClusterSim`` accepts either a
+``scenario=`` (unrolled host-side through the SAME keying the jitted
+environment uses) or raw ``speed_fn``/``alive_fn`` callbacks for ad-hoc
+schedules.  Dispatch-share accounting lets tests assert the bandit actually
+routes AROUND a degraded slice (straggler mitigation at the cluster level —
+in-job mitigation lives in runtime/fault.py).
 """
 from __future__ import annotations
 
@@ -23,6 +24,7 @@ import numpy as np
 from ..core import build_tables, stats as stats_mod
 from ..core.baselines import greedy_pack
 from ..core.dp import oracle_knapsack, solve_budgeted_dp
+from ..core.env import Scenario
 from ..core.graph import Instance
 
 __all__ = ["ClusterSim", "SimOutput"]
@@ -46,13 +48,25 @@ class ClusterSim:
     def __init__(self, instance: Instance, T: int,
                  speed_fn: Optional[Callable[[int], np.ndarray]] = None,
                  alive_fn: Optional[Callable[[int], np.ndarray]] = None,
-                 g_fn=stats_mod.g_logt_only, seed: int = 0):
+                 g_fn=stats_mod.g_logt_only, seed: int = 0,
+                 scenario: Optional[Scenario] = None):
         self.inst = instance
         self.T = T
         self.tables = build_tables(instance.A, instance.c)
         self.g_fn = g_fn
         self.seed = seed
         R = instance.n_servers
+        self.arr_scale = np.ones((T, instance.n_ports), np.float32)
+        if scenario is not None:
+            if speed_fn is not None or alive_fn is not None:
+                raise ValueError("pass either scenario= or "
+                                 "speed_fn/alive_fn, not both")
+            from ..experiments.scenarios import unroll_scenario
+            arr_scale, speeds, alive = unroll_scenario(
+                scenario, T, R, seed, n_ports=instance.n_ports)
+            self.arr_scale = arr_scale
+            speed_fn = lambda t: speeds[t]      # noqa: E731 — row t ↔ slot t+1
+            alive_fn = lambda t: alive[t]       # noqa: E731
         self.speed_fn = speed_fn or (lambda t: np.ones(R, np.float32))
         self.alive_fn = alive_fn or (lambda t: np.ones(R, bool))
         self.m = instance.m
@@ -62,7 +76,8 @@ class ClusterSim:
     def _streams(self):
         rng = np.random.default_rng(self.seed)
         inst = self.inst
-        arrivals = rng.random((self.T, inst.n_ports)) < inst.rho[None, :]
+        rho_t = np.clip(inst.rho[None, :] * self.arr_scale, 0.0, 1.0)
+        arrivals = rng.random((self.T, inst.n_ports)) < rho_t
         noise = rng.normal(0.0, 1.0, (self.T, inst.n_edges)).astype(np.float32)
         return arrivals, noise
 

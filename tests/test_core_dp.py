@@ -3,7 +3,12 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:        # optional [test] extra — property tests skip cleanly without it
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
 
 from repro.core.dp import NEG, build_tables, oracle_knapsack, solve_budgeted_dp
 from repro.core.graph import generate_instance
@@ -116,38 +121,43 @@ def test_oracle_knapsack_matches_bruteforce(seed):
 # hypothesis property tests: DP invariants on random problems
 # ---------------------------------------------------------------------------
 
-@settings(max_examples=30, deadline=None)
-@given(st.integers(0, 2**31 - 1))
-def test_dp_solution_always_feasible(seed):
-    rng = np.random.default_rng(seed)
-    E = int(rng.integers(2, 9))
-    K = int(rng.integers(1, 4))
-    A, c, upsilon, sigma2 = _rand_problem(rng, E=E, K=K)
-    tables = build_tables(A, c)
-    s_limit = int(upsilon.sum())
-    x, info = solve_budgeted_dp(
-        jnp.asarray(upsilon, jnp.int32), jnp.asarray(sigma2, jnp.int32),
-        tables, s_limit, jnp.int32(s_limit))
-    x = np.asarray(x)
-    assert set(np.unique(x)).issubset({0, 1})
-    assert np.all(A @ x <= c)                       # capacity (1)
-    assert upsilon @ x >= int(info["s_star"])        # budget (16)
-    row = np.asarray(info["value_row"])
-    assert row[int(info["s_star"])] == sigma2 @ x    # value consistency
+if HAS_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_dp_solution_always_feasible(seed):
+        rng = np.random.default_rng(seed)
+        E = int(rng.integers(2, 9))
+        K = int(rng.integers(1, 4))
+        A, c, upsilon, sigma2 = _rand_problem(rng, E=E, K=K)
+        tables = build_tables(A, c)
+        s_limit = int(upsilon.sum())
+        x, info = solve_budgeted_dp(
+            jnp.asarray(upsilon, jnp.int32), jnp.asarray(sigma2, jnp.int32),
+            tables, s_limit, jnp.int32(s_limit))
+        x = np.asarray(x)
+        assert set(np.unique(x)).issubset({0, 1})
+        assert np.all(A @ x <= c)                       # capacity (1)
+        assert upsilon @ x >= int(info["s_star"])        # budget (16)
+        row = np.asarray(info["value_row"])
+        assert row[int(info["s_star"])] == sigma2 @ x    # value consistency
 
-
-@settings(max_examples=20, deadline=None)
-@given(st.integers(0, 2**31 - 1))
-def test_dp_value_row_monotone(seed):
-    """V(s) is non-increasing in s (larger budget ⇒ smaller feasible set)."""
-    rng = np.random.default_rng(seed)
-    A, c, upsilon, sigma2 = _rand_problem(rng)
-    tables = build_tables(A, c)
-    s_limit = int(upsilon.sum())
-    _, info = solve_budgeted_dp(
-        jnp.asarray(upsilon, jnp.int32), jnp.asarray(sigma2, jnp.int32),
-        tables, s_limit, jnp.int32(s_limit))
-    row = np.asarray(info["value_row"], dtype=np.int64)
-    ok = row > int(NEG) // 2
-    vals = row[ok]
-    assert np.all(np.diff(vals) <= 0)
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_dp_value_row_monotone(seed):
+        """V(s) is non-increasing in s (larger budget ⇒ smaller feasible set)."""
+        rng = np.random.default_rng(seed)
+        A, c, upsilon, sigma2 = _rand_problem(rng)
+        tables = build_tables(A, c)
+        s_limit = int(upsilon.sum())
+        _, info = solve_budgeted_dp(
+            jnp.asarray(upsilon, jnp.int32), jnp.asarray(sigma2, jnp.int32),
+            tables, s_limit, jnp.int32(s_limit))
+        row = np.asarray(info["value_row"], dtype=np.int64)
+        ok = row > int(NEG) // 2
+        vals = row[ok]
+        assert np.all(np.diff(vals) <= 0)
+else:
+    def test_hypothesis_extra_missing():
+        pytest.importorskip(
+            "hypothesis",
+            reason="property tests need the [test] extra (pip install .[test])")

@@ -1,42 +1,53 @@
 """Property tests for the evolving statistics (paper eqs. 7–15)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:        # optional [test] extra — property tests skip cleanly without it
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
 
 from repro.core.stats import (DELTA_VARIANTS, G_VARIANTS, s_cap_for_horizon,
                               scale_statistics, xi_of)
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.integers(1, 100_000), st.integers(1, 64))
-def test_xi_monotone_and_scale(t, m):
-    """ξ(t) = ⌈m/δ(t)⌉ is ≥ m and non-decreasing in t (δ decreasing)."""
-    x1 = int(xi_of(jnp.float32(t), m))
-    x2 = int(xi_of(jnp.float32(t + 50), m))
-    assert x1 >= m
-    assert x2 >= x1
+if HAS_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 100_000), st.integers(1, 64))
+    def test_xi_monotone_and_scale(t, m):
+        """ξ(t) = ⌈m/δ(t)⌉ is ≥ m and non-decreasing in t (δ decreasing)."""
+        x1 = int(xi_of(jnp.float32(t), m))
+        x2 = int(xi_of(jnp.float32(t + 50), m))
+        assert x1 >= m
+        assert x2 >= x1
 
-
-@settings(max_examples=25, deadline=None)
-@given(st.integers(2, 10_000), st.integers(1, 40),
-       st.integers(0, 2**31 - 1))
-def test_scaled_statistics_int32_bounds(t, m, seed):
-    """Υ̂, Σ̂² and the DP-sum bound stay far inside int32 (stats.py claim)."""
-    rng = np.random.default_rng(seed)
-    E = int(rng.integers(1, 64))
-    vhat = jnp.asarray(rng.uniform(0, 1, E), jnp.float32)
-    n = jnp.asarray(rng.integers(0, 1000, E), jnp.int32)
-    ups, sig, xi, s_limit = scale_statistics(vhat, n, jnp.float32(t), m)
-    ups, sig = np.asarray(ups), np.asarray(sig, np.int64)
-    assert np.all(ups >= 0) and np.all(ups <= int(xi))
-    assert np.all(sig > 0)
-    # the dominance invariant: one unexplored beats any m explored channels
-    explored = sig[np.asarray(n) > 0]
-    unexplored = sig[np.asarray(n) == 0]
-    if explored.size and unexplored.size:
-        assert unexplored.min() > m * explored.max() * 0.99
-    # DP sums of ≤ m+1 values stay in int32
-    assert (m + 1) * int(sig.max()) < 2**31
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(2, 10_000), st.integers(1, 40),
+           st.integers(0, 2**31 - 1))
+    def test_scaled_statistics_int32_bounds(t, m, seed):
+        """Υ̂, Σ̂² and the DP-sum bound stay far inside int32 (stats.py claim)."""
+        rng = np.random.default_rng(seed)
+        E = int(rng.integers(1, 64))
+        vhat = jnp.asarray(rng.uniform(0, 1, E), jnp.float32)
+        n = jnp.asarray(rng.integers(0, 1000, E), jnp.int32)
+        ups, sig, xi, s_limit = scale_statistics(vhat, n, jnp.float32(t), m)
+        ups, sig = np.asarray(ups), np.asarray(sig, np.int64)
+        assert np.all(ups >= 0) and np.all(ups <= int(xi))
+        assert np.all(sig > 0)
+        # the dominance invariant: one unexplored beats any m explored channels
+        explored = sig[np.asarray(n) > 0]
+        unexplored = sig[np.asarray(n) == 0]
+        if explored.size and unexplored.size:
+            assert unexplored.min() > m * explored.max() * 0.99
+        # DP sums of ≤ m+1 values stay in int32
+        assert (m + 1) * int(sig.max()) < 2**31
+else:
+    def test_hypothesis_extra_missing():
+        pytest.importorskip(
+            "hypothesis",
+            reason="property tests need the [test] extra (pip install .[test])")
 
 
 def test_s_cap_covers_horizon():

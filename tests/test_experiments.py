@@ -1,0 +1,244 @@
+"""Tests for the batched scenario-sweep engine (repro.experiments)."""
+import numpy as np
+import pytest
+
+from repro.core import (build_tables, generate_instance, make_esdp_policy,
+                        make_hswf_policy, simulate, simulate_batch)
+from repro.core.baselines import hswf_factory
+from repro.core.esdp import esdp_factory
+from repro.experiments import (GridPoint, SweepSpec, get_scenario, run_spec,
+                               scenario_names, sweep_scenario_param,
+                               unroll_scenario, write_csv, write_json)
+from repro.sched import ClusterSim, JobType, Slice, build_instance, rate_matrix
+
+
+@pytest.fixture(scope="module")
+def small():
+    inst = generate_instance(seed=3, n_ports=4, n_servers=10, edge_prob=0.3)
+    tables = build_tables(inst.A, inst.c)
+    return inst, tables
+
+
+# ---------------------------------------------------------------------------
+# vmapped batch ≡ per-seed loop (the acceptance bar for replacing the loops)
+# ---------------------------------------------------------------------------
+
+def test_batch_matches_per_seed_loop(small):
+    """simulate_batch row i reproduces simulate(seed=seeds[i]): decisions,
+    oracle, and regret bit-for-bit; realized welfare to 1 float32 ulp (XLA
+    reorders the Σ_e reduction under vmap)."""
+    inst, tables = small
+    T, seeds = 150, (11, 12, 13)
+    for factory in (esdp_factory(), hswf_factory()):
+        policy = factory(inst, T, tables)
+        batch = simulate_batch(inst, policy, T, seeds, tables=tables)
+        assert batch.sw.shape == (len(seeds), T)
+        for i, s in enumerate(seeds):
+            one = simulate(inst, policy, T, seed=s, tables=tables)
+            np.testing.assert_array_equal(batch.n_dispatched[i],
+                                          one.n_dispatched)
+            np.testing.assert_array_equal(batch.sw_oracle[i], one.sw_oracle)
+            np.testing.assert_array_equal(batch.regret[i], one.regret)
+            np.testing.assert_allclose(batch.sw[i], one.sw,
+                                       rtol=1e-6, atol=1e-6)
+
+
+def test_sweep_reproduces_per_seed_means():
+    """A fig6-style sweep spec gives the same per-seed means the old Python
+    loop over `simulate` produced (same instance seeds, same run seeds)."""
+    T, seeds = 120, (11, 12)
+    spec = SweepSpec(
+        name="fig6_mini", T=T, seeds=seeds,
+        policies={"esdp": esdp_factory(), "hswf": hswf_factory()},
+        grid=tuple(GridPoint(f"c_hi{c}",
+                             instance_kwargs={"seed": 2, "c_lo": 1, "c_hi": c})
+                   for c in (1, 2)),
+    )
+    rows = {(r.point, r.policy): r for r in run_spec(spec)}
+    for c in (1, 2):
+        inst = generate_instance(seed=2, c_lo=1, c_hi=c)
+        tables = build_tables(inst.A, inst.c)
+        for pname, policy in (("esdp", make_esdp_policy(inst, T, tables=tables)),
+                              ("hswf", make_hswf_policy(inst))):
+            loop_mean = float(np.mean(
+                [simulate(inst, policy, T, seed=s, tables=tables).asw[-1]
+                 for s in seeds]))
+            got = rows[(f"c_hi{c}", pname)].asw_mean
+            assert got == pytest.approx(loop_mean, rel=1e-5), (c, pname)
+
+
+# ---------------------------------------------------------------------------
+# scenario registry round-trip
+# ---------------------------------------------------------------------------
+
+def test_registry_has_named_regimes():
+    names = scenario_names()
+    assert len(names) >= 4
+    for required in ("iid", "markov_dvfs", "chronic_straggler",
+                     "transient_brownout"):
+        assert required in names
+
+
+def test_registry_roundtrip_simulates(small):
+    """Every registered scenario builds, simulates T=50 slots, and produces
+    finite welfare/regret."""
+    inst, tables = small
+    T = 50
+    policy = hswf_factory()(inst, T, tables)
+    for name in scenario_names():
+        scn = get_scenario(name)
+        assert scn.name == name
+        res = simulate_batch(inst, policy, T, (0, 1), tables=tables,
+                             scenario=scn)
+        assert res.sw.shape == (2, T)
+        for field in (res.sw, res.sw_oracle, res.regret):
+            assert np.isfinite(field).all(), name
+        assert np.all(res.sw >= 0), name
+
+
+def test_default_scenario_matches_no_scenario(small):
+    """scenario='iid' is the identity regime: bit-identical to scenario=None."""
+    inst, tables = small
+    policy = hswf_factory()(inst, 80, tables)
+    a = simulate_batch(inst, policy, 80, (3,), tables=tables)
+    b = simulate_batch(inst, policy, 80, (3,), tables=tables,
+                       scenario=get_scenario("iid"))
+    np.testing.assert_array_equal(a.sw, b.sw)
+    np.testing.assert_array_equal(a.regret, b.regret)
+
+
+def test_get_scenario_overrides_and_unknown():
+    scn = get_scenario("chronic_straggler", straggler_speed=0.1)
+    assert scn.params["straggler_speed"] == 0.1
+    with pytest.raises(KeyError):
+        get_scenario("no_such_regime")
+
+
+def test_degraded_speeds_lower_oracle_welfare(small):
+    """Fluctuated speeds reduce the omniscient-oracle welfare — the regimes
+    actually bite."""
+    inst, tables = small
+    T = 200
+    policy = hswf_factory()(inst, T, tables)
+    base = simulate_batch(inst, policy, T, (0, 1), tables=tables)
+    brown = simulate_batch(
+        inst, policy, T, (0, 1), tables=tables,
+        scenario=get_scenario("transient_brownout", t_start=1.0,
+                              t_end=float(T + 1), brownout_speed=0.3))
+    assert (brown.sw_oracle.sum() < base.sw_oracle.sum())
+    assert (brown.asw[:, -1].mean() < base.asw[:, -1].mean())
+
+
+# ---------------------------------------------------------------------------
+# lax.map scenario-parameter grids
+# ---------------------------------------------------------------------------
+
+def test_scenario_param_grid_matches_pointwise(small):
+    """One lax.map×vmap call over a severity grid equals building each
+    scenario separately (decision-level: dispatches and regret)."""
+    inst, tables = small
+    T, seeds = 60, (0, 1)
+    values = (0.3, 0.7, 1.0)
+    grid = sweep_scenario_param(inst, hswf_factory(), T, seeds,
+                                "chronic_straggler", "straggler_speed",
+                                values, tables=tables)
+    assert grid.sw.shape == (len(values), len(seeds), T)
+    policy = hswf_factory()(inst, T, tables)
+    for gi, v in enumerate(values):
+        scn = get_scenario("chronic_straggler", straggler_speed=v)
+        point = simulate_batch(inst, policy, T, seeds, tables=tables,
+                               scenario=scn)
+        np.testing.assert_array_equal(grid.n_dispatched[gi],
+                                      point.n_dispatched)
+        np.testing.assert_allclose(grid.regret[gi], point.regret,
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_scenario_param_grid_unknown_param(small):
+    inst, tables = small
+    with pytest.raises(KeyError):
+        sweep_scenario_param(inst, hswf_factory(), 10, (0,),
+                             "chronic_straggler", "bogus", (1.0,),
+                             tables=tables)
+
+
+# ---------------------------------------------------------------------------
+# result sinks
+# ---------------------------------------------------------------------------
+
+def test_csv_json_sinks(tmp_path, small):
+    inst, tables = small
+    spec = SweepSpec(
+        name="sink", T=30, seeds=(0, 1),
+        policies={"hswf": hswf_factory()},
+        instance_kwargs={"seed": 3, "n_ports": 4, "n_servers": 10,
+                         "edge_prob": 0.3},
+    )
+    rows = run_spec(spec)
+    csv_path = write_csv(rows, tmp_path / "out.csv")
+    json_path = write_json(rows, tmp_path / "out.json")
+    text = csv_path.read_text()
+    assert "asw_mean" in text and "hswf" in text
+    import json
+    recs = json.loads(json_path.read_text())
+    assert len(recs) == 1 and recs[0]["policy"] == "hswf"
+    assert recs[0]["seeds"] == "0;1"
+
+
+# ---------------------------------------------------------------------------
+# shared scenario interface with the cluster dispatcher
+# ---------------------------------------------------------------------------
+
+def _tiny_cluster():
+    slices = [Slice("pod-a", "v5e", 256, 32, 4),
+              Slice("pod-b", "v5e", 256, 32, 4),
+              Slice("pod-c", "v5p", 256, 32, 4)]
+    jobs = [JobType("train", "qwen2.5-32b", "train_4k", ("v5e", "v5p"),
+                    256, 32, 4, value_rate=1.0),
+            JobType("decode", "deepseek-v3-671b", "decode_32k", ("v5e",),
+                    256, 32, 4, value_rate=1.2)]
+    rates = rate_matrix(jobs, slices)
+    inst, _ = build_instance(slices, jobs, rates, seed=0)
+    return inst
+
+
+def test_cluster_sim_accepts_scenario():
+    """ClusterSim consumes a registry scenario through the same interface as
+    the jitted env: dead servers get zero dispatch share while down."""
+    inst = _tiny_cluster()
+    T = 120
+    scn = get_scenario("elastic_outage", frac=0.34, t_down=40.0, t_up=80.0)
+    _, _, alive = unroll_scenario(scn, T, inst.n_servers, seed=2)
+    dead_servers = np.nonzero(~alive.all(axis=0))[0]
+    assert dead_servers.size > 0           # the outage actually fired
+    out = ClusterSim(inst, T, scenario=scn, seed=2).run("esdp")
+    assert out.dispatch_share[39:79, dead_servers].sum() == 0.0
+
+
+def test_unroll_supports_per_port_arr_scale():
+    """The Scenario contract allows scalar or (L,) arr_scale; the host-side
+    unroll normalizes both to (T, n_ports)."""
+    import jax.numpy as jnp
+    from repro.core.env import Scenario
+
+    def step(params, state, t, n_servers):
+        return (state, jnp.asarray([1.0, 0.5, 0.0]),
+                jnp.ones(n_servers, jnp.float32),
+                jnp.ones(n_servers, dtype=bool))
+
+    scn = Scenario(name="per_port", init=lambda p, k, r: (), step=step)
+    arr, speed, alive = unroll_scenario(scn, 5, 4, n_ports=3)
+    assert arr.shape == (5, 3) and speed.shape == (5, 4)
+    np.testing.assert_allclose(arr[0], [1.0, 0.5, 0.0])
+    # scalar scales broadcast across ports
+    arr2, _, _ = unroll_scenario(get_scenario("mmpp_arrivals"), 5, 4,
+                                 n_ports=3)
+    assert arr2.shape == (5, 3)
+    assert (arr2 == arr2[:, :1]).all()
+
+
+def test_cluster_sim_rejects_conflicting_schedules():
+    inst = _tiny_cluster()
+    with pytest.raises(ValueError):
+        ClusterSim(inst, 10, speed_fn=lambda t: np.ones(inst.n_servers),
+                   scenario=get_scenario("iid"))
