@@ -1,0 +1,127 @@
+"""Timing harness for the Algorithm-2 solver backends.
+
+Times reference vs pallas-interpret vs pallas-compiled across an (E, C, S)
+grid of synthetic P4 instances and writes ``results/BENCH_dp.json``::
+
+    python -m benchmarks.dp_bench            # full grid
+    python -m benchmarks.dp_bench --smoke    # CI-sized grid
+    python -m benchmarks.dp_bench --runs 20 --out results/BENCH_dp.json
+
+The compiled-pallas leg only runs on a real TPU; elsewhere it is recorded
+as skipped (the interpreter leg still exercises the kernel's program).
+Per-point records include the one-off table/operand preparation cost so the
+amortization argument (prepare once per instance, solve every slot) is
+visible in the numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dp import build_tables
+from repro.core.solvers import get_solver
+from repro.kernels.budgeted_dp.ops import prepare_tables
+
+# (E, K, c_hi, u_hi): edges, device types, per-type capacity, Υ̂ range.
+# C = Π(c_k+1) and S = Σ Υ̂ + 1 are reported per point.
+GRID = [
+    (12, 2, 2, 4),
+    (24, 2, 3, 6),
+    (40, 3, 2, 6),
+    (64, 3, 3, 8),
+]
+SMOKE_GRID = [(12, 2, 2, 4), (24, 2, 3, 6)]
+
+
+def _make_problem(E: int, K: int, c_hi: int, u_hi: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    A = rng.integers(1, 3, (K, E))
+    c = rng.integers(1, c_hi + 1, K)
+    A = np.minimum(A, c[:, None])
+    ups = rng.integers(0, u_hi + 1, E).astype(np.int32)
+    sig = rng.integers(1, 5000, E).astype(np.int32)
+    return A, c, ups, sig
+
+
+def _time_solver(solver, ups, sig, tables, s_cap, runs: int):
+    # jit the whole contract call so both backends are measured compiled
+    # (the reference scan would otherwise run eagerly op-by-op)
+    fn = jax.jit(lambda u, s, lim: solver(u, s, tables, s_cap, lim, None))
+
+    def call():
+        x, info = fn(jnp.asarray(ups), jnp.asarray(sig), jnp.int32(s_cap))
+        jax.block_until_ready((x, info["s_star"]))
+        return x
+
+    t0 = time.perf_counter()
+    call()                                   # warmup: trace + compile
+    warmup_ms = (time.perf_counter() - t0) * 1e3
+    samples = []
+    for _ in range(runs):
+        t0 = time.perf_counter()
+        call()
+        samples.append((time.perf_counter() - t0) * 1e3)
+    return {
+        "warmup_ms": warmup_ms,
+        "mean_ms": statistics.fmean(samples),
+        "min_ms": min(samples),
+        "runs": runs,
+    }
+
+
+def bench(grid, runs: int) -> dict:
+    platform = jax.default_backend()
+    backends = ["reference", "pallas_interpret", "pallas"]
+    records = []
+    for (E, K, c_hi, u_hi) in grid:
+        A, c, ups, sig = _make_problem(E, K, c_hi, u_hi)
+        t0 = time.perf_counter()
+        tables = build_tables(A, c)
+        build_ms = (time.perf_counter() - t0) * 1e3
+        t0 = time.perf_counter()
+        prepare_tables(tables)               # one-off, cached on the tables
+        prepare_ms = (time.perf_counter() - t0) * 1e3
+        s_cap = int(ups.sum())
+        point = {"E": E, "K": K, "n_states": tables.n_states,
+                 "S": s_cap + 1, "build_tables_ms": build_ms,
+                 "prepare_operands_ms": prepare_ms, "backends": {}}
+        for name in backends:
+            if name == "pallas" and platform != "tpu":
+                point["backends"][name] = {
+                    "skipped": f"compiled pallas needs TPU (platform="
+                               f"{platform}); interpret leg covers the "
+                               f"kernel program"}
+                continue
+            solver = get_solver(name)
+            point["backends"][name] = _time_solver(
+                solver, ups, sig, tables, s_cap, runs)
+        records.append(point)
+        print(f"E={E} C={tables.n_states} S={s_cap + 1}: " + "  ".join(
+            f"{n}={r['mean_ms']:.2f}ms" if "mean_ms" in r else f"{n}=skip"
+            for n, r in point["backends"].items()), flush=True)
+    return {"platform": platform, "jax": jax.__version__, "grid": records}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="CI-sized grid")
+    ap.add_argument("--runs", type=int, default=10)
+    ap.add_argument("--out", default="results/BENCH_dp.json")
+    args = ap.parse_args()
+    out = bench(SMOKE_GRID if args.smoke else GRID,
+                max(1, args.runs if not args.smoke else min(args.runs, 3)))
+    path = pathlib.Path(args.out)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(out, indent=2))
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

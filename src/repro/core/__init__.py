@@ -2,7 +2,9 @@
 
 Public API:
   generate_instance / Instance          — bipartite-graph problem instances
-  build_tables / solve_budgeted_dp      — Algorithm 2 (budgeted DP)
+  build_tables / solve_budgeted_dp      — Algorithm 2 (budgeted DP, reference)
+  get_solver / resolve_solver / Solver  — pluggable Algorithm-2 backends
+                                          (reference | pallas | auto)
   make_esdp_policy / esdp_factory       — Algorithm 1 (ESDP)
   make_hswf_policy / make_lcf_policy / make_lwtf_policy — paper baselines
   hswf_factory / lcf_factory / lwtf_factory — sweep-consumable constructors
@@ -17,11 +19,13 @@ from .env import (Scenario, SimResult, default_scenario, simulate,
                   simulate_batch, simulate_grid)
 from .esdp import Policy, PolicyFactory, esdp_factory, make_esdp_policy
 from .graph import Instance, generate_instance
+from .solvers import SOLVER_NAMES, Solver, get_solver, resolve_solver
 from . import stats
 
 __all__ = [
     "Instance", "generate_instance",
     "DPTables", "build_tables", "solve_budgeted_dp", "oracle_knapsack",
+    "SOLVER_NAMES", "Solver", "get_solver", "resolve_solver",
     "Policy", "PolicyFactory", "make_esdp_policy", "esdp_factory",
     "make_hswf_policy", "make_lcf_policy", "make_lwtf_policy",
     "hswf_factory", "lcf_factory", "lwtf_factory",

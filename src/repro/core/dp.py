@@ -12,8 +12,9 @@ so the per-edge update is a (S × C) plane refresh: a *uniform shift* along s
 (Υ̂_i is a per-edge scalar) and a tiny gather along the capacity axis. That
 structure is exactly what `kernels/budgeted_dp` exploits on TPU (whole plane
 in VMEM, shift = dynamic slice, capacity gather = one-hot matmul on the MXU).
-This module is the pure-JAX reference implementation used by the simulator;
-the Pallas kernel is validated against `solve_budgeted_dp` in tests.
+This module is the pure-JAX *reference* backend of the pluggable solver
+registry (`core/solvers.py`); the Pallas kernel backend is validated against
+`solve_budgeted_dp` by the differential harness in tests/test_solver_equiv.py.
 
 Values are exact int32 (see stats.py for the bounds argument).
 """
@@ -130,7 +131,10 @@ def solve_budgeted_dp(upsilon, sigma2, tables: DPTables, s_cap: int, s_limit,
 
     v_row = V[:, tables.full_state]                          # (S,)
     s_vals = jnp.arange(s_cap + 1, dtype=jnp.int32)
-    ok = (v_row > NEG // 2) & (s_vals <= s_limit)
+    # feasible ⇔ value ≥ 0: Σ̂² ≥ 0 so reachable values are non-negative,
+    # while NEG-seeded chains stay < 0 for any partial sum < 2²⁹ (same
+    # classification the Pallas backend uses — keeps s* bit-identical).
+    ok = (v_row >= 0) & (s_vals <= s_limit)
     score = s_vals.astype(jnp.float32) + jnp.sqrt(
         jnp.maximum(v_row, 0).astype(jnp.float32))
     score = jnp.where(ok, score, FNEG)

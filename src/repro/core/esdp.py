@@ -6,6 +6,11 @@ and are passed to step as (vhat, n).  ``step`` receives two masks:
 ``eligible`` (E,) — channels dispatchable this slot (port arrival ∧ server
 alive, the scenario-aware Ω(t)) — and ``arrived`` (L,) — raw port arrivals,
 which waiting-time policies need even when a port's channels are all dead.
+
+The per-slot Algorithm-2 solve is pluggable: ``solver=`` names a backend
+from ``core.solvers`` ("reference" | "pallas" | "pallas_interpret" |
+"auto"/None — TPU → compiled Pallas kernel, CPU/GPU → reference scan, env
+var ``REPRO_DP_SOLVER`` overrides).  Backends are bit-exact interchangeable.
 """
 from __future__ import annotations
 
@@ -15,8 +20,9 @@ from typing import Any, Callable
 import jax.numpy as jnp
 
 from . import stats as stats_mod
-from .dp import DPTables, build_tables, solve_budgeted_dp
+from .dp import DPTables, build_tables
 from .graph import Instance
+from .solvers import Solver, get_solver
 
 __all__ = ["Policy", "PolicyFactory", "make_esdp_policy", "esdp_factory"]
 
@@ -30,6 +36,8 @@ class Policy:
 
 # Uniform constructor signature consumed by the sweep engine
 # (repro.experiments.sweep): factory(instance, T, tables) -> Policy.
+# Factories with ``accepts_solver = True`` additionally take a keyword
+# ``solver=`` so SweepSpec can redirect the Algorithm-2 backend.
 PolicyFactory = Callable[[Instance, int, "DPTables | None"], Policy]
 
 
@@ -39,15 +47,19 @@ def make_esdp_policy(
     delta_fn=stats_mod.delta_default,
     g_fn=stats_mod.g_default,
     tables: DPTables | None = None,
+    solver: "str | Solver | None" = None,
 ) -> Policy:
     """Build the ESDP policy for an instance over horizon T.
 
     Follows Algorithm 1 literally: scale statistics with δ(t) (Step 3),
     solve {P4(s,t)} by the DP and pick s* (Steps 4–8, Algorithm 2), then
     zero channels of ports with no arrival (Steps 9–16, constraint (2)).
+    ``solver`` selects the Algorithm-2 backend (see ``core.solvers``);
+    resolution happens once, at policy-build time.
     """
     if tables is None:
         tables = build_tables(instance.A, instance.c)
+    solve = get_solver(solver)
     m = instance.m
     s_cap = stats_mod.s_cap_for_horizon(T, m, delta_fn)
 
@@ -58,8 +70,8 @@ def make_esdp_policy(
         del arrived  # eligibility already folds in arrivals (and aliveness)
         upsilon, sigma2, _, s_limit = stats_mod.scale_statistics(
             vhat, n, t, m, g_fn=g_fn, delta_fn=delta_fn)
-        x, _ = solve_budgeted_dp(upsilon, sigma2, tables, s_cap, s_limit,
-                                 allowed=eligible)
+        x, _ = solve(upsilon, sigma2, tables, s_cap, s_limit,
+                     allowed=eligible)
         x = x * eligible.astype(jnp.int32)                 # Alg. 1 Steps 9–16
         return x, state
 
@@ -70,10 +82,17 @@ def esdp_factory(**overrides) -> PolicyFactory:
     """Sweep-consumable factory: ``esdp_factory(g_fn=...)(inst, T, tables)``.
 
     ``overrides`` are forwarded to :func:`make_esdp_policy` (``delta_fn``,
-    ``g_fn``); the horizon and DP tables come from the sweep grid point.
+    ``g_fn``, ``solver``); the horizon and DP tables come from the sweep grid
+    point.  A ``solver=`` passed at call time (e.g. from ``SweepSpec.solver``)
+    applies unless the factory itself pinned one.
     """
-    def make(instance: Instance, T: int, tables: DPTables | None = None) -> Policy:
-        return make_esdp_policy(instance, T, tables=tables, **overrides)
+    def make(instance: Instance, T: int, tables: DPTables | None = None,
+             solver: "str | Solver | None" = None) -> Policy:
+        kw = dict(overrides)
+        if solver is not None and "solver" not in kw:
+            kw["solver"] = solver
+        return make_esdp_policy(instance, T, tables=tables, **kw)
 
     make.policy_name = "esdp"
+    make.accepts_solver = True
     return make

@@ -1,0 +1,125 @@
+"""Pluggable backends for the per-slot Algorithm-2 solve (paper P4/P5).
+
+Every backend implements one contract::
+
+    solver(upsilon, sigma2, tables, s_cap, s_limit, allowed=None) -> (x, info)
+
+with ``x`` the (E,) int32 dispatch vector of Alg.-1 Step 8 and ``info`` a
+dict holding ``s_star`` (int32 scalar) and ``value_row`` — the (s_cap+1,)
+int32 DP value row with exactly ``dp.NEG`` at budget-infeasible entries.
+Backends are *bit-exact interchangeable*: identical inputs yield identical
+``x``, ``s_star``, and ``value_row`` (the differential-testing harness in
+``tests/test_solver_equiv.py`` enforces this against brute force).
+
+Registry:
+  reference        — pure-JAX lax.scan over edges, exact int32 values
+                     (``core.dp.solve_budgeted_dp``).
+  pallas           — the VMEM-resident Pallas kernel
+                     (``kernels.budgeted_dp``); compiled on TPU, Pallas
+                     interpreter elsewhere (never silently interpreted on
+                     real TPU hardware).
+  pallas_interpret — the same kernel forced through the interpreter on any
+                     backend; what differential tests run on CPU CI.
+  auto             — TPU → pallas (compiled), CPU/GPU → reference.
+
+Selection: ``get_solver(None)`` consults the ``REPRO_DP_SOLVER`` env var and
+falls back to ``auto``; an explicit name in code always wins over the env
+var, except that explicit ``"auto"`` lets the env var refine it (so a sweep
+declared with the default can be redirected from the shell).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .dp import NEG, DPTables, solve_budgeted_dp
+
+__all__ = ["SOLVER_ENV_VAR", "SOLVER_NAMES", "Solver", "resolve_solver",
+           "get_solver"]
+
+SOLVER_ENV_VAR = "REPRO_DP_SOLVER"
+SOLVER_NAMES = ("auto", "reference", "pallas", "pallas_interpret")
+
+
+def resolve_solver(name: str | None = None,
+                   platform: str | None = None) -> str:
+    """Resolve a requested backend to a concrete one.
+
+    Returns ``"reference"``, ``"pallas"``, or ``"pallas_interpret"``.
+    ``name=None``/``"auto"`` consults ``$REPRO_DP_SOLVER`` first, then picks
+    by platform: TPU → compiled pallas, anything else → reference.
+    ``platform`` overrides ``jax.default_backend()`` (unit-testable).
+    """
+    if name is None or name == "auto":
+        name = os.environ.get(SOLVER_ENV_VAR) or "auto"
+    if name == "auto":
+        platform = platform or jax.default_backend()
+        name = "pallas" if platform == "tpu" else "reference"
+    if name not in ("reference", "pallas", "pallas_interpret"):
+        raise ValueError(
+            f"unknown DP solver backend {name!r}; choose from {SOLVER_NAMES}")
+    return name
+
+
+@dataclasses.dataclass(frozen=True, eq=False)   # identity hash — jit-static-safe
+class Solver:
+    """A resolved Algorithm-2 backend (callable with the shared contract)."""
+
+    name: str                    # concrete backend name
+    interpret: bool | None       # kernel mode (None = auto); reference: None
+    _fn: Callable = dataclasses.field(repr=False)
+
+    def __call__(self, upsilon, sigma2, tables: DPTables, s_cap: int,
+                 s_limit, allowed=None):
+        return self._fn(upsilon, sigma2, tables, s_cap, s_limit, allowed)
+
+
+def _reference_solve(upsilon, sigma2, tables, s_cap, s_limit, allowed):
+    x, info = solve_budgeted_dp(upsilon, sigma2, tables, s_cap, s_limit,
+                                allowed=allowed)
+    row = info["value_row"]
+    return x, {"s_star": info["s_star"],
+               "value_row": jnp.where(row >= 0, row, NEG)}
+
+
+def _make_pallas_solve(interpret: bool | None):
+    from ..kernels.budgeted_dp.ops import solve_budgeted_dp_pallas
+
+    def solve(upsilon, sigma2, tables, s_cap, s_limit, allowed):
+        x, info = solve_budgeted_dp_pallas(
+            upsilon, sigma2, tables, s_cap, s_limit, allowed=allowed,
+            interpret=interpret)
+        row = info["value_row"]                     # f32, kernel NEG sentinel
+        row = jnp.where(row >= 0, row, float(NEG)).astype(jnp.int32)
+        return x, {"s_star": info["s_star"], "value_row": row}
+
+    return solve
+
+
+_CACHE: dict[str, Solver] = {}
+
+
+def get_solver(name: "str | Solver | None" = None,
+               platform: str | None = None) -> Solver:
+    """Resolve ``name`` (see :func:`resolve_solver`) and return the Solver.
+
+    Instances are cached per concrete backend, so repeated policy builds
+    share one identity (jit-static-friendly)."""
+    if isinstance(name, Solver):
+        return name
+    concrete = resolve_solver(name, platform)
+    solver = _CACHE.get(concrete)
+    if solver is None:
+        if concrete == "reference":
+            solver = Solver(name=concrete, interpret=None,
+                            _fn=_reference_solve)
+        else:
+            interpret = True if concrete == "pallas_interpret" else None
+            solver = Solver(name=concrete, interpret=interpret,
+                            _fn=_make_pallas_solve(interpret))
+        _CACHE[concrete] = solver
+    return solver

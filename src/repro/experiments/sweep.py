@@ -58,12 +58,17 @@ POLICY_FACTORIES = {
 
 def default_policies(g_fn=None, tiebreak: float = 1e-4,
                      names: Sequence[str] = ("esdp", "hswf", "lcf", "lwtf"),
-                     ) -> dict[str, PolicyFactory]:
-    """The paper's four policies as a sweep-ready dict (Fig. 2–4 lineup)."""
+                     solver: str | None = None) -> dict[str, PolicyFactory]:
+    """The paper's four policies as a sweep-ready dict (Fig. 2–4 lineup).
+
+    ``solver`` pins the Algorithm-2 backend for ESDP (see ``core.solvers``)."""
     out: dict[str, PolicyFactory] = {}
     for n in names:
         if n == "esdp":
-            out[n] = esdp_factory(**({"g_fn": g_fn} if g_fn else {}))
+            kw = {"g_fn": g_fn} if g_fn else {}
+            if solver is not None:
+                kw["solver"] = solver
+            out[n] = esdp_factory(**kw)
         else:
             out[n] = POLICY_FACTORIES[n](tiebreak=tiebreak)
     return out
@@ -91,6 +96,9 @@ class SweepSpec:
     scenario_params: Mapping = dataclasses.field(default_factory=dict)
     instance_kwargs: Mapping = dataclasses.field(default_factory=dict)
     grid: tuple[GridPoint, ...] = (GridPoint("default"),)
+    # Algorithm-2 backend for solver-aware policies (core.solvers name);
+    # None keeps each factory's own default (env var / auto resolution).
+    solver: str | None = None
 
     def smoke(self, T: int = 120, seeds: tuple[int, ...] = (0,)) -> "SweepSpec":
         """A cheap variant for CI smoke runs: shrink horizon and seed batch."""
@@ -120,12 +128,14 @@ class SweepRow:
     result: SimResult          # stacked (S, T) traces
     instance: Instance
     tables: DPTables
+    solver: str | None = None  # Algorithm-2 backend requested by the spec
 
     def to_record(self) -> dict:
         """Sink-friendly flat record (drops the arrays)."""
         return {
             "spec": self.spec, "point": self.point, "policy": self.policy,
             "scenario": self.scenario, "T": self.T,
+            "solver": self.solver or "default",
             "seeds": ";".join(str(s) for s in self.seeds),
             "asw_mean": self.asw_mean, "asw_ci95": self.asw_ci95,
             "regret_mean": self.regret_mean, "regret_ci95": self.regret_ci95,
@@ -178,14 +188,18 @@ def run_spec(spec: SweepSpec) -> list[SweepRow]:
         scenario = _resolve_scenario(spec.scenario, spec.scenario_params,
                                      point.scenario_params)
         for pname, factory in spec.policies.items():
-            policy = factory(instance, T, tables)
+            if spec.solver is not None and getattr(factory, "accepts_solver",
+                                                   False):
+                policy = factory(instance, T, tables, solver=spec.solver)
+            else:
+                policy = factory(instance, T, tables)
             res = simulate_batch(instance, policy, T, spec.seeds,
                                  tables=tables, scenario=scenario)
             rows.append(SweepRow(
                 spec=spec.name, point=point.label, policy=pname,
                 scenario=scenario.name, T=T, seeds=tuple(spec.seeds),
                 result=res, instance=instance, tables=tables,
-                **summarize(res)))
+                solver=spec.solver, **summarize(res)))
     return rows
 
 

@@ -7,11 +7,20 @@ TPU-native design (DESIGN.md §4):
     first U_MAX rows hold the clamp row V[0]; a dynamic-START static-SIZE
     slice (pl.ds) then reads the shifted window — no gather op at all;
   * the capacity-state gather becomes a tiny (C × C) one-hot MATMUL on the
-    MXU — the standard TPU idiom replacing GPU warp gathers.
+    MXU — the standard TPU idiom replacing GPU warp gathers;
+  * backtrack decisions are BIT-PACKED into int32 lanes: word ⌊e/32⌋ of the
+    (⌈E/32⌉, S, C) output holds bit (e mod 32) for edge e.  At production
+    sizes the unpacked (E, S, C) f32 tensor dominated VMEM (E=64, S=512,
+    C=256 ⇒ 32 MB — over the ~16 MB/core budget); packing is 32× smaller.
 
 Arithmetic is f32 with integer values; exactness holds for values < 2²⁴
-(ops.py asserts the bound — see core/stats.py for why defaults are ≪ 2²⁴).
-Decisions for the backtrack are written as an (E, S, C) f32 0/1 tensor.
+(ops.py enforces the bound — see core/stats.py for why defaults are ≪ 2²⁴).
+
+Backend resolution: ``interpret=None`` (the default) compiles on TPU and
+falls back to the Pallas interpreter elsewhere — the kernel is never
+silently interpreted on real TPU hardware.  Pass an explicit bool to force
+either mode (``interpret=True`` is how the differential tests exercise the
+kernel logic on CPU CI).
 """
 from __future__ import annotations
 
@@ -22,13 +31,36 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+__all__ = ["NEG", "resolve_interpret", "packed_words", "dp_forward_pallas"]
+
 NEG = -float(2 ** 24)
+
+
+def resolve_interpret(interpret: bool | None = None,
+                      platform: str | None = None) -> bool:
+    """Resolve the kernel execution mode.
+
+    ``None`` → auto: compiled (``False``) on TPU, interpreter (``True``)
+    everywhere else.  ``platform`` overrides ``jax.default_backend()`` so the
+    resolution table is unit-testable without the hardware.
+    """
+    if interpret is not None:
+        return bool(interpret)
+    platform = platform or jax.default_backend()
+    return platform != "tpu"
+
+
+def packed_words(n_edges: int) -> int:
+    """Leading dim of the packed decision tensor: ⌈E/32⌉ int32 words."""
+    return (n_edges + 31) // 32
 
 
 def _dp_kernel(ups_ref, sig_ref, feas_ref, next_oh_ref, v0_ref,
                vout_ref, dec_ref, vpad_ref, *, n_edges: int, u_max: int):
     S, C = v0_ref.shape
+    W = dec_ref.shape[0]
     vout_ref[:, :] = v0_ref[:, :]
+    dec_ref[:, :, :] = jnp.zeros((W, S, C), jnp.int32)
 
     def edge_step(j, _):
         e = n_edges - 1 - j
@@ -49,8 +81,13 @@ def _dp_kernel(ups_ref, sig_ref, feas_ref, next_oh_ref, v0_ref,
 
         feas = feas_ref[e, :]                              # (C,) 0/1
         take = jnp.where(feas[None, :] > 0, take, NEG)
-        dec = (take > V).astype(jnp.float32)
-        dec_ref[e, :, :] = dec
+        dec = (take > V).astype(jnp.int32)
+        # OR edge e's decision bit into its int32 word (bit = e mod 32;
+        # multiply by the power of two — exact, and 1<<31 wraps to the sign
+        # bit whose pattern is still the bit we want)
+        bit = jnp.left_shift(jnp.int32(1), e % 32)
+        word = dec_ref[pl.ds(e // 32, 1), :, :]
+        dec_ref[pl.ds(e // 32, 1), :, :] = word | (dec * bit)[None]
         vout_ref[:, :] = jnp.maximum(V, take)
         return 0
 
@@ -59,16 +96,22 @@ def _dp_kernel(ups_ref, sig_ref, feas_ref, next_oh_ref, v0_ref,
 
 @functools.partial(jax.jit, static_argnames=("n_edges", "u_max", "interpret"))
 def dp_forward_pallas(upsilon, sigma2, feasible, next_onehot, v0,
-                      *, n_edges: int, u_max: int, interpret: bool = True):
+                      *, n_edges: int, u_max: int,
+                      interpret: bool | None = None):
     """upsilon/sigma2: (E,) i32; feasible: (E, C) f32 0/1;
     next_onehot: (E, C, C) f32 (one_hot of next-state ids, axis 1 = source);
-    v0: (S, C) f32. Returns (V_final (S, C) f32, decisions (E, S, C) f32)."""
+    v0: (S, C) f32.  Returns (V_final (S, C) f32,
+    decisions (⌈E/32⌉, S, C) i32 — bit (e%32) of word (e//32) is edge e).
+
+    ``interpret=None`` resolves via :func:`resolve_interpret` (compiled on
+    TPU, interpreter elsewhere)."""
     S, C = v0.shape
+    W = packed_words(n_edges)
     kernel = functools.partial(_dp_kernel, n_edges=n_edges, u_max=u_max)
     return pl.pallas_call(
         kernel,
         out_shape=(jax.ShapeDtypeStruct((S, C), jnp.float32),
-                   jax.ShapeDtypeStruct((n_edges, S, C), jnp.float32)),
+                   jax.ShapeDtypeStruct((W, S, C), jnp.int32)),
         in_specs=[
             pl.BlockSpec((n_edges,), lambda: (0,)),
             pl.BlockSpec((n_edges,), lambda: (0,)),
@@ -77,7 +120,7 @@ def dp_forward_pallas(upsilon, sigma2, feasible, next_onehot, v0,
             pl.BlockSpec((S, C), lambda: (0, 0)),
         ],
         out_specs=(pl.BlockSpec((S, C), lambda: (0, 0)),
-                   pl.BlockSpec((n_edges, S, C), lambda: (0, 0, 0))),
+                   pl.BlockSpec((W, S, C), lambda: (0, 0, 0))),
         scratch_shapes=[pltpu.VMEM((u_max + S, C), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(upsilon, sigma2, feasible, next_onehot, v0)

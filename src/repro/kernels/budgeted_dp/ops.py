@@ -2,7 +2,25 @@
 
 Drop-in equivalent of core.dp.solve_budgeted_dp (tested for exact
 agreement): prepares the one-hot gather operands, runs the VMEM-resident
-kernel, then applies the eq.-17 s* rule and backtracks in plain jnp.
+kernel, then applies the eq.-17 s* rule and backtracks in plain jnp from
+the bit-packed decision words.
+
+Batch-readiness (what makes this usable from the hot path):
+  * kernel operands are built ONCE per DPTables instance and cached on the
+    tables object — repeated per-slot calls (and every trace of a jitted
+    scan) reuse the same constants instead of re-deriving an (E, C, C)
+    one-hot on the host;
+  * the whole wrapper is vmap-safe: ``simulate_batch``/``simulate_grid``
+    can map it over seed batches (Pallas batches the call; the cached
+    operands stay unbatched constants);
+  * decisions come back packed (⌈E/32⌉, S, C) int32 — 32× less memory than
+    the old (E, S, C) f32 tensor.
+
+VALUE_BOUND contract: kernel arithmetic is f32, exact for integers < 2²⁴.
+Whenever this wrapper is called with CONCRETE statistics it verifies that no
+capacity-feasible subset can accumulate a value ≥ 2²⁴ and raises otherwise;
+traced calls (inside jit/scan) skip the check, which is why
+``tests/test_solver_equiv.py`` pins the default schedules under the bound.
 """
 from __future__ import annotations
 
@@ -13,22 +31,76 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...core.dp import DPTables
-from .kernel import NEG, dp_forward_pallas
+from .kernel import NEG, dp_forward_pallas, resolve_interpret
 
-__all__ = ["prepare_tables", "solve_budgeted_dp_pallas"]
+__all__ = ["VALUE_BOUND", "prepare_tables", "max_achievable_value",
+           "solve_budgeted_dp_pallas", "resolve_interpret"]
 
 VALUE_BOUND = 2 ** 24          # f32-exact integer domain (kernel contract)
 
+_OPERAND_CACHE_ATTR = "_pallas_operands"
 
-def prepare_tables(tables: DPTables):
-    """(feasible (E,C) f32, next_onehot (E,C,C) f32) kernel operands."""
+
+def _build_operands(tables: DPTables):
+    # cached as HOST numpy: a jnp array materialized during a trace would be
+    # a tracer, and caching a tracer across calls leaks it out of its trace
     feas = np.asarray(tables.feasible).T.astype(np.float32)        # (E, C)
     nxt = np.asarray(tables.next_state).T                          # (E, C)
-    C = tables.n_states
-    oh = np.zeros((nxt.shape[0], C, C), np.float32)
-    for e in range(nxt.shape[0]):
-        oh[e][nxt[e], np.arange(C)] = 1.0       # oh[e, src, dst]
-    return jnp.asarray(feas), jnp.asarray(oh)
+    E, C = nxt.shape
+    oh = np.zeros((E, C, C), np.float32)
+    oh[np.arange(E)[:, None], nxt, np.arange(C)[None, :]] = 1.0    # oh[e, src, dst]
+    return feas, oh
+
+
+def prepare_tables(tables: DPTables):
+    """(feasible (E,C) f32, next_onehot (E,C,C) f32) kernel operands.
+
+    Cached on the DPTables instance: the first call pays the host-side
+    one-hot construction, every later call (e.g. per slot inside the ESDP
+    hot path, or per trace of a batched scan) is a dict lookup.
+    """
+    cached = getattr(tables, _OPERAND_CACHE_ATTR, None)
+    if cached is None:
+        cached = _build_operands(tables)
+        object.__setattr__(tables, _OPERAND_CACHE_ATTR, cached)
+    return cached
+
+
+def max_achievable_value(sigma2, tables: DPTables) -> int:
+    """Upper bound on any DP partial sum: max Σ̂²ᵀx over capacity-feasible x.
+
+    Per-edge requirements are recovered from the transition out of the
+    full-capacity state; if every usable edge consumes ≥ 1 device the
+    selection size is capped by Σ_k c_k, else by E.  The top-k sum of Σ̂²
+    then bounds every value the kernel can ever materialize (feasible or
+    not — infeasible states only accumulate subsets of the same sums).
+    """
+    sig = np.asarray(sigma2, dtype=np.int64)
+    E = sig.shape[0]
+    usable = np.asarray(tables.feasible)[tables.full_state]        # (E,)
+    if not usable.any():
+        return 0
+    cap = np.asarray(tables.cap_of_state, dtype=np.int64)
+    c = np.asarray(tables.radices, dtype=np.int64) - 1
+    nxt = np.asarray(tables.next_state)[tables.full_state]         # (E,)
+    req_total = (c[None, :] - cap[nxt]).sum(axis=1)                # (E,)
+    if np.all(req_total[usable] >= 1):
+        k = min(E, int(c.sum()))
+    else:
+        k = E
+    top = np.sort(sig[usable])[::-1][:k]
+    return int(top.sum())
+
+
+def _check_value_bound(sigma2, tables: DPTables) -> None:
+    if isinstance(sigma2, jax.core.Tracer):
+        return                      # traced call — bound pinned by tests
+    bound = max_achievable_value(sigma2, tables)
+    if bound >= VALUE_BOUND:
+        raise ValueError(
+            f"budgeted-DP values can reach {bound} ≥ 2^24: the Pallas "
+            f"kernel's f32 arithmetic is no longer exact. Rescale Σ̂² or "
+            f"use the 'reference' (int32) solver backend.")
 
 
 @functools.partial(jax.jit,
@@ -47,7 +119,10 @@ def _solve(upsilon, sigma2, feasible, next_onehot, s_limit,
 
     v_row = V[:, full_state]
     s_vals = jnp.arange(S, dtype=jnp.int32)
-    ok = (v_row > NEG / 2) & (s_vals <= s_limit)
+    # feasible ⇔ value ≥ 0: Σ̂² ≥ 0 so reachable values are non-negative,
+    # while NEG-seeded chains stay < 0 for any partial sum < 2²⁴ (the
+    # VALUE_BOUND contract) — sharper than thresholding at NEG/2.
+    ok = (v_row >= 0) & (s_vals <= s_limit)
     score = s_vals.astype(jnp.float32) + jnp.sqrt(jnp.maximum(v_row, 0.0))
     s_star = jnp.argmax(jnp.where(ok, score, -jnp.inf)).astype(jnp.int32)
 
@@ -55,7 +130,8 @@ def _solve(upsilon, sigma2, feasible, next_onehot, s_limit,
 
     def back(e, carry):
         s, cs, x = carry
-        d = decisions[e, s, cs] > 0.5
+        word = decisions[e // 32, s, cs]
+        d = ((word >> (e % 32)) & 1) > 0
         x = x.at[e].set(d.astype(jnp.int32))
         s_new = jnp.maximum(s - upsilon[e], 0)
         return (jnp.where(d, s_new, s),
@@ -69,8 +145,13 @@ def _solve(upsilon, sigma2, feasible, next_onehot, s_limit,
 
 def solve_budgeted_dp_pallas(upsilon, sigma2, tables: DPTables, s_cap: int,
                              s_limit, u_max: int | None = None,
-                             allowed=None, interpret: bool = True):
-    """Same contract as core.dp.solve_budgeted_dp (+ interpret switch)."""
+                             allowed=None, interpret: bool | None = None):
+    """Same contract as core.dp.solve_budgeted_dp (+ interpret switch).
+
+    ``interpret=None`` auto-resolves (compiled on TPU, interpreter
+    elsewhere); ``u_max=None`` uses the always-safe s_cap+1 shift padding.
+    """
+    _check_value_bound(sigma2, tables)
     feas, oh = prepare_tables(tables)
     if allowed is not None:
         feas = feas * jnp.asarray(allowed, jnp.float32)[:, None]
@@ -80,5 +161,5 @@ def solve_budgeted_dp_pallas(upsilon, sigma2, tables: DPTables, s_cap: int,
         jnp.asarray(upsilon, jnp.int32), jnp.asarray(sigma2, jnp.int32),
         feas, oh, jnp.asarray(s_limit, jnp.int32),
         s_cap=s_cap, u_max=int(u_max), full_state=tables.full_state,
-        interpret=interpret)
+        interpret=resolve_interpret(interpret))
     return x, {"s_star": s_star, "value_row": v_row}

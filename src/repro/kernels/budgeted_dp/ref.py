@@ -1,15 +1,16 @@
 """Pure-jnp oracle for the budgeted-DP kernel (mirrors core/dp._dp_forward
-in the kernel's f32 value domain)."""
+in the kernel's f32 value domain, including the bit-packed decision words)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from .kernel import NEG
+from .kernel import NEG, packed_words
 
 
 def dp_forward_ref(upsilon, sigma2, feasible, next_onehot, v0):
-    """Same contract as kernel.dp_forward_pallas, computed with jnp gathers."""
+    """Same contract as kernel.dp_forward_pallas, computed with jnp gathers:
+    returns (V (S, C) f32, decisions (⌈E/32⌉, S, C) i32 bit-packed)."""
     E = upsilon.shape[0]
     S, C = v0.shape
     rows = jnp.arange(S)
@@ -22,9 +23,17 @@ def dp_forward_ref(upsilon, sigma2, feasible, next_onehot, v0):
         take = jnp.take(shifted, next_idx[e], axis=1) + sigma2[e].astype(
             jnp.float32)
         take = jnp.where(feasible[e][None, :] > 0, take, NEG)
-        dec = (take > V).astype(jnp.float32)
+        dec = (take > V).astype(jnp.int32)
         return jnp.maximum(V, take), dec
 
     V, decs = jax.lax.scan(body, v0, jnp.arange(E))
-    decisions = decs[::-1]                            # index by edge id
-    return V, decisions
+    decs = decs[::-1]                                 # index by edge id
+    # pack edge bits into int32 words: bit (e % 32) of word (e // 32)
+    W = packed_words(E)
+    pad = W * 32 - E
+    decs = jnp.concatenate(
+        [decs, jnp.zeros((pad, S, C), jnp.int32)], axis=0)
+    shifts = jnp.arange(32, dtype=jnp.int32)[None, :, None, None]
+    packed = (decs.reshape(W, 32, S, C) << shifts).sum(
+        axis=1).astype(jnp.int32)
+    return V, packed

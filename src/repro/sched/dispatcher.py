@@ -23,9 +23,10 @@ import numpy as np
 
 from ..core import build_tables, stats as stats_mod
 from ..core.baselines import greedy_pack
-from ..core.dp import oracle_knapsack, solve_budgeted_dp
+from ..core.dp import oracle_knapsack
 from ..core.env import Scenario
 from ..core.graph import Instance
+from ..core.solvers import Solver, get_solver
 
 __all__ = ["ClusterSim", "SimOutput"]
 
@@ -49,12 +50,14 @@ class ClusterSim:
                  speed_fn: Optional[Callable[[int], np.ndarray]] = None,
                  alive_fn: Optional[Callable[[int], np.ndarray]] = None,
                  g_fn=stats_mod.g_logt_only, seed: int = 0,
-                 scenario: Optional[Scenario] = None):
+                 scenario: Optional[Scenario] = None,
+                 solver: "str | Solver | None" = None):
         self.inst = instance
         self.T = T
         self.tables = build_tables(instance.A, instance.c)
         self.g_fn = g_fn
         self.seed = seed
+        self.solver = get_solver(solver)   # Algorithm-2 backend (core.solvers)
         R = instance.n_servers
         self.arr_scale = np.ones((T, instance.n_ports), np.float32)
         if scenario is not None:
@@ -113,7 +116,7 @@ class ClusterSim:
         share = np.zeros((self.T, R), np.float32)
 
         jit_dp = jax.jit(
-            lambda u, s, lim, al: solve_budgeted_dp(
+            lambda u, s, lim, al: self.solver(
                 u, s, tables, self.s_cap, lim, allowed=al)[0])
         jit_oracle = jax.jit(
             lambda v, al: oracle_knapsack(v, tables, al)[0])

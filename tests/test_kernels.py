@@ -9,7 +9,9 @@ from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.ssd.ops import ssd_op
 from repro.kernels.ssd.ref import ssd_ref
 from repro.core.dp import build_tables, solve_budgeted_dp
-from repro.kernels.budgeted_dp.ops import solve_budgeted_dp_pallas
+from repro.kernels.budgeted_dp.kernel import NEG, dp_forward_pallas
+from repro.kernels.budgeted_dp.ops import prepare_tables, solve_budgeted_dp_pallas
+from repro.kernels.budgeted_dp.ref import dp_forward_ref
 
 
 # ---------------------------------------------------------------------------
@@ -100,6 +102,57 @@ def test_budgeted_dp_matches_core(seed):
                                       u_max=int(ups.max() + 1))
     assert int(i1["s_star"]) == int(i2["s_star"])
     np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+
+
+@pytest.mark.parametrize("E", [7, 32, 40])   # 1 word, exact fit, 2 words
+def test_budgeted_dp_kernel_packed_decisions_match_ref(E):
+    """The kernel's bit-packed (⌈E/32⌉, S, C) i32 decision words equal the
+    pure-jnp oracle's, including across the word boundary (bit 31 → sign)."""
+    rng = np.random.default_rng(11)
+    K = 2
+    A = rng.integers(1, 3, (K, E))
+    c = rng.integers(1, 3, K)
+    A = np.minimum(A, c[:, None])
+    ups = rng.integers(0, 5, E).astype(np.int32)
+    sig = rng.integers(1, 3000, E).astype(np.int32)
+    tables = build_tables(A, c)
+    s_cap = int(ups.sum())
+    feas, oh = prepare_tables(tables)
+    feas, oh = jnp.asarray(feas), jnp.asarray(oh)
+    v0 = jnp.full((s_cap + 1, tables.n_states), NEG,
+                  jnp.float32).at[0, :].set(0.0)
+    V_k, dec_k = dp_forward_pallas(jnp.asarray(ups), jnp.asarray(sig), feas,
+                                   oh, v0, n_edges=E, u_max=int(ups.max() + 1),
+                                   interpret=True)
+    V_r, dec_r = dp_forward_ref(jnp.asarray(ups), jnp.asarray(sig), feas,
+                                oh, v0)
+    assert dec_k.shape == ((E + 31) // 32, s_cap + 1, tables.n_states)
+    assert dec_k.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(V_k), np.asarray(V_r))
+    np.testing.assert_array_equal(np.asarray(dec_k), np.asarray(dec_r))
+
+
+def test_budgeted_dp_value_rows_share_feasibility_contract():
+    """Normalized value rows agree across backends: same feasibility mask
+    (value ≥ 0) and identical values on it, despite different NEG sentinels."""
+    rng = np.random.default_rng(12)
+    E, K = 12, 2
+    A = rng.integers(1, 3, (K, E))
+    c = rng.integers(1, 4, K)
+    A = np.minimum(A, c[:, None])
+    ups = rng.integers(0, 6, E)
+    sig = rng.integers(1, 5000, E)
+    tables = build_tables(A, c)
+    s_cap = int(ups.sum())
+    _, i1 = solve_budgeted_dp(jnp.asarray(ups, jnp.int32),
+                              jnp.asarray(sig, jnp.int32), tables, s_cap,
+                              jnp.int32(s_cap))
+    _, i2 = solve_budgeted_dp_pallas(ups, sig, tables, s_cap, s_cap,
+                                     interpret=True)
+    r1 = np.asarray(i1["value_row"]).astype(np.int64)
+    r2 = np.asarray(i2["value_row"]).astype(np.int64)
+    np.testing.assert_array_equal(r1 >= 0, r2 >= 0)
+    np.testing.assert_array_equal(r1[r1 >= 0], r2[r2 >= 0])
 
 
 def test_budgeted_dp_with_arrival_mask():

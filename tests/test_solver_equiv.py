@@ -1,0 +1,392 @@
+"""Differential-testing harness for the pluggable Algorithm-2 backends.
+
+The only trustworthy spec for a hand-written kernel against an exact-integer
+DP is agreement with an oracle: brute-force enumeration over all 2^E subsets
+(the ground truth for P4/eq. 17) and the pure-JAX reference DP.  Property
+tests (hypothesis, optional [test] extra) generate random small instances
+(E ≤ 12, K ≤ 3) and require *bit-exact* agreement on x, s*, and the value
+row across backends, random ``allowed`` masks, ``u_max`` edge cases, and
+``s_limit < s_cap`` — plus end-to-end trace invariance through ``simulate``,
+``simulate_batch``, and a fig6-style ``SweepSpec``.
+"""
+import dataclasses
+import itertools
+
+import numpy as np
+import pytest
+
+try:        # optional [test] extra — property tests skip cleanly without it
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+import jax.numpy as jnp
+
+from repro.core import (build_tables, generate_instance, make_esdp_policy,
+                        simulate, simulate_batch)
+from repro.core import stats as stats_mod
+from repro.core.baselines import hswf_factory
+from repro.core.dp import NEG, oracle_knapsack, solve_budgeted_dp
+from repro.core.esdp import esdp_factory
+from repro.core.solvers import (SOLVER_ENV_VAR, get_solver, resolve_solver)
+from repro.experiments import GridPoint, SweepSpec, get_scenario, run_spec
+from repro.kernels.budgeted_dp.kernel import resolve_interpret
+from repro.kernels.budgeted_dp.ops import (VALUE_BOUND, max_achievable_value,
+                                           solve_budgeted_dp_pallas)
+
+REF = get_solver("reference")
+PAL = get_solver("pallas_interpret")
+
+
+# ---------------------------------------------------------------------------
+# oracles
+# ---------------------------------------------------------------------------
+
+def enumerate_value_row(upsilon, sigma2, A, c, s_cap, allowed=None):
+    """Ground-truth {P4(s)}_s: exhaustive max Σ̂²ᵀx over all 2^E subsets with
+    Ax ≤ c and Υ̂ᵀx ≥ s, for every s — NEG where no subset reaches budget s."""
+    E = len(upsilon)
+    bits = ((np.arange(2 ** E)[:, None] >> np.arange(E)[None, :]) & 1
+            ).astype(np.int64)
+    if allowed is not None:
+        bits = bits[(bits <= np.asarray(allowed, np.int64)).all(axis=1)]
+    bits = bits[(bits @ np.asarray(A, np.int64).T <=
+                 np.asarray(c, np.int64)).all(axis=1)]
+    u = bits @ np.asarray(upsilon, np.int64)
+    v = bits @ np.asarray(sigma2, np.int64)
+    row = np.full(s_cap + 1, int(NEG), np.int64)
+    for uu, vv in zip(u, v):                 # subset covers every s ≤ Υ̂ᵀx
+        hi = min(int(uu), s_cap)
+        row[:hi + 1] = np.maximum(row[:hi + 1], vv)
+    return row.astype(np.int32)
+
+
+def eq17_star(row, s_limit):
+    """The eq.-17 selection on a value row: argmax_s s + sqrt(P4(s))."""
+    s_vals = np.arange(row.shape[0])
+    score = s_vals + np.sqrt(np.maximum(row, 0).astype(np.float64))
+    score = np.where((row >= 0) & (s_vals <= s_limit), score, -np.inf)
+    return int(np.argmax(score))
+
+
+def _rand_problem(rng, E, K, c_hi=3, u_hi=5, sig_hi=5000):
+    A = rng.integers(1, 3, size=(K, E))
+    c = rng.integers(1, c_hi + 1, size=K)
+    A = np.minimum(A, c[:, None])
+    upsilon = rng.integers(0, u_hi + 1, size=E).astype(np.int32)
+    sigma2 = rng.integers(1, sig_hi + 1, size=E).astype(np.int32)
+    return A, c, upsilon, sigma2
+
+
+def _solve_with(solver, upsilon, sigma2, tables, s_cap, s_limit,
+                allowed=None):
+    x, info = solver(jnp.asarray(upsilon, jnp.int32),
+                     jnp.asarray(sigma2, jnp.int32), tables, s_cap,
+                     jnp.int32(s_limit),
+                     None if allowed is None else jnp.asarray(allowed))
+    return (np.asarray(x), int(info["s_star"]),
+            np.asarray(info["value_row"]))
+
+
+# ---------------------------------------------------------------------------
+# (a) reference DP vs brute-force enumeration, for every s
+# ---------------------------------------------------------------------------
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_reference_value_row_matches_bruteforce(seed):
+        rng = np.random.default_rng(seed)
+        E, K = int(rng.integers(4, 13)), int(rng.integers(1, 4))
+        A, c, ups, sig = _rand_problem(rng, E, K)
+        allowed = (rng.integers(0, 2, E).astype(bool)
+                   if rng.integers(0, 2) else None)
+        tables = build_tables(A, c)
+        s_cap = int(ups.sum())
+        x, s_star, row = _solve_with(REF, ups, sig, tables, s_cap, s_cap,
+                                     allowed)
+        bf_row = enumerate_value_row(ups, sig, A, c, s_cap, allowed)
+        np.testing.assert_array_equal(row, bf_row)
+        assert s_star == eq17_star(bf_row, s_cap)
+        # the returned x realizes the row entry at s*
+        assert np.all(A @ x <= c)
+        assert int(ups @ x) >= s_star
+        assert int(sig @ x) == bf_row[s_star]
+
+    # -----------------------------------------------------------------------
+    # (b) reference vs Pallas: bit-exact on x, s*, and the value row.
+    # Shapes are drawn from a small pool so the kernel compiles a handful of
+    # tiny programs instead of one per example.
+    # -----------------------------------------------------------------------
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_reference_vs_pallas_bitexact(seed):
+        rng = np.random.default_rng(seed)
+        E = int(rng.choice([6, 10]))
+        K = int(rng.integers(1, 3))
+        A, c, ups, sig = _rand_problem(rng, E, K, c_hi=2, u_hi=4,
+                                       sig_hi=10**4)
+        allowed = (rng.integers(0, 2, E).astype(bool)
+                   if rng.integers(0, 2) else None)
+        tables = build_tables(A, c)
+        s_cap = 4 * E                        # static per E: few jit keys
+        s_limit = int(rng.integers(0, s_cap + 1))   # exercises s_limit < s_cap
+        got_ref = _solve_with(REF, ups, sig, tables, s_cap, s_limit, allowed)
+        got_pal = _solve_with(PAL, ups, sig, tables, s_cap, s_limit, allowed)
+        np.testing.assert_array_equal(got_ref[0], got_pal[0])     # x
+        assert got_ref[1] == got_pal[1]                           # s_star
+        np.testing.assert_array_equal(got_ref[2], got_pal[2])     # value_row
+
+    # -----------------------------------------------------------------------
+    # (c) oracle_knapsack vs exhaustive search
+    # -----------------------------------------------------------------------
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_oracle_knapsack_matches_exhaustive(seed):
+        rng = np.random.default_rng(seed)
+        E, K = int(rng.integers(4, 11)), int(rng.integers(1, 4))
+        A, c, _, _ = _rand_problem(rng, E, K)
+        values = rng.uniform(0.0, 1.0, E).astype(np.float32)
+        allowed = rng.integers(0, 2, E).astype(bool)
+        tables = build_tables(A, c)
+        x, v = oracle_knapsack(jnp.asarray(values), tables,
+                               jnp.asarray(allowed))
+        x = np.asarray(x)
+        best = 0.0
+        for bits in itertools.product([0, 1], repeat=E):
+            xx = np.array(bits)
+            if np.any(xx > allowed.astype(int)) or np.any(A @ xx > c):
+                continue
+            best = max(best, float(values @ xx))
+        assert np.all(A @ x <= c) and np.all(x <= allowed.astype(int))
+        assert float(v) == pytest.approx(best, rel=1e-5)
+else:
+    def test_hypothesis_extra_missing():
+        pytest.importorskip(
+            "hypothesis",
+            reason="property tests need the [test] extra (pip install .[test])")
+
+
+# ---------------------------------------------------------------------------
+# u_max edge cases (deterministic — these pin the shift-padding contract)
+# ---------------------------------------------------------------------------
+
+def test_pallas_u_max_one_all_zero_upsilon():
+    """u_max=1 is legal only when every Υ̂ is 0 (shift never exceeds padding)."""
+    rng = np.random.default_rng(5)
+    E, K = 8, 2
+    A, c, _, sig = _rand_problem(rng, E, K)
+    ups = np.zeros(E, np.int32)
+    tables = build_tables(A, c)
+    s_cap = 6
+    x1, i1 = solve_budgeted_dp(jnp.asarray(ups), jnp.asarray(sig), tables,
+                               s_cap, jnp.int32(s_cap))
+    x2, i2 = solve_budgeted_dp_pallas(ups, sig, tables, s_cap, s_cap,
+                                      u_max=1, interpret=True)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+    assert int(i1["s_star"]) == int(i2["s_star"]) == 0
+
+
+@pytest.mark.parametrize("u_max_kind", ["tight", "s_cap_plus_one"])
+def test_pallas_u_max_padding_invariance(u_max_kind):
+    """The result must not depend on the padding amount (≥ max Υ̂ + 1)."""
+    rng = np.random.default_rng(6)
+    E, K = 9, 2
+    A, c, ups, sig = _rand_problem(rng, E, K, u_hi=4)
+    tables = build_tables(A, c)
+    s_cap = int(ups.sum())
+    u_max = int(ups.max() + 1) if u_max_kind == "tight" else s_cap + 1
+    x1, i1 = solve_budgeted_dp(jnp.asarray(ups), jnp.asarray(sig), tables,
+                               s_cap, jnp.int32(s_cap))
+    x2, i2 = solve_budgeted_dp_pallas(ups, sig, tables, s_cap, s_cap,
+                                      u_max=u_max, interpret=True)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+    assert int(i1["s_star"]) == int(i2["s_star"])
+
+
+def test_s_limit_below_cap_matches_bruteforce():
+    rng = np.random.default_rng(7)
+    A, c, ups, sig = _rand_problem(rng, 8, 2)
+    tables = build_tables(A, c)
+    s_cap = int(ups.sum())
+    s_limit = s_cap // 2
+    bf_row = enumerate_value_row(ups, sig, A, c, s_cap)
+    for solver in (REF, PAL):
+        x, s_star, row = _solve_with(solver, ups, sig, tables, s_cap,
+                                     s_limit)
+        assert s_star == eq17_star(bf_row, s_limit)
+        assert s_star <= s_limit
+        np.testing.assert_array_equal(row, bf_row)
+
+
+# ---------------------------------------------------------------------------
+# backend resolution logic (the silent-interpret fix)
+# ---------------------------------------------------------------------------
+
+def test_backend_resolution_table():
+    for platform in ("cpu", "gpu", "tpu"):
+        # kernel level: never silently interpreted on TPU
+        assert resolve_interpret(None, platform) is (platform != "tpu")
+        assert resolve_interpret(True, platform) is True
+        assert resolve_interpret(False, platform) is False
+        # registry level: auto = compiled pallas on TPU, reference elsewhere
+        expect = "pallas" if platform == "tpu" else "reference"
+        assert resolve_solver("auto", platform) == expect
+        for name in ("reference", "pallas", "pallas_interpret"):
+            assert resolve_solver(name, platform) == name
+    with pytest.raises(ValueError):
+        resolve_solver("bogus")
+
+
+def test_env_var_overrides_auto_but_not_explicit(monkeypatch):
+    monkeypatch.setenv(SOLVER_ENV_VAR, "pallas_interpret")
+    assert resolve_solver(None, "tpu") == "pallas_interpret"
+    assert resolve_solver("auto", "cpu") == "pallas_interpret"
+    assert get_solver(None, "cpu").name == "pallas_interpret"
+    assert resolve_solver("reference", "tpu") == "reference"
+    monkeypatch.setenv(SOLVER_ENV_VAR, "")
+    assert resolve_solver(None, "cpu") == "reference"
+
+
+def test_get_solver_caches_identity():
+    assert get_solver("reference") is get_solver("reference")
+    assert get_solver(PAL) is PAL
+
+
+# ---------------------------------------------------------------------------
+# VALUE_BOUND contract (f32 exactness < 2^24)
+# ---------------------------------------------------------------------------
+
+def test_value_bound_overflow_raises():
+    rng = np.random.default_rng(8)
+    A, c, ups, sig = _rand_problem(rng, 6, 2)
+    sig = sig.astype(np.int32)
+    sig[0] = VALUE_BOUND                     # a single value at the bound
+    tables = build_tables(A, c)
+    with pytest.raises(ValueError, match="2\\^24"):
+        solve_budgeted_dp_pallas(ups, sig, tables, int(ups.sum()),
+                                 int(ups.sum()), interpret=True)
+
+
+def test_max_achievable_value_topk():
+    # K=1, c=2, A=1 per edge: at most 2 edges fit → top-2 sum of Σ̂²
+    E = 5
+    A = np.ones((1, E), np.int64)
+    c = np.array([2], np.int64)
+    sig = np.array([10, 50, 20, 40, 30], np.int64)
+    tables = build_tables(A, c)
+    assert max_achievable_value(sig, tables) == 90
+
+
+def test_default_schedules_stay_under_value_bound():
+    """Pins the stats.scale_statistics outputs under 2^24 at the default
+    horizons (T=1500 benchmarks, T=10^5 stress), so the traced hot path —
+    where the runtime check cannot see concrete values — is safe."""
+    inst = generate_instance(seed=0)         # paper Table-2 defaults
+    tables = build_tables(inst.A, inst.c)
+    m = inst.m
+    E = inst.n_edges
+    for T in (1500, 10**5):
+        # worst explored statistics: n = 1 for every channel at t = T
+        _, sig, _, _ = stats_mod.scale_statistics(
+            jnp.ones(E, jnp.float32), jnp.ones(E, jnp.int32),
+            jnp.float32(T), m)
+        assert max_achievable_value(np.asarray(sig), tables) < VALUE_BOUND
+    # all channels unexplored (the finite dominance bonus) at t = 1
+    _, sig0, _, _ = stats_mod.scale_statistics(
+        jnp.zeros(E, jnp.float32), jnp.zeros(E, jnp.int32),
+        jnp.float32(1.0), m)
+    assert max_achievable_value(np.asarray(sig0), tables) < VALUE_BOUND
+
+
+# ---------------------------------------------------------------------------
+# end-to-end backend invariance (ESDP through the simulator and sweeps)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small():
+    inst = generate_instance(seed=3, n_ports=4, n_servers=10, edge_prob=0.3)
+    tables = build_tables(inst.A, inst.c)
+    return inst, tables
+
+
+@pytest.mark.parametrize("scenario", [None, "markov_dvfs"])
+def test_esdp_trace_invariance_end_to_end(small, scenario):
+    """simulate(instance, esdp, T=200) produces identical SimResult traces
+    (decisions, sw, regret) under both backends."""
+    inst, tables = small
+    T = 200
+    scn = None if scenario is None else get_scenario(scenario)
+    results = {}
+    for name in ("reference", "pallas_interpret"):
+        policy = make_esdp_policy(inst, T, tables=tables, solver=name)
+        results[name] = simulate(inst, policy, T, seed=1, tables=tables,
+                                 scenario=scn)
+    ref, pal = results["reference"], results["pallas_interpret"]
+    np.testing.assert_array_equal(ref.n_dispatched, pal.n_dispatched)
+    np.testing.assert_array_equal(ref.sw, pal.sw)
+    np.testing.assert_array_equal(ref.sw_oracle, pal.sw_oracle)
+    np.testing.assert_array_equal(ref.regret, pal.regret)
+
+
+def test_pallas_vmaps_through_simulate_batch(small):
+    """The Pallas path is vmap-safe: a seed batch through simulate_batch is
+    bit-identical to the reference backend's batch."""
+    inst, tables = small
+    T, seeds = 80, (0, 1, 2)
+    res = {}
+    for name in ("reference", "pallas"):     # public name; interpret on CPU
+        policy = make_esdp_policy(inst, T, tables=tables, solver=name)
+        res[name] = simulate_batch(inst, policy, T, seeds, tables=tables)
+    np.testing.assert_array_equal(res["reference"].n_dispatched,
+                                  res["pallas"].n_dispatched)
+    np.testing.assert_array_equal(res["reference"].sw, res["pallas"].sw)
+    np.testing.assert_array_equal(res["reference"].regret,
+                                  res["pallas"].regret)
+
+
+# Mirrors benchmarks.sensitivity.FIG6_SPEC.smoke() (defined locally so the
+# test suite never depends on the benchmarks/ namespace package being on
+# sys.path).  hswf rides along to cover run_spec's non-solver-aware branch.
+FIG6_SMOKE = SweepSpec(
+    name="fig6", T=120, seeds=(0,),
+    policies={"esdp": esdp_factory(), "hswf": hswf_factory()},
+    grid=tuple(GridPoint(f"c_hi{c}",
+                         instance_kwargs={"seed": 2, "c_lo": 1, "c_hi": c})
+               for c in (1, 2, 4, 6)),
+)
+
+
+def test_cluster_dispatcher_backend_invariance(small):
+    """ClusterSim threads solver= into its jitted per-slot DP call."""
+    from repro.sched import ClusterSim
+    inst, _ = small
+    outs = {name: ClusterSim(inst, 60, seed=4, solver=name).run("esdp")
+            for name in ("reference", "pallas_interpret")}
+    np.testing.assert_array_equal(outs["reference"].sw,
+                                  outs["pallas_interpret"].sw)
+    np.testing.assert_array_equal(outs["reference"].regret,
+                                  outs["pallas_interpret"].regret)
+    assert outs["reference"].asw == outs["pallas_interpret"].asw
+
+
+def test_pallas_through_sweepspec_fig6_smoke():
+    """SweepSpec.solver threads the backend through run_spec; the fig6 smoke
+    sweep is bit-identical between backends (full per-seed traces, not just
+    means)."""
+    rows = {}
+    for name in ("reference", "pallas"):
+        rows[name] = run_spec(dataclasses.replace(FIG6_SMOKE, solver=name))
+    assert len(rows["reference"]) == 8      # 4 grid points × 2 policies
+    for r_ref, r_pal in zip(rows["reference"], rows["pallas"]):
+        assert (r_ref.point, r_ref.policy) == (r_pal.point, r_pal.policy)
+        assert r_pal.solver == "pallas"
+        np.testing.assert_array_equal(r_ref.result.sw, r_pal.result.sw)
+        np.testing.assert_array_equal(r_ref.result.regret,
+                                      r_pal.result.regret)
+        np.testing.assert_array_equal(r_ref.result.n_dispatched,
+                                      r_pal.result.n_dispatched)
+        assert r_ref.asw_mean == r_pal.asw_mean
