@@ -1,17 +1,28 @@
 """Timing harness for the Algorithm-2 solver backends.
 
-Times reference vs pallas-interpret vs pallas-compiled across an (E, C, S)
-grid of synthetic P4 instances and writes ``results/BENCH_dp.json``::
+Times reference vs pallas-interpret vs pallas-compiled across named
+(E, C, S) configs of synthetic P4 instances — including large capacity
+spaces (C = 512 / 1024 / 4096) that the old (E, C, C) one-hot transition
+operand could never hold in VMEM (4·E·C² = 16 MB at E=16, C=512) but the
+offset-encoded kernel handles — and writes ``results/BENCH_dp.json``::
 
     python -m benchmarks.dp_bench            # full grid
     python -m benchmarks.dp_bench --smoke    # CI-sized grid
+    python -m benchmarks.dp_bench --smoke --baseline results/BENCH_dp.json
     python -m benchmarks.dp_bench --runs 20 --out results/BENCH_dp.json
 
+``--baseline`` compares the fresh per-config/backend mean timings against a
+committed BENCH_dp.json (matched on (E, C, S, backend) so files from before
+the config-naming change still compare) and exits non-zero on a
+``--max-regression``-fold slowdown — the CI perf-regression guard.
+
 The compiled-pallas leg only runs on a real TPU; elsewhere it is recorded
-as skipped (the interpreter leg still exercises the kernel's program).
-Per-point records include the one-off table/operand preparation cost so the
-amortization argument (prepare once per instance, solve every slot) is
-visible in the numbers.
+as skipped (the interpreter leg still exercises the kernel's program).  The
+largest config additionally times the C-blocked grid path (forced tiles) as
+backend ``pallas_interpret_blocked``.  Per-point records include the one-off
+table/operand preparation cost plus a kernel-vs-wrapper split:
+``forward_ms`` times the DP forward kernel alone, so the share spent in the
+eq.-17 selection + backtrack wrapper is visible in the numbers.
 """
 from __future__ import annotations
 
@@ -19,6 +30,7 @@ import argparse
 import json
 import pathlib
 import statistics
+import sys
 import time
 
 import jax
@@ -27,39 +39,46 @@ import numpy as np
 
 from repro.core.dp import build_tables
 from repro.core.solvers import get_solver
+from repro.kernels.budgeted_dp.kernel import NEG, dp_forward_pallas
 from repro.kernels.budgeted_dp.ops import prepare_tables
 
-# (E, K, c_hi, u_hi): edges, device types, per-type capacity, Υ̂ range.
-# C = Π(c_k+1) and S = Σ Υ̂ + 1 are reported per point.
-GRID = [
-    (12, 2, 2, 4),
-    (24, 2, 3, 6),
-    (40, 3, 2, 6),
-    (64, 3, 3, 8),
+# Named configs: explicit capacity vector c (C = Π(c_k+1)) and Υ̂ range.
+# The first four mirror the legacy (E, K, c_hi, u_hi) random draws so their
+# (E, C, S) keys line up with pre-offset baselines; the large-C configs are
+# the regime the offset encoding unlocks.
+CONFIGS = [
+    {"name": "E12_C6", "E": 12, "c_rand": (2, 2), "u_hi": 4},
+    {"name": "E24_C6", "E": 24, "c_rand": (2, 3), "u_hi": 6},
+    {"name": "E40_K3", "E": 40, "c_rand": (3, 2), "u_hi": 6},
+    {"name": "E64_K3", "E": 64, "c_rand": (3, 3), "u_hi": 8},
+    {"name": "E16_C512", "E": 16, "c": (7, 7, 7), "u_hi": 3},
+    {"name": "E16_C1024", "E": 16, "c": (3, 15, 15), "u_hi": 3},
+    {"name": "E16_C4096", "E": 16, "c": (7, 7, 7, 7), "u_hi": 2,
+     "blocked_c": 1024},   # off_max ≈ 585 (stride of the 4th resource is
+                           # 512), so the halo needs ≥ 1024-wide tiles
 ]
-SMOKE_GRID = [(12, 2, 2, 4), (24, 2, 3, 6)]
+SMOKE_NAMES = ("E12_C6", "E24_C6", "E16_C512")
 
 
-def _make_problem(E: int, K: int, c_hi: int, u_hi: int, seed: int = 0):
+def _make_problem(cfg: dict, seed: int = 0):
     rng = np.random.default_rng(seed)
-    A = rng.integers(1, 3, (K, E))
-    c = rng.integers(1, c_hi + 1, K)
-    A = np.minimum(A, c[:, None])
-    ups = rng.integers(0, u_hi + 1, E).astype(np.int32)
+    E = cfg["E"]
+    if "c" in cfg:
+        c = np.asarray(cfg["c"], np.int64)
+        K = c.shape[0]
+        A = rng.integers(0, 2, (K, E))
+        A[:, A.sum(axis=0) == 0] = 1         # no all-zero demand columns
+    else:
+        K, c_hi = cfg["c_rand"]
+        A = rng.integers(1, 3, (K, E))
+        c = rng.integers(1, c_hi + 1, K)
+        A = np.minimum(A, c[:, None])
+    ups = rng.integers(0, cfg["u_hi"] + 1, E).astype(np.int32)
     sig = rng.integers(1, 5000, E).astype(np.int32)
     return A, c, ups, sig
 
 
-def _time_solver(solver, ups, sig, tables, s_cap, runs: int):
-    # jit the whole contract call so both backends are measured compiled
-    # (the reference scan would otherwise run eagerly op-by-op)
-    fn = jax.jit(lambda u, s, lim: solver(u, s, tables, s_cap, lim, None))
-
-    def call():
-        x, info = fn(jnp.asarray(ups), jnp.asarray(sig), jnp.int32(s_cap))
-        jax.block_until_ready((x, info["s_star"]))
-        return x
-
+def _timed(call, runs: int) -> dict:
     t0 = time.perf_counter()
     call()                                   # warmup: trace + compile
     warmup_ms = (time.perf_counter() - t0) * 1e3
@@ -76,21 +95,57 @@ def _time_solver(solver, ups, sig, tables, s_cap, runs: int):
     }
 
 
-def bench(grid, runs: int) -> dict:
+def _time_solver(solver, ups, sig, tables, s_cap, runs: int, u_max: int):
+    # jit the whole contract call so both backends are measured compiled
+    # (the reference scan would otherwise run eagerly op-by-op); u_max is
+    # the same tight bound _time_forward uses, so the kernel-vs-wrapper
+    # split compares kernels with identical scratch sizes
+    fn = jax.jit(lambda u, s, lim: solver(u, s, tables, s_cap, lim, None,
+                                          u_max=u_max))
+
+    def call():
+        x, info = fn(jnp.asarray(ups), jnp.asarray(sig), jnp.int32(s_cap))
+        jax.block_until_ready((x, info["s_star"]))
+        return x
+
+    return _timed(call, runs)
+
+
+def _time_forward(ups, sig, tables, s_cap, runs: int, interpret: bool,
+                  u_max: int, block_c: int | None = None):
+    """The DP forward kernel alone — the kernel side of the
+    kernel-vs-wrapper split (mean_ms − forward_ms ≈ s*-rule + backtrack)."""
+    feas, offs = prepare_tables(tables)
+    S, C = s_cap + 1, tables.n_states
+    v0 = jnp.full((S, C), NEG, jnp.float32).at[0, :].set(0.0)
+    fn = jax.jit(lambda u, s: dp_forward_pallas(
+        u, s, jnp.asarray(feas), jnp.asarray(offs), v0, n_edges=offs.shape[0],
+        u_max=u_max, off_max=int(offs.max()),
+        interpret=interpret, block_c=block_c))
+
+    def call():
+        jax.block_until_ready(fn(jnp.asarray(ups), jnp.asarray(sig)))
+
+    return _timed(call, runs)
+
+
+def bench(configs, runs: int) -> dict:
     platform = jax.default_backend()
     backends = ["reference", "pallas_interpret", "pallas"]
     records = []
-    for (E, K, c_hi, u_hi) in grid:
-        A, c, ups, sig = _make_problem(E, K, c_hi, u_hi)
+    for cfg in configs:
+        A, c, ups, sig = _make_problem(cfg)
         t0 = time.perf_counter()
         tables = build_tables(A, c)
         build_ms = (time.perf_counter() - t0) * 1e3
         t0 = time.perf_counter()
-        prepare_tables(tables)               # one-off, cached on the tables
+        prepare_tables(tables)               # offsets + feasibility plane
         prepare_ms = (time.perf_counter() - t0) * 1e3
         s_cap = int(ups.sum())
-        point = {"E": E, "K": K, "n_states": tables.n_states,
-                 "S": s_cap + 1, "build_tables_ms": build_ms,
+        u_max = int(ups.max() + 1)
+        point = {"config": cfg["name"], "E": cfg["E"], "K": len(c),
+                 "n_states": tables.n_states, "S": s_cap + 1,
+                 "build_tables_ms": build_ms,
                  "prepare_operands_ms": prepare_ms, "backends": {}}
         for name in backends:
             if name == "pallas" and platform != "tpu":
@@ -100,13 +155,58 @@ def bench(grid, runs: int) -> dict:
                                f"kernel program"}
                 continue
             solver = get_solver(name)
-            point["backends"][name] = _time_solver(
-                solver, ups, sig, tables, s_cap, runs)
+            rec = _time_solver(solver, ups, sig, tables, s_cap, runs, u_max)
+            if name != "reference":
+                interpret = (name == "pallas_interpret" or platform != "tpu")
+                fwd = _time_forward(ups, sig, tables, s_cap, runs, interpret,
+                                    u_max)
+                rec["forward_ms"] = fwd["mean_ms"]
+                rec["wrapper_ms"] = max(rec["mean_ms"] - fwd["mean_ms"], 0.0)
+            point["backends"][name] = rec
+        if cfg.get("blocked_c"):
+            fwd = _time_forward(ups, sig, tables, s_cap, runs,
+                                platform != "tpu", u_max,
+                                block_c=cfg["blocked_c"])
+            point["backends"]["pallas_interpret_blocked" if platform != "tpu"
+                              else "pallas_blocked"] = {
+                "forward_ms": fwd["mean_ms"], "warmup_ms": fwd["warmup_ms"],
+                "runs": runs, "block_c": cfg["blocked_c"]}
         records.append(point)
-        print(f"E={E} C={tables.n_states} S={s_cap + 1}: " + "  ".join(
-            f"{n}={r['mean_ms']:.2f}ms" if "mean_ms" in r else f"{n}=skip"
-            for n, r in point["backends"].items()), flush=True)
+        print(f"{cfg['name']}: E={cfg['E']} C={tables.n_states} "
+              f"S={s_cap + 1}: " + "  ".join(
+                  f"{n}={r['mean_ms']:.2f}ms" if "mean_ms" in r
+                  else (f"{n}[fwd]={r['forward_ms']:.2f}ms"
+                        if "forward_ms" in r else f"{n}=skip")
+                  for n, r in point["backends"].items()), flush=True)
     return {"platform": platform, "jax": jax.__version__, "grid": records}
+
+
+def check_baseline(result: dict, base: dict,
+                   max_regression: float) -> list[str]:
+    """Compare per-config/backend mean timings against a committed baseline.
+
+    Keyed on (E, n_states, S, backend) so baselines written before configs
+    had names (including the one-hot-era files) still compare.  Only pairs
+    present in both files are checked; returns the list of violations.
+    """
+    base_ms = {}
+    for point in base.get("grid", []):
+        for backend, rec in point["backends"].items():
+            if "mean_ms" in rec:
+                base_ms[(point["E"], point["n_states"], point["S"],
+                         backend)] = rec["mean_ms"]
+    failures = []
+    for point in result["grid"]:
+        for backend, rec in point["backends"].items():
+            key = (point["E"], point["n_states"], point["S"], backend)
+            if "mean_ms" not in rec or key not in base_ms:
+                continue
+            if rec["mean_ms"] > max_regression * base_ms[key]:
+                failures.append(
+                    f"{point.get('config', key)}/{backend}: "
+                    f"{rec['mean_ms']:.2f}ms vs baseline "
+                    f"{base_ms[key]:.2f}ms (> {max_regression:.1f}x)")
+    return failures
 
 
 def main() -> None:
@@ -114,13 +214,36 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true", help="CI-sized grid")
     ap.add_argument("--runs", type=int, default=10)
     ap.add_argument("--out", default="results/BENCH_dp.json")
+    ap.add_argument("--baseline", default=None,
+                    help="committed BENCH_dp.json to guard against")
+    ap.add_argument("--max-regression", type=float, default=2.0,
+                    help="fail when mean_ms exceeds baseline by this factor")
     args = ap.parse_args()
-    out = bench(SMOKE_GRID if args.smoke else GRID,
+    configs = ([c for c in CONFIGS if c["name"] in SMOKE_NAMES]
+               if args.smoke else CONFIGS)
+    # read the baseline up front: --out may legitimately overwrite it
+    base = None
+    if args.baseline:
+        bpath = pathlib.Path(args.baseline)
+        if not bpath.exists():
+            sys.exit(f"baseline {bpath} not found — refresh it with: "
+                     f"PYTHONPATH=src python -m benchmarks.dp_bench "
+                     f"--runs 30 --out {bpath}")
+        base = json.loads(bpath.read_text())
+    out = bench(configs,
                 max(1, args.runs if not args.smoke else min(args.runs, 3)))
     path = pathlib.Path(args.out)
     path.parent.mkdir(parents=True, exist_ok=True)
     path.write_text(json.dumps(out, indent=2))
     print(f"wrote {path}")
+    if base is not None:
+        failures = check_baseline(out, base, args.max_regression)
+        if failures:
+            print("PERF REGRESSION vs " + args.baseline)
+            for f in failures:
+                print("  " + f)
+            sys.exit(1)
+        print(f"no >{args.max_regression:.1f}x regression vs {args.baseline}")
 
 
 if __name__ == "__main__":

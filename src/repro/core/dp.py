@@ -9,9 +9,11 @@ is solved for *all* s ∈ S(t) at once by one DP over states
 
 Capacity vectors are encoded as mixed-radix state ids (Π_k (c_k+1) states),
 so the per-edge update is a (S × C) plane refresh: a *uniform shift* along s
-(Υ̂_i is a per-edge scalar) and a tiny gather along the capacity axis. That
-structure is exactly what `kernels/budgeted_dp` exploits on TPU (whole plane
-in VMEM, shift = dynamic slice, capacity gather = one-hot matmul on the MXU).
+(Υ̂_i is a per-edge scalar) and — because taking edge e from a feasible state
+c always lands on c − offsets[e] — a *uniform shift* along the capacity axis
+too. That structure is exactly what `kernels/budgeted_dp` exploits on TPU
+(whole plane in VMEM, both shifts = padded dynamic slices, transitions = an
+(E,) offset vector instead of an (E, C, C) one-hot).
 This module is the pure-JAX *reference* backend of the pluggable solver
 registry (`core/solvers.py`); the Pallas kernel backend is validated against
 `solve_budgeted_dp` by the differential harness in tests/test_solver_equiv.py.
@@ -34,7 +36,17 @@ FNEG = jnp.float32(-1e30)
 
 @dataclasses.dataclass(frozen=True, eq=False)   # eq=False ⇒ identity hash (jit-static-safe)
 class DPTables:
-    """Static per-instance tables for capacity-state transitions."""
+    """Static per-instance tables for capacity-state transitions.
+
+    ``offsets`` is the structural fact the TPU kernel is built on: in the
+    mixed-radix encoding, serving edge e from any *feasible* state c lands on
+    ``next_state[c, e] == c - offsets[e]`` with ``offsets[e] = Σ_k
+    A[k,e]·strides[k]`` a per-edge constant (no borrows can occur because
+    feasibility means every digit satisfies cap_k ≥ A[k,e]).  That turns the
+    per-edge capacity gather into a uniform shift along the state axis, so
+    the kernel needs an (E,) int32 vector instead of an (E, C, C) one-hot
+    tensor.  ``build_tables`` validates the identity on every feasible pair.
+    """
 
     feasible: np.ndarray     # (n_states, E) bool — A_{:,e} ≤ capacity(state)
     next_state: np.ndarray   # (n_states, E) int32 — state after taking edge e
@@ -42,6 +54,8 @@ class DPTables:
     full_state: int          # encoding of the full capacity vector c
     radices: np.ndarray      # (K,) int32 — c_k + 1
     cap_of_state: np.ndarray  # (n_states, K) int32 — decoded capacity vectors
+    strides: np.ndarray      # (K,) int64 — mixed-radix strides of the encoding
+    offsets: np.ndarray      # (E,) int32 — Σ_k A[k,e]·strides[k] (see above)
 
 
 def build_tables(A: np.ndarray, c: np.ndarray) -> DPTables:
@@ -66,6 +80,15 @@ def build_tables(A: np.ndarray, c: np.ndarray) -> DPTables:
     next_state = (nxt_cap * strides[None, None, :]).sum(axis=2)
     next_state = np.where(feasible, next_state, 0).astype(np.int32)
 
+    # per-edge transition offsets: next(c) = c - offset_e on feasible states
+    offsets = (A.T * strides[None, :]).sum(axis=1)                   # (E,)
+    expect = ids[:, None] - offsets[None, :]                         # (n_states, E)
+    if not np.array_equal(next_state[feasible],
+                          expect.astype(np.int32)[feasible]):
+        raise AssertionError(
+            "mixed-radix offset identity violated: next_state[c, e] != "
+            "c - offsets[e] on a feasible pair")
+
     full_state = int((c * strides).sum())
     assert full_state == n_states - 1
     return DPTables(
@@ -75,6 +98,8 @@ def build_tables(A: np.ndarray, c: np.ndarray) -> DPTables:
         full_state=full_state,
         radices=radices.astype(np.int32),
         cap_of_state=cap.astype(np.int32),
+        strides=strides,
+        offsets=offsets.astype(np.int32),
     )
 
 

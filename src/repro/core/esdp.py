@@ -62,6 +62,8 @@ def make_esdp_policy(
     solve = get_solver(solver)
     m = instance.m
     s_cap = stats_mod.s_cap_for_horizon(T, m, delta_fn)
+    # tight static shift bound for the Pallas kernel scratch (Υ̂ ≤ ξ(T))
+    u_max = stats_mod.u_max_for_horizon(T, m, delta_fn)
 
     def init():
         return ()   # all ESDP state is the shared (n, Σz̃) in the env carry
@@ -71,7 +73,7 @@ def make_esdp_policy(
         upsilon, sigma2, _, s_limit = stats_mod.scale_statistics(
             vhat, n, t, m, g_fn=g_fn, delta_fn=delta_fn)
         x, _ = solve(upsilon, sigma2, tables, s_cap, s_limit,
-                     allowed=eligible)
+                     allowed=eligible, u_max=u_max)
         x = x * eligible.astype(jnp.int32)                 # Alg. 1 Steps 9–16
         return x, state
 

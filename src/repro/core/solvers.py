@@ -2,11 +2,15 @@
 
 Every backend implements one contract::
 
-    solver(upsilon, sigma2, tables, s_cap, s_limit, allowed=None) -> (x, info)
+    solver(upsilon, sigma2, tables, s_cap, s_limit,
+           allowed=None, u_max=None) -> (x, info)
 
 with ``x`` the (E,) int32 dispatch vector of Alg.-1 Step 8 and ``info`` a
 dict holding ``s_star`` (int32 scalar) and ``value_row`` — the (s_cap+1,)
 int32 DP value row with exactly ``dp.NEG`` at budget-infeasible entries.
+``u_max`` is an optional static bound on max Υ̂ (``stats.u_max_for_horizon``)
+that kernel backends may use to size scratch buffers; it must never change
+results, and the reference backend ignores it.
 Backends are *bit-exact interchangeable*: identical inputs yield identical
 ``x``, ``s_star``, and ``value_row`` (the differential-testing harness in
 ``tests/test_solver_equiv.py`` enforces this against brute force).
@@ -74,11 +78,17 @@ class Solver:
     _fn: Callable = dataclasses.field(repr=False)
 
     def __call__(self, upsilon, sigma2, tables: DPTables, s_cap: int,
-                 s_limit, allowed=None):
-        return self._fn(upsilon, sigma2, tables, s_cap, s_limit, allowed)
+                 s_limit, allowed=None, u_max: int | None = None):
+        """``u_max`` is an optional static bound on max Υ̂ (e.g. from
+        ``stats.u_max_for_horizon``); the Pallas backends use it to shrink
+        the kernel's shift scratch, the reference backend ignores it."""
+        return self._fn(upsilon, sigma2, tables, s_cap, s_limit, allowed,
+                        u_max)
 
 
-def _reference_solve(upsilon, sigma2, tables, s_cap, s_limit, allowed):
+def _reference_solve(upsilon, sigma2, tables, s_cap, s_limit, allowed,
+                     u_max=None):
+    del u_max                       # exact scan needs no shift padding
     x, info = solve_budgeted_dp(upsilon, sigma2, tables, s_cap, s_limit,
                                 allowed=allowed)
     row = info["value_row"]
@@ -89,10 +99,10 @@ def _reference_solve(upsilon, sigma2, tables, s_cap, s_limit, allowed):
 def _make_pallas_solve(interpret: bool | None):
     from ..kernels.budgeted_dp.ops import solve_budgeted_dp_pallas
 
-    def solve(upsilon, sigma2, tables, s_cap, s_limit, allowed):
+    def solve(upsilon, sigma2, tables, s_cap, s_limit, allowed, u_max=None):
         x, info = solve_budgeted_dp_pallas(
-            upsilon, sigma2, tables, s_cap, s_limit, allowed=allowed,
-            interpret=interpret)
+            upsilon, sigma2, tables, s_cap, s_limit, u_max=u_max,
+            allowed=allowed, interpret=interpret)
         row = info["value_row"]                     # f32, kernel NEG sentinel
         row = jnp.where(row >= 0, row, float(NEG)).astype(jnp.int32)
         return x, {"s_star": info["s_star"], "value_row": row}

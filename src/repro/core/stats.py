@@ -21,7 +21,7 @@ import jax.numpy as jnp
 __all__ = [
     "delta_default", "delta_fast", "delta_slow",
     "g_default", "g_no_logt", "g_logt_only",
-    "xi_of", "s_cap_for_horizon", "scale_statistics",
+    "xi_of", "s_cap_for_horizon", "u_max_for_horizon", "scale_statistics",
     "DELTA_VARIANTS", "G_VARIANTS",
 ]
 
@@ -80,12 +80,28 @@ def xi_of(t, m, delta_fn=delta_default):
     return jnp.ceil(m / delta_fn(t)).astype(jnp.int32)
 
 
-def s_cap_for_horizon(T: int, m: int, delta_fn=delta_default) -> int:
-    """Static bound on max_t ξ(t)·m over a horizon (δ decreasing ⇒ at t=T)."""
+def _xi_at_horizon(T: int, m: int, delta_fn=delta_default) -> int:
+    """ξ(T) as a host-side static int — the max of ξ(t) over t ≤ T (δ
+    decreasing ⇒ ξ increasing ⇒ maximum at t = T)."""
     import math
-    # evaluate at t = T with plain floats (host-side, static)
-    xi_T = math.ceil(m / float(delta_fn(jnp.float32(T))))
-    return int(xi_T) * int(m)
+    return int(math.ceil(m / float(delta_fn(jnp.float32(T)))))
+
+
+def s_cap_for_horizon(T: int, m: int, delta_fn=delta_default) -> int:
+    """Static bound on max_t ξ(t)·m over a horizon."""
+    return _xi_at_horizon(T, m, delta_fn) * int(m)
+
+
+def u_max_for_horizon(T: int, m: int, delta_fn=delta_default) -> int:
+    """Static bound on max_{t,e} Υ̂_e(t) + 1 over a horizon.
+
+    Υ̂_e = ⌈ξ(t)·v̂_e⌉ ≤ ξ(t) ≤ ξ(T) because v̂ ∈ [0,1] (env clips z̃).  The +1
+    keeps the kernel's shift-padding contract with margin.  This is the
+    tight shift-scratch height for the Pallas budgeted-DP kernel: ξ(T)+1
+    rows instead of the always-safe s_cap+1 = ξ(T)·m+1 — an m-fold
+    reduction of the pad at default horizons.
+    """
+    return _xi_at_horizon(T, m, delta_fn) + 1
 
 
 def scale_statistics(vhat, n, t, m, g_fn=g_default, delta_fn=delta_default):

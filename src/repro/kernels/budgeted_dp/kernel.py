@@ -3,15 +3,32 @@
 TPU-native design (DESIGN.md §4):
   * the whole (S × C) value plane lives in VMEM (default sizes ≈ 80 KB);
   * the edge loop runs INSIDE one pallas_call via fori_loop;
-  * the s-shift gather V[max(s−Υ_e, 0)] uses a padded VMEM scratch whose
-    first U_MAX rows hold the clamp row V[0]; a dynamic-START static-SIZE
-    slice (pl.ds) then reads the shifted window — no gather op at all;
-  * the capacity-state gather becomes a tiny (C × C) one-hot MATMUL on the
-    MXU — the standard TPU idiom replacing GPU warp gathers;
+  * BOTH per-edge gathers are uniform shifts read from one padded VMEM
+    scratch with a dynamic-START static-SIZE slice (pl.ds) — no gather op
+    and no matmul at all:
+      - the s-shift V[max(s−Υ_e, 0)] shifts along the budget (sublane) axis
+        through U_MAX clamp rows holding V[0];
+      - the capacity transition next(c) = c − offset_e (the mixed-radix
+        offset identity validated in core.dp.build_tables) shifts along the
+        state (lane) axis through OFF_MAX pad columns; reads landing in the
+        pad are exactly the states with c < offset_e, which are infeasible
+        and masked to NEG.
+    The former (E, C, C) one-hot transition operand — 4·E·C² bytes and an
+    O(S·C²) MXU matmul per edge — is now an (E,) int32 offset vector and an
+    O(S·C) VPU update, which is what lets large capacity spaces fit VMEM;
   * backtrack decisions are BIT-PACKED into int32 lanes: word ⌊e/32⌋ of the
     (⌈E/32⌉, S, C) output holds bit (e mod 32) for edge e.  At production
     sizes the unpacked (E, S, C) f32 tensor dominated VMEM (E=64, S=512,
     C=256 ⇒ 32 MB — over the ~16 MB/core budget); packing is 32× smaller.
+
+When even the (S, C) value plane outgrows VMEM, ``block_c`` switches to a
+C-BLOCKED pipeline: a lax.scan over edges, each edge one pallas_call gridded
+over capacity tiles.  The offset shift only ever reads LEFT (towards smaller
+state ids), so a tile plus its left neighbor — a haloed block load expressed
+as two BlockSpec views of the same plane, legal because block_c ≥ OFF_MAX —
+covers every read, and the plane streams HBM↔VMEM one (S, block_c) tile at
+a time.  Functional double-buffering (the per-edge call maps V → V′) keeps
+the pipeline free of in-place aliasing hazards.
 
 Arithmetic is f32 with integer values; exactness holds for values < 2²⁴
 (ops.py enforces the bound — see core/stats.py for why defaults are ≪ 2²⁴).
@@ -31,9 +48,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["NEG", "resolve_interpret", "packed_words", "dp_forward_pallas"]
+__all__ = ["NEG", "VMEM_BUDGET_BYTES", "resolve_interpret", "packed_words",
+           "unblocked_vmem_bytes", "choose_block_c", "dp_forward_pallas"]
 
 NEG = -float(2 ** 24)
+
+# conservative share of the ~16 MB/core VMEM left to this kernel
+VMEM_BUDGET_BYTES = 12 * 2 ** 20
 
 
 def resolve_interpret(interpret: bool | None = None,
@@ -55,29 +76,62 @@ def packed_words(n_edges: int) -> int:
     return (n_edges + 31) // 32
 
 
-def _dp_kernel(ups_ref, sig_ref, feas_ref, next_oh_ref, v0_ref,
-               vout_ref, dec_ref, vpad_ref, *, n_edges: int, u_max: int):
+def unblocked_vmem_bytes(S: int, C: int, n_edges: int, u_max: int,
+                         off_max: int) -> int:
+    """VMEM footprint of the whole-plane kernel: v0 + V + packed decisions +
+    the (u_max+S, off_max+C) shift scratch + the (E, C) feasibility plane +
+    the three (E,) operand vectors, all 4-byte."""
+    W = packed_words(n_edges)
+    return 4 * ((2 + W) * S * C + (u_max + S) * (off_max + C)
+                + n_edges * (C + 3))
+
+
+def choose_block_c(S: int, C: int, n_edges: int, u_max: int, off_max: int,
+                   budget: int = VMEM_BUDGET_BYTES) -> int | None:
+    """Pick a capacity-tile width, or ``None`` for the whole-plane kernel.
+
+    Blocking kicks in only when the whole-plane footprint exceeds the VMEM
+    budget.  The tile must be a multiple of the 128-wide lane dimension and
+    at least ``off_max`` so the halo never reaches past the left neighbor;
+    if that forces a tile spanning the plane, blocking cannot help and the
+    whole-plane kernel is returned (its footprint is then the floor).
+    """
+    if unblocked_vmem_bytes(S, C, n_edges, u_max, off_max) <= budget:
+        return None
+    block = 128
+    while block < off_max:
+        block *= 2
+    if block >= C:
+        return None
+    return block
+
+
+def _dp_kernel(ups_ref, sig_ref, offs_ref, feas_ref, v0_ref,
+               vout_ref, dec_ref, vpad_ref, *, n_edges: int, u_max: int,
+               off_max: int):
     S, C = v0_ref.shape
     W = dec_ref.shape[0]
     vout_ref[:, :] = v0_ref[:, :]
     dec_ref[:, :, :] = jnp.zeros((W, S, C), jnp.int32)
+    if off_max:
+        # pad columns: read only for states with c < offset_e, all infeasible
+        # and masked to NEG below — NEG keeps the reads inert either way
+        vpad_ref[:, :off_max] = jnp.full((u_max + S, off_max), NEG,
+                                         jnp.float32)
 
     def edge_step(j, _):
         e = n_edges - 1 - j
-        u = ups_ref[e]
+        u = jnp.minimum(ups_ref[e], u_max)      # clamp: never read past pad
+        off = jnp.minimum(offs_ref[e], off_max)
         sig = sig_ref[e].astype(jnp.float32)
 
         V = vout_ref[:, :]
-        # padded shift buffer: rows [0, u_max) = clamp row V[0], then V
-        vpad_ref[:u_max, :] = jnp.broadcast_to(V[0:1, :], (u_max, C))
-        vpad_ref[pl.ds(u_max, S), :] = V
-        shifted = vpad_ref[pl.ds(u_max - u, S), :]        # V[max(s-u, 0)]
-
-        # capacity gather as one-hot matmul: take[:, c] = shifted[:, next(c)]
-        oh = next_oh_ref[e, :, :]                          # (C, C) one-hot
-        take = jax.lax.dot_general(
-            shifted, oh, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32) + sig
+        # padded shift buffer: rows [0, u_max) = clamp row V[0], then V;
+        # the value plane sits at columns [off_max, off_max + C)
+        vpad_ref[:u_max, off_max:] = jnp.broadcast_to(V[0:1, :], (u_max, C))
+        vpad_ref[pl.ds(u_max, S), off_max:] = V
+        # one 2-D shifted read: V[max(s-u, 0), c - off]
+        take = vpad_ref[pl.ds(u_max - u, S), pl.ds(off_max - off, C)] + sig
 
         feas = feas_ref[e, :]                              # (C,) 0/1
         take = jnp.where(feas[None, :] > 0, take, NEG)
@@ -94,20 +148,115 @@ def _dp_kernel(ups_ref, sig_ref, feas_ref, next_oh_ref, v0_ref,
     jax.lax.fori_loop(0, n_edges, edge_step, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("n_edges", "u_max", "interpret"))
-def dp_forward_pallas(upsilon, sigma2, feasible, next_onehot, v0,
-                      *, n_edges: int, u_max: int,
-                      interpret: bool | None = None):
-    """upsilon/sigma2: (E,) i32; feasible: (E, C) f32 0/1;
-    next_onehot: (E, C, C) f32 (one_hot of next-state ids, axis 1 = source);
+def _edge_tile_kernel(u_ref, off_ref, sig_ref, feas_ref, vleft_ref, vcur_ref,
+                      vout_ref, bits_ref, vpad_ref, *, u_max: int):
+    """One edge update on one (S, B) capacity tile.
+
+    ``vleft``/``vcur`` are two views of the SAME value plane: the tile and
+    its left neighbor (tile 0 reads itself — those columns are c < offset_e,
+    infeasible, masked).  The concatenated (u_max+S, 2B) scratch makes both
+    shifts single dynamic-start reads, exactly like the whole-plane kernel.
+    """
+    S, B = vcur_ref.shape
+    u = jnp.minimum(u_ref[0], u_max)
+    off = jnp.minimum(off_ref[0], B)
+    sig = sig_ref[0].astype(jnp.float32)
+    left = vleft_ref[:, :]
+    cur = vcur_ref[:, :]
+
+    vpad_ref[:u_max, :B] = jnp.broadcast_to(left[0:1, :], (u_max, B))
+    vpad_ref[:u_max, B:] = jnp.broadcast_to(cur[0:1, :], (u_max, B))
+    vpad_ref[pl.ds(u_max, S), :B] = left
+    vpad_ref[pl.ds(u_max, S), B:] = cur
+    take = vpad_ref[pl.ds(u_max - u, S), pl.ds(B - off, B)] + sig
+
+    take = jnp.where(feas_ref[0:1, :] > 0, take, NEG)
+    bits_ref[:, :] = (take > cur).astype(jnp.int32)
+    vout_ref[:, :] = jnp.maximum(cur, take)
+
+
+def _edge_call(V, feas_e, u1, off1, sig1, *, u_max: int, block_c: int,
+               interpret: bool):
+    S, Cp = V.shape
+    kernel = functools.partial(_edge_tile_kernel, u_max=u_max)
+    return pl.pallas_call(
+        kernel,
+        grid=(Cp // block_c,),
+        out_shape=(jax.ShapeDtypeStruct((S, Cp), jnp.float32),
+                   jax.ShapeDtypeStruct((S, Cp), jnp.int32)),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, block_c), lambda j: (0, j)),
+            pl.BlockSpec((S, block_c), lambda j: (0, jnp.maximum(j - 1, 0))),
+            pl.BlockSpec((S, block_c), lambda j: (0, j)),
+        ],
+        out_specs=(pl.BlockSpec((S, block_c), lambda j: (0, j)),
+                   pl.BlockSpec((S, block_c), lambda j: (0, j))),
+        scratch_shapes=[pltpu.VMEM((u_max + S, 2 * block_c), jnp.float32)],
+        interpret=interpret,
+    )(u1, off1, sig1, feas_e, V, V)
+
+
+def _dp_forward_blocked(upsilon, sigma2, feasible, offsets, v0,
+                        *, n_edges: int, u_max: int, off_max: int,
+                        block_c: int, interpret: bool):
+    if block_c < off_max:
+        raise ValueError(
+            f"block_c={block_c} < off_max={off_max}: the offset shift would "
+            f"reach past the left-neighbor halo tile")
+    S, C = v0.shape
+    Cp = -(-C // block_c) * block_c
+    pad = Cp - C
+    V0 = jnp.pad(v0, ((0, 0), (0, pad)), constant_values=NEG)
+    feas_p = jnp.pad(feasible, ((0, 0), (0, pad)))      # pad states masked
+    W = packed_words(n_edges)
+    dec0 = jnp.zeros((W, S, Cp), jnp.int32)
+
+    rev = slice(None, None, -1)                          # edges E-1 … 0
+    xs = (upsilon[rev], offsets[rev], sigma2[rev], feas_p[rev],
+          jnp.arange(n_edges - 1, -1, -1, dtype=jnp.int32))
+
+    def body(carry, x):
+        V, dec = carry
+        u, off, sig, feas_e, e = x
+        Vn, bits = _edge_call(
+            V, feas_e[None, :], u[None], off[None], sig[None],
+            u_max=u_max, block_c=block_c, interpret=interpret)
+        w = e // 32
+        word = jax.lax.dynamic_slice(dec, (w, 0, 0), (1, S, Cp))
+        word = word | (bits << (e % 32))[None]
+        return (Vn, jax.lax.dynamic_update_slice(dec, word, (w, 0, 0))), None
+
+    (V, dec), _ = jax.lax.scan(body, (V0, dec0), xs)
+    return V[:, :C], dec[:, :, :C]
+
+
+@functools.partial(jax.jit, static_argnames=("n_edges", "u_max", "off_max",
+                                             "interpret", "block_c"))
+def dp_forward_pallas(upsilon, sigma2, feasible, offsets, v0,
+                      *, n_edges: int, u_max: int, off_max: int,
+                      interpret: bool | None = None,
+                      block_c: int | None = None):
+    """upsilon/sigma2/offsets: (E,) i32; feasible: (E, C) f32 0/1;
     v0: (S, C) f32.  Returns (V_final (S, C) f32,
     decisions (⌈E/32⌉, S, C) i32 — bit (e%32) of word (e//32) is edge e).
 
-    ``interpret=None`` resolves via :func:`resolve_interpret` (compiled on
-    TPU, interpreter elsewhere)."""
+    ``offsets[e]`` is the mixed-radix transition constant (next(c) = c −
+    offsets[e] on feasible states; ``off_max`` ≥ max offsets); ``block_c``
+    selects the C-blocked pipeline (``choose_block_c`` picks it from the
+    VMEM budget).  ``interpret=None`` resolves via :func:`resolve_interpret`
+    (compiled on TPU, interpreter elsewhere)."""
+    interp = resolve_interpret(interpret)
+    if block_c is not None:
+        return _dp_forward_blocked(
+            upsilon, sigma2, feasible, offsets, v0, n_edges=n_edges,
+            u_max=u_max, off_max=off_max, block_c=block_c, interpret=interp)
     S, C = v0.shape
     W = packed_words(n_edges)
-    kernel = functools.partial(_dp_kernel, n_edges=n_edges, u_max=u_max)
+    kernel = functools.partial(_dp_kernel, n_edges=n_edges, u_max=u_max,
+                               off_max=off_max)
     return pl.pallas_call(
         kernel,
         out_shape=(jax.ShapeDtypeStruct((S, C), jnp.float32),
@@ -115,12 +264,12 @@ def dp_forward_pallas(upsilon, sigma2, feasible, next_onehot, v0,
         in_specs=[
             pl.BlockSpec((n_edges,), lambda: (0,)),
             pl.BlockSpec((n_edges,), lambda: (0,)),
+            pl.BlockSpec((n_edges,), lambda: (0,)),
             pl.BlockSpec((n_edges, C), lambda: (0, 0)),
-            pl.BlockSpec((n_edges, C, C), lambda: (0, 0, 0)),
             pl.BlockSpec((S, C), lambda: (0, 0)),
         ],
         out_specs=(pl.BlockSpec((S, C), lambda: (0, 0)),
                    pl.BlockSpec((W, S, C), lambda: (0, 0, 0))),
-        scratch_shapes=[pltpu.VMEM((u_max + S, C), jnp.float32)],
-        interpret=resolve_interpret(interpret),
-    )(upsilon, sigma2, feasible, next_onehot, v0)
+        scratch_shapes=[pltpu.VMEM((u_max + S, off_max + C), jnp.float32)],
+        interpret=interp,
+    )(upsilon, sigma2, offsets, feasible, v0)

@@ -1,20 +1,27 @@
 """jit'd wrapper: ESDP Algorithm 2 on the Pallas budgeted-DP kernel.
 
 Drop-in equivalent of core.dp.solve_budgeted_dp (tested for exact
-agreement): prepares the one-hot gather operands, runs the VMEM-resident
-kernel, then applies the eq.-17 s* rule and backtracks in plain jnp from
-the bit-packed decision words.
+agreement): derives the offset-encoded kernel operands, runs the
+VMEM-resident (or C-blocked, for large capacity spaces) kernel, then
+applies the eq.-17 s* rule and backtracks in plain jnp from the bit-packed
+decision words.
 
-Batch-readiness (what makes this usable from the hot path):
-  * kernel operands are built ONCE per DPTables instance and cached on the
-    tables object — repeated per-slot calls (and every trace of a jitted
-    scan) reuse the same constants instead of re-deriving an (E, C, C)
-    one-hot on the host;
+Operand contract (what makes this usable from the hot path):
+  * the kernel operands are the (E, C) feasibility plane and the (E,) int32
+    transition-offset vector — O(E·C) and O(E) memory.  ``offsets`` is a
+    field of ``DPTables`` itself, built and VALIDATED in
+    ``core.dp.build_tables`` (the old per-instance one-hot cache bolted on
+    via ``object.__setattr__`` is gone: a frozen or ``dataclasses.replace``d
+    tables object can never carry a stale operand again);
+  * operands are prepared with HOST numpy so repeated traces never leak a
+    tracer; ``prepare_tables`` is a cheap pure function of the tables;
   * the whole wrapper is vmap-safe: ``simulate_batch``/``simulate_grid``
-    can map it over seed batches (Pallas batches the call; the cached
-    operands stay unbatched constants);
+    can map it over seed batches (Pallas batches the call; the operands
+    stay unbatched constants);
   * decisions come back packed (⌈E/32⌉, S, C) int32 — 32× less memory than
-    the old (E, S, C) f32 tensor.
+    the old (E, S, C) f32 tensor — and the backtrack walks them with pure
+    offset arithmetic (cs − offsets[e]), per-edge constants streamed as
+    lax.scan inputs instead of per-element table gathers.
 
 VALUE_BOUND contract: kernel arithmetic is f32, exact for integers < 2²⁴.
 Whenever this wrapper is called with CONCRETE statistics it verifies that no
@@ -31,39 +38,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...core.dp import DPTables
-from .kernel import NEG, dp_forward_pallas, resolve_interpret
+from .kernel import (NEG, choose_block_c, dp_forward_pallas,
+                     resolve_interpret)
 
 __all__ = ["VALUE_BOUND", "prepare_tables", "max_achievable_value",
            "solve_budgeted_dp_pallas", "resolve_interpret"]
 
 VALUE_BOUND = 2 ** 24          # f32-exact integer domain (kernel contract)
 
-_OPERAND_CACHE_ATTR = "_pallas_operands"
-
-
-def _build_operands(tables: DPTables):
-    # cached as HOST numpy: a jnp array materialized during a trace would be
-    # a tracer, and caching a tracer across calls leaks it out of its trace
-    feas = np.asarray(tables.feasible).T.astype(np.float32)        # (E, C)
-    nxt = np.asarray(tables.next_state).T                          # (E, C)
-    E, C = nxt.shape
-    oh = np.zeros((E, C, C), np.float32)
-    oh[np.arange(E)[:, None], nxt, np.arange(C)[None, :]] = 1.0    # oh[e, src, dst]
-    return feas, oh
-
 
 def prepare_tables(tables: DPTables):
-    """(feasible (E,C) f32, next_onehot (E,C,C) f32) kernel operands.
+    """(feasible (E, C) f32, offsets (E,) i32) kernel operands.
 
-    Cached on the DPTables instance: the first call pays the host-side
-    one-hot construction, every later call (e.g. per slot inside the ESDP
-    hot path, or per trace of a batched scan) is a dict lookup.
+    Pure host-numpy derivations of ``DPTables`` fields — nothing is cached
+    on the tables object, so there is no stale-cache hazard.  Offsets of
+    never-feasible edges (infeasible even at full capacity) are zeroed:
+    they are masked everywhere, and zeroing keeps ``max(offsets)`` — the
+    kernel's pad width — tight.
     """
-    cached = getattr(tables, _OPERAND_CACHE_ATTR, None)
-    if cached is None:
-        cached = _build_operands(tables)
-        object.__setattr__(tables, _OPERAND_CACHE_ATTR, cached)
-    return cached
+    feas = np.asarray(tables.feasible).T.astype(np.float32)        # (E, C)
+    usable = np.asarray(tables.feasible)[tables.full_state]        # (E,)
+    offsets = np.where(usable, np.asarray(tables.offsets), 0)
+    return feas, offsets.astype(np.int32)
 
 
 def max_achievable_value(sigma2, tables: DPTables) -> int:
@@ -103,19 +99,36 @@ def _check_value_bound(sigma2, tables: DPTables) -> None:
             f"use the 'reference' (int32) solver backend.")
 
 
+def _check_u_max(upsilon, u_max: int) -> None:
+    """The kernel clamps shifts at u_max for memory safety, which would
+    SILENTLY corrupt values if any Υ̂ exceeded it — turn a contract breach
+    into an error whenever the statistics are concrete (traced calls are
+    covered by the u_max_for_horizon bound test)."""
+    if isinstance(upsilon, jax.core.Tracer):
+        return
+    top = int(np.max(np.asarray(upsilon))) if np.size(upsilon) else 0
+    if top > u_max:
+        raise ValueError(
+            f"max Υ̂ = {top} exceeds u_max = {u_max}: the shift scratch is "
+            f"too short and the kernel would clamp (wrong values). Pass "
+            f"u_max ≥ max Υ̂ (stats.u_max_for_horizon bounds the default "
+            f"schedules) or leave u_max=None.")
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("s_cap", "u_max", "full_state",
-                                    "interpret"))
-def _solve(upsilon, sigma2, feasible, next_onehot, s_limit,
-           *, s_cap: int, u_max: int, full_state: int, interpret: bool):
+                   static_argnames=("s_cap", "u_max", "off_max", "full_state",
+                                    "interpret", "block_c"))
+def _solve(upsilon, sigma2, feasible, offsets, s_limit,
+           *, s_cap: int, u_max: int, off_max: int, full_state: int,
+           interpret: bool, block_c: int | None):
     E = upsilon.shape[0]
     S = s_cap + 1
-    C = feasible.shape[1]
-    v0 = jnp.full((S, C), NEG, jnp.float32).at[0, :].set(0.0)
+    v0 = jnp.full((S, feasible.shape[1]), NEG, jnp.float32).at[0, :].set(0.0)
 
     V, decisions = dp_forward_pallas(
-        upsilon, sigma2, feasible, next_onehot, v0,
-        n_edges=E, u_max=u_max, interpret=interpret)
+        upsilon, sigma2, feasible, offsets, v0,
+        n_edges=E, u_max=u_max, off_max=off_max, interpret=interpret,
+        block_c=block_c)
 
     v_row = V[:, full_state]
     s_vals = jnp.arange(S, dtype=jnp.int32)
@@ -126,40 +139,57 @@ def _solve(upsilon, sigma2, feasible, next_onehot, s_limit,
     score = s_vals.astype(jnp.float32) + jnp.sqrt(jnp.maximum(v_row, 0.0))
     s_star = jnp.argmax(jnp.where(ok, score, -jnp.inf)).astype(jnp.int32)
 
-    next_idx = jnp.argmax(next_onehot, axis=1)       # (E, C)
+    # backtrack on offset arithmetic: the per-edge constants (Υ̂, offset,
+    # word id, bit id) stream in as scan inputs, so the loop body is scalar
+    # arithmetic plus ONE 1-element dynamic slice of the packed words — no
+    # per-element gathers from (E, C) transition tables
+    e_ids = jnp.arange(E, dtype=jnp.int32)
 
-    def back(e, carry):
-        s, cs, x = carry
-        word = decisions[e // 32, s, cs]
-        d = ((word >> (e % 32)) & 1) > 0
-        x = x.at[e].set(d.astype(jnp.int32))
-        s_new = jnp.maximum(s - upsilon[e], 0)
-        return (jnp.where(d, s_new, s),
-                jnp.where(d, next_idx[e, cs], cs), x)
+    def back(carry, x):
+        s, cs = carry
+        u, off, w, b = x
+        word = jax.lax.dynamic_slice(decisions, (w, s, cs), (1, 1, 1))
+        d = (word[0, 0, 0] >> b) & 1
+        taken = d > 0
+        s = jnp.where(taken, jnp.maximum(s - u, 0), s)
+        cs = jnp.where(taken, cs - off, cs)
+        return (s, cs), d
 
-    _, _, x = jax.lax.fori_loop(
-        0, E, back, (s_star, jnp.int32(full_state),
-                     jnp.zeros(E, jnp.int32)))
+    (_, _), x = jax.lax.scan(
+        back, (s_star, jnp.int32(full_state)),
+        (upsilon, offsets, e_ids // 32, e_ids % 32))
     return x, s_star, v_row
 
 
 def solve_budgeted_dp_pallas(upsilon, sigma2, tables: DPTables, s_cap: int,
                              s_limit, u_max: int | None = None,
-                             allowed=None, interpret: bool | None = None):
-    """Same contract as core.dp.solve_budgeted_dp (+ interpret switch).
+                             allowed=None, interpret: bool | None = None,
+                             block_c: "int | str | None" = "auto"):
+    """Same contract as core.dp.solve_budgeted_dp (+ kernel knobs).
 
     ``interpret=None`` auto-resolves (compiled on TPU, interpreter
-    elsewhere); ``u_max=None`` uses the always-safe s_cap+1 shift padding.
+    elsewhere); ``u_max=None`` uses the always-safe s_cap+1 shift padding —
+    callers that know the schedule bound (``stats.u_max_for_horizon``)
+    should pass it to shrink the scratch; ``block_c="auto"`` picks the
+    C-blocked pipeline from the VMEM budget (``None`` forces whole-plane,
+    an int forces that tile width).
     """
     _check_value_bound(sigma2, tables)
-    feas, oh = prepare_tables(tables)
+    feas, offs = prepare_tables(tables)
     if allowed is not None:
         feas = feas * jnp.asarray(allowed, jnp.float32)[:, None]
     if u_max is None:
         u_max = s_cap + 1
+    _check_u_max(upsilon, int(u_max))
+    E = offs.shape[0]
+    off_max = int(offs.max()) if E else 0
+    if block_c == "auto":
+        block_c = choose_block_c(s_cap + 1, tables.n_states, E,
+                                 int(u_max), off_max)
     x, s_star, v_row = _solve(
         jnp.asarray(upsilon, jnp.int32), jnp.asarray(sigma2, jnp.int32),
-        feas, oh, jnp.asarray(s_limit, jnp.int32),
-        s_cap=s_cap, u_max=int(u_max), full_state=tables.full_state,
-        interpret=resolve_interpret(interpret))
+        feas, jnp.asarray(offs), jnp.asarray(s_limit, jnp.int32),
+        s_cap=s_cap, u_max=int(u_max), off_max=off_max,
+        full_state=tables.full_state,
+        interpret=resolve_interpret(interpret), block_c=block_c)
     return x, {"s_star": s_star, "value_row": v_row}

@@ -1,5 +1,6 @@
 """Pure-jnp oracle for the budgeted-DP kernel (mirrors core/dp._dp_forward
-in the kernel's f32 value domain, including the bit-packed decision words)."""
+in the kernel's f32 value domain, including the bit-packed decision words
+and the offset-encoded capacity transition next(c) = c − offsets[e])."""
 from __future__ import annotations
 
 import jax
@@ -8,19 +9,25 @@ import jax.numpy as jnp
 from .kernel import NEG, packed_words
 
 
-def dp_forward_ref(upsilon, sigma2, feasible, next_onehot, v0):
+def dp_forward_ref(upsilon, sigma2, feasible, offsets, v0):
     """Same contract as kernel.dp_forward_pallas, computed with jnp gathers:
-    returns (V (S, C) f32, decisions (⌈E/32⌉, S, C) i32 bit-packed)."""
+    returns (V (S, C) f32, decisions (⌈E/32⌉, S, C) i32 bit-packed).
+
+    The capacity gather clamps c − offsets[e] at 0; clamped reads are
+    exactly the states with c < offsets[e], which are infeasible and masked
+    to NEG — the same inertness argument the kernel's pad columns rely on.
+    """
     E = upsilon.shape[0]
     S, C = v0.shape
     rows = jnp.arange(S)
-    next_idx = jnp.argmax(next_onehot, axis=1)        # (E, C) source index
+    cols = jnp.arange(C)
 
     def body(V, e_rev):
         e = E - 1 - e_rev
         u = upsilon[e]
+        off = offsets[e]
         shifted = V[jnp.maximum(rows - u, 0), :]
-        take = jnp.take(shifted, next_idx[e], axis=1) + sigma2[e].astype(
+        take = shifted[:, jnp.maximum(cols - off, 0)] + sigma2[e].astype(
             jnp.float32)
         take = jnp.where(feasible[e][None, :] > 0, take, NEG)
         dec = (take > V).astype(jnp.int32)

@@ -74,6 +74,7 @@ class ClusterSim:
         self.alive_fn = alive_fn or (lambda t: np.ones(R, bool))
         self.m = instance.m
         self.s_cap = stats_mod.s_cap_for_horizon(T, self.m)
+        self.u_max = stats_mod.u_max_for_horizon(T, self.m)
 
     # ------------------------------------------------------------------
     def _streams(self):
@@ -117,7 +118,8 @@ class ClusterSim:
 
         jit_dp = jax.jit(
             lambda u, s, lim, al: self.solver(
-                u, s, tables, self.s_cap, lim, allowed=al)[0])
+                u, s, tables, self.s_cap, lim, allowed=al,
+                u_max=self.u_max)[0])
         jit_oracle = jax.jit(
             lambda v, al: oracle_knapsack(v, tables, al)[0])
         jit_greedy = jax.jit(

@@ -117,19 +117,52 @@ def test_budgeted_dp_kernel_packed_decisions_match_ref(E):
     sig = rng.integers(1, 3000, E).astype(np.int32)
     tables = build_tables(A, c)
     s_cap = int(ups.sum())
-    feas, oh = prepare_tables(tables)
-    feas, oh = jnp.asarray(feas), jnp.asarray(oh)
+    feas, offs = prepare_tables(tables)
+    feas, offs = jnp.asarray(feas), jnp.asarray(offs)
     v0 = jnp.full((s_cap + 1, tables.n_states), NEG,
                   jnp.float32).at[0, :].set(0.0)
     V_k, dec_k = dp_forward_pallas(jnp.asarray(ups), jnp.asarray(sig), feas,
-                                   oh, v0, n_edges=E, u_max=int(ups.max() + 1),
-                                   interpret=True)
+                                   offs, v0, n_edges=E,
+                                   u_max=int(ups.max() + 1),
+                                   off_max=int(offs.max()), interpret=True)
     V_r, dec_r = dp_forward_ref(jnp.asarray(ups), jnp.asarray(sig), feas,
-                                oh, v0)
+                                offs, v0)
     assert dec_k.shape == ((E + 31) // 32, s_cap + 1, tables.n_states)
     assert dec_k.dtype == jnp.int32
     np.testing.assert_array_equal(np.asarray(V_k), np.asarray(V_r))
     np.testing.assert_array_equal(np.asarray(dec_k), np.asarray(dec_r))
+
+
+@pytest.mark.parametrize("tile", ["tight", "padded"])
+def test_budgeted_dp_blocked_grid_matches_ref(tile):
+    """The C-blocked pipeline (scan over edges × capacity-tile grid, haloed
+    left-neighbor loads, C padded to a tile multiple) is bit-exact vs the
+    oracle — values and packed decision words.  ``tight`` runs the minimum
+    legal tile (= off_max, maximum tile count); ``padded`` a tile width that
+    does not divide C, exercising the pad-state masking."""
+    rng = np.random.default_rng(13)
+    E, K = 14, 3
+    A = rng.integers(1, 3, (K, E))
+    c = rng.integers(1, 4, K)
+    A = np.minimum(A, c[:, None])
+    ups = rng.integers(0, 5, E).astype(np.int32)
+    sig = rng.integers(1, 3000, E).astype(np.int32)
+    tables = build_tables(A, c)
+    s_cap = int(ups.sum())
+    feas, offs = prepare_tables(tables)
+    feas, offs = jnp.asarray(feas), jnp.asarray(offs)
+    off_max = int(offs.max())
+    block_c = off_max if tile == "tight" else off_max + 3
+    v0 = jnp.full((s_cap + 1, tables.n_states), NEG,
+                  jnp.float32).at[0, :].set(0.0)
+    V_b, dec_b = dp_forward_pallas(
+        jnp.asarray(ups), jnp.asarray(sig), feas, offs, v0, n_edges=E,
+        u_max=int(ups.max() + 1), off_max=off_max, interpret=True,
+        block_c=block_c)
+    V_r, dec_r = dp_forward_ref(jnp.asarray(ups), jnp.asarray(sig), feas,
+                                offs, v0)
+    np.testing.assert_array_equal(np.asarray(V_b), np.asarray(V_r))
+    np.testing.assert_array_equal(np.asarray(dec_b), np.asarray(dec_r))
 
 
 def test_budgeted_dp_value_rows_share_feasibility_contract():

@@ -33,6 +33,7 @@ from repro.core.solvers import (SOLVER_ENV_VAR, get_solver, resolve_solver)
 from repro.experiments import GridPoint, SweepSpec, get_scenario, run_spec
 from repro.kernels.budgeted_dp.kernel import resolve_interpret
 from repro.kernels.budgeted_dp.ops import (VALUE_BOUND, max_achievable_value,
+                                           prepare_tables,
                                            solve_budgeted_dp_pallas)
 
 REF = get_solver("reference")
@@ -220,6 +221,106 @@ def test_s_limit_below_cap_matches_bruteforce():
         assert s_star == eq17_star(bf_row, s_limit)
         assert s_star <= s_limit
         np.testing.assert_array_equal(row, bf_row)
+
+
+# ---------------------------------------------------------------------------
+# offset-encoded transitions (the E·C² → E operand contract)
+# ---------------------------------------------------------------------------
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_offset_identity_on_feasible_pairs(seed):
+        """DPTables.offsets is the whole transition table: next_state[c, e]
+        == c − offsets[e] for EVERY feasible (e, c), and offsets[e] ==
+        Σ_k A[k,e]·strides[k]."""
+        rng = np.random.default_rng(seed)
+        E, K = int(rng.integers(2, 16)), int(rng.integers(1, 5))
+        A, c, _, _ = _rand_problem(rng, E, K)
+        tables = build_tables(A, c)
+        np.testing.assert_array_equal(
+            tables.offsets, (A.T * tables.strides[None, :]).sum(axis=1))
+        states, edges = np.nonzero(tables.feasible)
+        np.testing.assert_array_equal(
+            tables.next_state[states, edges],
+            states - tables.offsets[edges])
+
+
+def test_prepare_tables_offsets_track_tables():
+    """Kernel operands are pure derivations of DPTables fields — a replaced
+    tables object can never serve stale operands (the old side-channel
+    cache), and never-feasible edges get offset 0 (keeps the pad tight)."""
+    A = np.array([[1, 2, 3]])           # edge 2 needs 3 > c=2: never feasible
+    c = np.array([2])
+    tables = build_tables(A, c)
+    feas, offs = prepare_tables(tables)
+    np.testing.assert_array_equal(offs, [1, 2, 0])
+    np.testing.assert_array_equal(feas, np.asarray(tables.feasible,
+                                                   np.float32).T)
+    swapped = dataclasses.replace(
+        tables, feasible=np.zeros_like(tables.feasible))
+    feas2, _ = prepare_tables(swapped)
+    assert not feas2.any()              # derived from the NEW fields
+
+
+def test_large_c_blocked_grid_bitexact_vs_reference():
+    """C = 512 (radices 8·8·8) — a capacity space whose one-hot operand
+    (4·E·C² = 16 MB at E=16) could never fit VMEM — through the blocked
+    grid path (forced small tiles), bit-exact vs the int32 reference on
+    x / s* / value_row, with an allowed mask."""
+    rng = np.random.default_rng(21)
+    E, K = 16, 3
+    A = rng.integers(0, 2, (K, E))      # 0/1 demands keep off_max ≤ 128
+    A[:, A.sum(axis=0) == 0] = 1        # no all-zero demand columns
+    c = np.array([7, 7, 7])
+    ups = rng.integers(0, 4, E).astype(np.int32)
+    sig = rng.integers(1, 5000, E).astype(np.int32)
+    allowed = rng.integers(0, 2, E).astype(bool)
+    allowed[:2] = True
+    tables = build_tables(A, c)
+    assert tables.n_states == 512
+    s_cap = int(ups.sum())
+    got_ref = _solve_with(REF, ups, sig, tables, s_cap, s_cap, allowed)
+    x, info = solve_budgeted_dp_pallas(
+        ups, sig, tables, s_cap, s_cap, allowed=allowed, interpret=True,
+        block_c=128)
+    assert int(tables.offsets.max()) <= 128     # halo contract holds
+    np.testing.assert_array_equal(got_ref[0], np.asarray(x))
+    assert got_ref[1] == int(info["s_star"])
+    row = np.asarray(info["value_row"])
+    ref_row = got_ref[2]
+    np.testing.assert_array_equal(ref_row >= 0, row >= 0)
+    np.testing.assert_array_equal(ref_row[ref_row >= 0],
+                                  row[row >= 0].astype(np.int64))
+
+
+def test_undersized_u_max_raises_instead_of_clamping():
+    """The kernel clamps shifts at u_max for memory safety; the wrapper must
+    refuse a concrete contract breach rather than return silently-wrong
+    values."""
+    rng = np.random.default_rng(22)
+    A, c, ups, sig = _rand_problem(rng, 8, 2, u_hi=5)
+    ups[0] = 5
+    tables = build_tables(A, c)
+    with pytest.raises(ValueError, match="u_max"):
+        solve_budgeted_dp_pallas(ups, sig, tables, int(ups.sum()),
+                                 int(ups.sum()), u_max=3, interpret=True)
+
+
+def test_u_max_for_horizon_bounds_upsilon():
+    """The tight static shift bound: ξ(T)+1 dominates every Υ̂ the schedules
+    can emit (v̂ ≤ 1), and is m× smaller than the always-safe s_cap+1."""
+    inst = generate_instance(seed=0)
+    m = inst.m
+    for T in (150, 1500, 10**5):
+        u_max = stats_mod.u_max_for_horizon(T, m)
+        s_cap = stats_mod.s_cap_for_horizon(T, m)
+        assert u_max == s_cap // m + 1
+        for t in (1.0, float(T) / 2, float(T)):
+            ups, _, _, _ = stats_mod.scale_statistics(
+                jnp.ones(inst.n_edges, jnp.float32),
+                jnp.ones(inst.n_edges, jnp.int32), jnp.float32(t), m)
+            assert int(jnp.max(ups)) < u_max
 
 
 # ---------------------------------------------------------------------------
