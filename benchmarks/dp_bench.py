@@ -1,10 +1,12 @@
 """Timing harness for the Algorithm-2 solver backends.
 
 Times reference vs pallas-interpret vs pallas-compiled across named
-(E, C, S) configs of synthetic P4 instances — including large capacity
-spaces (C = 512 / 1024 / 4096) that the old (E, C, C) one-hot transition
-operand could never hold in VMEM (4·E·C² = 16 MB at E=16, C=512) but the
-offset-encoded kernel handles — and writes ``results/BENCH_dp.json``::
+(E, C, S) configs of synthetic P4 instances — large capacity spaces
+(C = 512 / 1024 / 4096) that the old (E, C, C) one-hot transition operand
+could never hold in VMEM, and long budget axes (S = 4096 / 8192) that even
+the offset-encoded whole-plane kernel cannot hold (``unblocked_vmem_bytes``
+over the budget) and that run through the 2-D S-tiled pipeline — and
+writes ``results/BENCH_dp.json``::
 
     python -m benchmarks.dp_bench            # full grid
     python -m benchmarks.dp_bench --smoke    # CI-sized grid
@@ -14,21 +16,30 @@ offset-encoded kernel handles — and writes ``results/BENCH_dp.json``::
 ``--baseline`` compares the fresh per-config/backend mean timings against a
 committed BENCH_dp.json (matched on (E, C, S, backend) so files from before
 the config-naming change still compare) and exits non-zero on a
-``--max-regression``-fold slowdown — the CI perf-regression guard.
+``--max-regression``-fold slowdown — the CI perf-regression guard.  The
+baseline records a host fingerprint (CPU model + jax version); when the
+fresh run's fingerprint differs, absolute wall-clock is not comparable and
+the guard WARNS instead of failing (refresh the committed file from the CI
+machine class to re-arm it).
 
 The compiled-pallas leg only runs on a real TPU; elsewhere it is recorded
-as skipped (the interpreter leg still exercises the kernel's program).  The
-largest config additionally times the C-blocked grid path (forced tiles) as
-backend ``pallas_interpret_blocked``.  Per-point records include the one-off
-table/operand preparation cost plus a kernel-vs-wrapper split:
-``forward_ms`` times the DP forward kernel alone, so the share spent in the
-eq.-17 selection + backtrack wrapper is visible in the numbers.
+as skipped (the interpreter leg still exercises the kernel's program).
+Configs with a forced ``block`` additionally time the blocked grid paths
+(C-blocked and S-tiled) as backend ``pallas_interpret_blocked``; every
+S-tiled leg is first checked BIT-EXACT against the reference backend on
+x / s* / value_row (the acceptance contract), and its record carries the
+tiling plus ``unblocked_vmem_bytes`` so "impossible unblocked" is visible
+in the artifact.  Per-point records include the one-off table/operand
+preparation cost plus a kernel-vs-wrapper split: ``forward_ms`` times the
+DP forward kernel alone, so the share spent in the eq.-17 selection +
+backtrack wrapper is visible in the numbers.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import pathlib
+import platform as platform_mod
 import statistics
 import sys
 import time
@@ -37,15 +48,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dp import build_tables
+from repro.core.dp import build_tables, solve_budgeted_dp
 from repro.core.solvers import get_solver
-from repro.kernels.budgeted_dp.kernel import NEG, dp_forward_pallas
-from repro.kernels.budgeted_dp.ops import prepare_tables
+from repro.kernels.budgeted_dp.kernel import (
+    NEG, VMEM_BUDGET_BYTES, choose_tiling, dp_forward_pallas,
+    unblocked_vmem_bytes)
+from repro.kernels.budgeted_dp.ops import (prepare_tables,
+                                           solve_budgeted_dp_pallas)
 
 # Named configs: explicit capacity vector c (C = Π(c_k+1)) and Υ̂ range.
 # The first four mirror the legacy (E, K, c_hi, u_hi) random draws so their
 # (E, C, S) keys line up with pre-offset baselines; the large-C configs are
-# the regime the offset encoding unlocks.
+# the regime the offset encoding unlocks; the long-S configs (``s_cap``
+# overrides the Υ̂-derived budget axis) are the long-horizon regime the
+# S-tiled pipeline unlocks — their plane is impossible unblocked
+# (``unblocked_vmem_bytes`` > budget, asserted at run time).
 CONFIGS = [
     {"name": "E12_C6", "E": 12, "c_rand": (2, 2), "u_hi": 4},
     {"name": "E24_C6", "E": 24, "c_rand": (2, 3), "u_hi": 6},
@@ -54,10 +71,14 @@ CONFIGS = [
     {"name": "E16_C512", "E": 16, "c": (7, 7, 7), "u_hi": 3},
     {"name": "E16_C1024", "E": 16, "c": (3, 15, 15), "u_hi": 3},
     {"name": "E16_C4096", "E": 16, "c": (7, 7, 7, 7), "u_hi": 2,
-     "blocked_c": 1024},   # off_max ≈ 585 (stride of the 4th resource is
-                           # 512), so the halo needs ≥ 1024-wide tiles
+     "block": (None, 1024)},   # off_max ≈ 585 (stride of the 4th resource
+                               # is 512), so the halo needs ≥ 1024 tiles
+    {"name": "E16_C512_S4096", "E": 16, "c": (7, 7, 7), "u_hi": 3,
+     "s_cap": 4095, "verify": True},
+    {"name": "E16_C512_S8192", "E": 16, "c": (7, 7, 7), "u_hi": 3,
+     "s_cap": 8191, "verify": True},
 ]
-SMOKE_NAMES = ("E12_C6", "E24_C6", "E16_C512")
+SMOKE_NAMES = ("E12_C6", "E24_C6", "E16_C512", "E16_C512_S4096")
 
 
 def _make_problem(cfg: dict, seed: int = 0):
@@ -76,6 +97,21 @@ def _make_problem(cfg: dict, seed: int = 0):
     ups = rng.integers(0, cfg["u_hi"] + 1, E).astype(np.int32)
     sig = rng.integers(1, 5000, E).astype(np.int32)
     return A, c, ups, sig
+
+
+def host_fingerprint() -> dict:
+    """CPU model + jax version: the facts that make absolute wall-clock
+    comparable between a fresh run and a committed baseline."""
+    cpu = platform_mod.processor() or platform_mod.machine()
+    try:
+        with open("/proc/cpuinfo") as fh:
+            for line in fh:
+                if line.lower().startswith("model name"):
+                    cpu = line.split(":", 1)[1].strip()
+                    break
+    except OSError:
+        pass
+    return {"cpu": cpu, "jax": jax.__version__}
 
 
 def _timed(call, runs: int) -> dict:
@@ -112,7 +148,8 @@ def _time_solver(solver, ups, sig, tables, s_cap, runs: int, u_max: int):
 
 
 def _time_forward(ups, sig, tables, s_cap, runs: int, interpret: bool,
-                  u_max: int, block_c: int | None = None):
+                  u_max: int, block_c: int | None = None,
+                  block_s: int | None = None):
     """The DP forward kernel alone — the kernel side of the
     kernel-vs-wrapper split (mean_ms − forward_ms ≈ s*-rule + backtrack)."""
     feas, offs = prepare_tables(tables)
@@ -121,12 +158,33 @@ def _time_forward(ups, sig, tables, s_cap, runs: int, interpret: bool,
     fn = jax.jit(lambda u, s: dp_forward_pallas(
         u, s, jnp.asarray(feas), jnp.asarray(offs), v0, n_edges=offs.shape[0],
         u_max=u_max, off_max=int(offs.max()),
-        interpret=interpret, block_c=block_c))
+        interpret=interpret, block_c=block_c, block_s=block_s))
 
     def call():
         jax.block_until_ready(fn(jnp.asarray(ups), jnp.asarray(sig)))
 
     return _timed(call, runs)
+
+
+def _verify_blocked_bitexact(ups, sig, tables, s_cap, u_max: int,
+                             block_s, block_c, interpret: bool) -> None:
+    """Acceptance contract for the blocked/tiled legs: x, s*, and the
+    feasibility-normalized value row are bit-exact vs the reference
+    backend.  Raises on any mismatch — a wrong kernel must fail the
+    benchmark, not record a fast wrong number."""
+    x_ref, info_ref = solve_budgeted_dp(
+        jnp.asarray(ups, jnp.int32), jnp.asarray(sig, jnp.int32), tables,
+        s_cap, jnp.int32(s_cap))
+    x_t, info_t = solve_budgeted_dp_pallas(
+        ups, sig, tables, s_cap, s_cap, u_max=u_max, interpret=interpret,
+        block_c=block_c, block_s=block_s)
+    np.testing.assert_array_equal(np.asarray(x_ref), np.asarray(x_t))
+    assert int(info_ref["s_star"]) == int(info_t["s_star"])
+    row_ref = np.asarray(info_ref["value_row"]).astype(np.int64)
+    row_t = np.asarray(info_t["value_row"])
+    np.testing.assert_array_equal(row_ref >= 0, row_t >= 0)
+    np.testing.assert_array_equal(row_ref[row_ref >= 0],
+                                  row_t[row_t >= 0].astype(np.int64))
 
 
 def bench(configs, runs: int) -> dict:
@@ -139,51 +197,79 @@ def bench(configs, runs: int) -> dict:
         tables = build_tables(A, c)
         build_ms = (time.perf_counter() - t0) * 1e3
         t0 = time.perf_counter()
-        prepare_tables(tables)               # offsets + feasibility plane
+        feas, offs = prepare_tables(tables)  # offsets + feasibility plane
         prepare_ms = (time.perf_counter() - t0) * 1e3
-        s_cap = int(ups.sum())
+        s_cap = int(cfg.get("s_cap", ups.sum()))
         u_max = int(ups.max() + 1)
+        S, C = s_cap + 1, tables.n_states
+        off_max = int(offs.max())
+        unblocked = unblocked_vmem_bytes(S, C, cfg["E"], u_max, off_max)
+        # the tiling the pallas backends auto-resolve for this plane: the
+        # solver legs below time exactly that execution path, so the
+        # long-S configs get an end-to-end mean_ms AND a kernel-vs-wrapper
+        # split through the S-tiled pipeline, not just a forward number
+        block_s, block_c = choose_tiling(S, C, cfg["E"], u_max, off_max)
         point = {"config": cfg["name"], "E": cfg["E"], "K": len(c),
-                 "n_states": tables.n_states, "S": s_cap + 1,
+                 "n_states": C, "S": S,
                  "build_tables_ms": build_ms,
-                 "prepare_operands_ms": prepare_ms, "backends": {}}
+                 "prepare_operands_ms": prepare_ms,
+                 "unblocked_vmem_bytes": unblocked,
+                 "vmem_budget_bytes": VMEM_BUDGET_BYTES,
+                 "tiling": {"block_s": block_s, "block_c": block_c},
+                 "backends": {}}
+        if cfg.get("verify"):
+            _verify_blocked_bitexact(ups, sig, tables, s_cap, u_max,
+                                     block_s, block_c, platform != "tpu")
+            point["bitexact_vs_reference"] = True
         for name in backends:
             if name == "pallas" and platform != "tpu":
                 point["backends"][name] = {
-                    "skipped": f"compiled pallas needs TPU (platform="
+                    "skipped": "compiled pallas needs TPU (platform="
                                f"{platform}); interpret leg covers the "
-                               f"kernel program"}
+                               "kernel program"}
                 continue
             solver = get_solver(name)
             rec = _time_solver(solver, ups, sig, tables, s_cap, runs, u_max)
             if name != "reference":
                 interpret = (name == "pallas_interpret" or platform != "tpu")
                 fwd = _time_forward(ups, sig, tables, s_cap, runs, interpret,
-                                    u_max)
+                                    u_max, block_c=block_c, block_s=block_s)
                 rec["forward_ms"] = fwd["mean_ms"]
                 rec["wrapper_ms"] = max(rec["mean_ms"] - fwd["mean_ms"], 0.0)
+                if block_c is not None:
+                    rec["block_s"], rec["block_c"] = block_s, block_c
             point["backends"][name] = rec
-        if cfg.get("blocked_c"):
-            fwd = _time_forward(ups, sig, tables, s_cap, runs,
-                                platform != "tpu", u_max,
-                                block_c=cfg["blocked_c"])
-            point["backends"]["pallas_interpret_blocked" if platform != "tpu"
+        if cfg.get("block"):
+            # additionally time a FORCED tiling (e.g. the C-blocked grid on
+            # a plane that also fits whole-plane, for comparison)
+            fbs, fbc = cfg["block"]
+            interpret = platform != "tpu"
+            fwd = _time_forward(ups, sig, tables, s_cap, runs, interpret,
+                                u_max, block_c=fbc, block_s=fbs)
+            point["backends"]["pallas_interpret_blocked" if interpret
                               else "pallas_blocked"] = {
                 "forward_ms": fwd["mean_ms"], "warmup_ms": fwd["warmup_ms"],
-                "runs": runs, "block_c": cfg["blocked_c"]}
+                "runs": runs, "block_c": fbc, "block_s": fbs}
         records.append(point)
-        print(f"{cfg['name']}: E={cfg['E']} C={tables.n_states} "
-              f"S={s_cap + 1}: " + "  ".join(
+        print(f"{cfg['name']}: E={cfg['E']} C={C} "
+              f"S={S}: " + "  ".join(
                   f"{n}={r['mean_ms']:.2f}ms" if "mean_ms" in r
                   else (f"{n}[fwd]={r['forward_ms']:.2f}ms"
                         if "forward_ms" in r else f"{n}=skip")
                   for n, r in point["backends"].items()), flush=True)
-    return {"platform": platform, "jax": jax.__version__, "grid": records}
+    return {"platform": platform, "jax": jax.__version__,
+            "host": host_fingerprint(), "grid": records}
+
+
+def _guard_ms(rec: dict):
+    """The guarded timing of one backend record: the end-to-end mean when
+    present, else the forward-only mean (the blocked/tiled legs)."""
+    return rec.get("mean_ms", rec.get("forward_ms"))
 
 
 def check_baseline(result: dict, base: dict,
                    max_regression: float) -> list[str]:
-    """Compare per-config/backend mean timings against a committed baseline.
+    """Compare per-config/backend timings against a committed baseline.
 
     Keyed on (E, n_states, S, backend) so baselines written before configs
     had names (including the one-hot-era files) still compare.  Only pairs
@@ -192,21 +278,53 @@ def check_baseline(result: dict, base: dict,
     base_ms = {}
     for point in base.get("grid", []):
         for backend, rec in point["backends"].items():
-            if "mean_ms" in rec:
+            if _guard_ms(rec) is not None:
                 base_ms[(point["E"], point["n_states"], point["S"],
-                         backend)] = rec["mean_ms"]
+                         backend)] = _guard_ms(rec)
     failures = []
     for point in result["grid"]:
         for backend, rec in point["backends"].items():
             key = (point["E"], point["n_states"], point["S"], backend)
-            if "mean_ms" not in rec or key not in base_ms:
+            got = _guard_ms(rec)
+            if got is None or key not in base_ms:
                 continue
-            if rec["mean_ms"] > max_regression * base_ms[key]:
+            if got > max_regression * base_ms[key]:
                 failures.append(
                     f"{point.get('config', key)}/{backend}: "
-                    f"{rec['mean_ms']:.2f}ms vs baseline "
+                    f"{got:.2f}ms vs baseline "
                     f"{base_ms[key]:.2f}ms (> {max_regression:.1f}x)")
     return failures
+
+
+def fingerprints_match(result: dict, base: dict) -> bool:
+    """Absolute wall-clock only compares within one machine class: same CPU
+    model and jax version.  Baselines from before fingerprints were
+    recorded never match (they cannot be attributed to a host)."""
+    fresh, committed = result.get("host"), base.get("host")
+    return bool(fresh and committed and fresh == committed)
+
+
+def apply_baseline_guard(result: dict, base: dict, baseline_path: str,
+                         max_regression: float, failures: list) -> None:
+    """Shared guard epilogue (dp_bench and scenarios_bench): fail the run
+    on regressions within one machine class, warn when the host
+    fingerprint differs (absolute wall-clock is not comparable across
+    machines — refresh the committed baseline from the comparison machine
+    class to re-arm the strict check)."""
+    if failures and not fingerprints_match(result, base):
+        print("WARNING: host fingerprint differs from baseline "
+              f"({result.get('host')} vs {base.get('host')}); "
+              "would-be regressions reported as warnings only — refresh "
+              f"{baseline_path} from the comparison machine to re-arm")
+        for f in failures:
+            print("  WARN " + f)
+    elif failures:
+        print("PERF REGRESSION vs " + baseline_path)
+        for f in failures:
+            print("  " + f)
+        sys.exit(1)
+    else:
+        print(f"no >{max_regression:.1f}x regression vs {baseline_path}")
 
 
 def main() -> None:
@@ -227,7 +345,7 @@ def main() -> None:
         bpath = pathlib.Path(args.baseline)
         if not bpath.exists():
             sys.exit(f"baseline {bpath} not found — refresh it with: "
-                     f"PYTHONPATH=src python -m benchmarks.dp_bench "
+                     "PYTHONPATH=src python -m benchmarks.dp_bench "
                      f"--runs 30 --out {bpath}")
         base = json.loads(bpath.read_text())
     out = bench(configs,
@@ -237,13 +355,8 @@ def main() -> None:
     path.write_text(json.dumps(out, indent=2))
     print(f"wrote {path}")
     if base is not None:
-        failures = check_baseline(out, base, args.max_regression)
-        if failures:
-            print("PERF REGRESSION vs " + args.baseline)
-            for f in failures:
-                print("  " + f)
-            sys.exit(1)
-        print(f"no >{args.max_regression:.1f}x regression vs {args.baseline}")
+        apply_baseline_guard(out, base, args.baseline, args.max_regression,
+                             check_baseline(out, base, args.max_regression))
 
 
 if __name__ == "__main__":

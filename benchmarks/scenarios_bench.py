@@ -3,13 +3,34 @@ fluctuation regime (DVFS, MMPP bursts, stragglers, brownouts, outages).
 
 One declarative spec per scenario — the scenario registry makes "does ESDP
 still win under regime X?" a 5-line question (see docs/scenarios.md).
+
+Run as a module for the timed benchmark (the nightly perf-trend artifact)::
+
+    python -m benchmarks.scenarios_bench                 # full regimes
+    python -m benchmarks.scenarios_bench --smoke
+    python -m benchmarks.scenarios_bench --baseline results/BENCH_scenarios.json
+
+Writes ``results/BENCH_scenarios.json``: per-scenario end-to-end sweep
+wall-clock (trace + compile recorded separately from the steady-state
+re-run) plus the ASW/regret summary.  ``--baseline`` applies the same
+guard as ``dp_bench``: exits non-zero on a ``--max-regression``-fold
+slowdown, warn-not-fail when the host fingerprint (CPU model + jax
+version) differs from the committed file.
 """
 from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
 
 from repro.core.baselines import hswf_factory
 from repro.core.esdp import esdp_factory
 from repro.core.stats import g_logt_only
 from repro.experiments import SweepSpec, run_spec, scenario_names
+
+from .dp_bench import host_fingerprint
 
 T = 800
 SEEDS = (21, 22)
@@ -38,3 +59,85 @@ def scenario_table(rows, smoke=False):
                      f"hswf={h.asw_mean:.1f};"
                      f"oracle={e.oracle_asw_mean:.1f};"
                      f"esdp_regret={e.regret_mean:.1f}"))
+
+
+def bench(smoke: bool) -> dict:
+    """Time every registered regime's full sweep (both policies, all
+    seeds).  The first run of a spec pays trace + compile; the second run
+    hits jit caches — recording both separates compile drift from
+    steady-state throughput drift in the nightly trend."""
+    import jax
+
+    names = ("iid", "markov_dvfs") if smoke else scenario_names()
+    records = []
+    for scen in names:
+        spec = _spec(scen)
+        if smoke:
+            spec = spec.smoke()
+        t0 = time.perf_counter()
+        res = {r.policy: r for r in run_spec(spec)}
+        cold_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        res = {r.policy: r for r in run_spec(spec)}
+        warm_s = time.perf_counter() - t0
+        e, h = res["esdp"], res["hswf"]
+        records.append({
+            "scenario": scen, "T": spec.T, "seeds": len(spec.seeds),
+            "cold_s": cold_s, "warm_s": warm_s,
+            "esdp_asw": e.asw_mean, "hswf_asw": h.asw_mean,
+            "esdp_regret": e.regret_mean,
+        })
+        print(f"scenarios/{scen}: cold={cold_s:.2f}s warm={warm_s:.2f}s "
+              f"esdp={e.asw_mean:.1f} hswf={h.asw_mean:.1f}", flush=True)
+    return {"platform": jax.default_backend(), "jax": jax.__version__,
+            "host": host_fingerprint(), "smoke": smoke, "grid": records}
+
+
+def check_baseline(result: dict, base: dict,
+                   max_regression: float) -> list[str]:
+    """Warm (steady-state) per-scenario wall-clock vs the committed file;
+    only (scenario, T, seeds)-matched rows compare."""
+    base_s = {(r["scenario"], r["T"], r["seeds"]): r["warm_s"]
+              for r in base.get("grid", [])}
+    failures = []
+    for r in result["grid"]:
+        key = (r["scenario"], r["T"], r["seeds"])
+        if key not in base_s:
+            continue
+        if r["warm_s"] > max_regression * base_s[key]:
+            failures.append(
+                f"scenarios/{r['scenario']}: warm {r['warm_s']:.2f}s vs "
+                f"baseline {base_s[key]:.2f}s (> {max_regression:.1f}x)")
+    return failures
+
+
+def main() -> None:
+    from .dp_bench import apply_baseline_guard
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="CI-sized regimes")
+    ap.add_argument("--out", default="results/BENCH_scenarios.json")
+    ap.add_argument("--baseline", default=None,
+                    help="committed BENCH_scenarios.json to guard against")
+    ap.add_argument("--max-regression", type=float, default=2.0)
+    args = ap.parse_args()
+    base = None
+    if args.baseline:
+        bpath = pathlib.Path(args.baseline)
+        if not bpath.exists():
+            sys.exit(f"baseline {bpath} not found — refresh it with: "
+                     "PYTHONPATH=src python -m benchmarks.scenarios_bench "
+                     f"--out {bpath}")
+        base = json.loads(bpath.read_text())
+    out = bench(args.smoke)
+    path = pathlib.Path(args.out)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(out, indent=2))
+    print(f"wrote {path}")
+    if base is not None:
+        apply_baseline_guard(out, base, args.baseline, args.max_regression,
+                             check_baseline(out, base, args.max_regression))
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,9 @@ so the per-edge update is a (S × C) plane refresh: a *uniform shift* along s
 c always lands on c − offsets[e] — a *uniform shift* along the capacity axis
 too. That structure is exactly what `kernels/budgeted_dp` exploits on TPU
 (whole plane in VMEM, both shifts = padded dynamic slices, transitions = an
-(E,) offset vector instead of an (E, C, C) one-hot).
+(E,) offset vector instead of an (E, C, C) one-hot; planes too big for
+VMEM stream through C-blocked or 2-D S×C-tiled grids — both shifts read
+only towards smaller indices, so one halo tile per axis covers them).
 This module is the pure-JAX *reference* backend of the pluggable solver
 registry (`core/solvers.py`); the Pallas kernel backend is validated against
 `solve_budgeted_dp` by the differential harness in tests/test_solver_equiv.py.
@@ -34,7 +36,8 @@ NEG = jnp.int32(-(2**29))        # -inf sentinel; NEG + max Σ̂² never overflo
 FNEG = jnp.float32(-1e30)
 
 
-@dataclasses.dataclass(frozen=True, eq=False)   # eq=False ⇒ identity hash (jit-static-safe)
+# eq=False ⇒ identity hash (jit-static-safe)
+@dataclasses.dataclass(frozen=True, eq=False)
 class DPTables:
     """Static per-instance tables for capacity-state transitions.
 

@@ -31,7 +31,8 @@ __all__ = ["Policy", "PolicyFactory", "make_esdp_policy", "esdp_factory"]
 class Policy:
     name: str
     init: Callable[[], Any]
-    step: Callable[..., tuple]   # (state, t, eligible, arrived, vhat, n, key) -> (x, state)
+    # (state, t, eligible, arrived, vhat, n, key) -> (x, state)
+    step: Callable[..., tuple]
 
 
 # Uniform constructor signature consumed by the sweep engine

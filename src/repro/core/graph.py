@@ -55,7 +55,8 @@ class Instance:
     cost: np.ndarray              # (E,) float32 — Σ_k f_k(a_k^e), the supply cost
     mu: np.ndarray                # (E,) float32 — gross valuation means (pre-clip)
     sigma: np.ndarray             # (E,) float32 — valuation noise std (= mu/2)
-    v: np.ndarray                 # (E,) float32 — TRUE net means ṽ = E[clip(N(mu-cost, sigma),0,1)]
+    v: np.ndarray                 # (E,) float32 — TRUE net means
+                                  #   ṽ = E[clip(N(mu-cost, sigma), 0, 1)]
     rho: np.ndarray               # (L,) float32 — per-port arrival probabilities
     alpha: float                  # m = ceil(alpha * |E|) (paper's g(t)/ξ(t) scale)
 
@@ -76,8 +77,8 @@ class Instance:
     def port_of_edge(self) -> np.ndarray:
         return self.edges[:, 0].astype(np.int32)
 
-    def edges_of_port(self, l: int) -> np.ndarray:
-        return np.nonzero(self.edges[:, 0] == l)[0]
+    def edges_of_port(self, port: int) -> np.ndarray:
+        return np.nonzero(self.edges[:, 0] == port)[0]
 
 
 def generate_instance(
@@ -106,9 +107,9 @@ def generate_instance(
     K = n_device_types
 
     adj = rng.random((n_ports, n_servers)) < edge_prob
-    for l in range(n_ports):           # every port keeps at least one channel
-        if not adj[l].any():
-            adj[l, rng.integers(n_servers)] = True
+    for port in range(n_ports):        # every port keeps at least one channel
+        if not adj[port].any():
+            adj[port, rng.integers(n_servers)] = True
     ls, rs = np.nonzero(adj)
     edges = np.stack([ls, rs], axis=1).astype(np.int32)
     E = edges.shape[0]
@@ -126,7 +127,8 @@ def generate_instance(
     mu = rng.uniform(0.1, 1.0, size=E).astype(np.float32)
     sigma = (mu / 2.0).astype(np.float32)
     v = np.array(
-        [clipped_normal_mean(float(mu[e] - cost[e]), float(sigma[e])) for e in range(E)],
+        [clipped_normal_mean(float(mu[e] - cost[e]), float(sigma[e]))
+         for e in range(E)],
         dtype=np.float32,
     )
 

@@ -21,7 +21,8 @@ import jax.numpy as jnp
 __all__ = [
     "delta_default", "delta_fast", "delta_slow",
     "g_default", "g_no_logt", "g_logt_only",
-    "xi_of", "s_cap_for_horizon", "u_max_for_horizon", "scale_statistics",
+    "xi_of", "s_cap_for_horizon", "u_max_for_horizon",
+    "horizon_for_s_cap", "scale_statistics",
     "DELTA_VARIANTS", "G_VARIANTS",
 ]
 
@@ -102,6 +103,37 @@ def u_max_for_horizon(T: int, m: int, delta_fn=delta_default) -> int:
     reduction of the pad at default horizons.
     """
     return _xi_at_horizon(T, m, delta_fn) + 1
+
+
+def horizon_for_s_cap(s_cap: int, m: int, delta_fn=delta_default,
+                      t_max: int = 10 ** 12) -> "int | None":
+    """Smallest horizon T ≤ ``t_max`` whose budget axis reaches ``s_cap``
+    (inverse of :func:`s_cap_for_horizon`, which is nondecreasing in T
+    because δ decays).  Sizing helper for the S-tiled DP pipeline: it
+    answers "what sampling horizon does an S = s_cap + 1 value plane
+    correspond to?" — e.g. the S = 4096/8192 benchmark configs.
+
+    Returns ``None`` when even ``t_max`` does not reach ``s_cap``: because
+    ξ grows only logarithmically, a given S is reachable at sane horizons
+    only for large-enough m (s_cap ≈ ξ(T)·m ≳ m²), and the log-log default
+    δ would otherwise push the doubling search past f32 range.  Returns 1
+    if T = 1 already reaches ``s_cap``; doubling + bisection, O(log T)
+    host calls.
+    """
+    if s_cap_for_horizon(1, m, delta_fn) >= s_cap:
+        return 1
+    lo, hi = 1, 2
+    while s_cap_for_horizon(hi, m, delta_fn) < s_cap:
+        if hi >= t_max:
+            return None                 # even t_max itself falls short
+        lo, hi = hi, min(hi * 2, t_max)
+    while lo + 1 < hi:
+        mid = (lo + hi) // 2
+        if s_cap_for_horizon(mid, m, delta_fn) < s_cap:
+            lo = mid
+        else:
+            hi = mid
+    return hi
 
 
 def scale_statistics(vhat, n, t, m, g_fn=g_default, delta_fn=delta_default):

@@ -30,6 +30,18 @@ covers every read, and the plane streams HBM↔VMEM one (S, block_c) tile at
 a time.  Functional double-buffering (the per-edge call maps V → V′) keeps
 the pipeline free of in-place aliasing hazards.
 
+Long horizons additionally tile the BUDGET axis: ``block_s`` extends the
+pipeline to a 2-D (S-tile × C-tile) grid.  The s-shift only ever reads UP
+(towards smaller budgets, by at most u_max ≤ block_s rows), so each tile
+needs an up-neighbor halo of u_max rows on top of the left-neighbor halo —
+four BlockSpec views of the same plane per grid step ((i−1, j−1), (i−1, j),
+(i, j−1), (i, j)) assembled into one (u_max + block_s, 2·block_c) scratch.
+Tile row 0 has no up neighbor and replicates the plane's clamp row V[0]
+instead, exactly like the whole-plane kernel's clamp rows.  Per-tile VMEM
+is then independent of BOTH plane extents, which is what lets S ≳ 4096
+with large C run at all; ``choose_tiling`` picks the largest (block_s,
+block_c) pair that fits the VMEM budget.
+
 Arithmetic is f32 with integer values; exactness holds for values < 2²⁴
 (ops.py enforces the bound — see core/stats.py for why defaults are ≪ 2²⁴).
 
@@ -49,7 +61,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["NEG", "VMEM_BUDGET_BYTES", "resolve_interpret", "packed_words",
-           "unblocked_vmem_bytes", "choose_block_c", "dp_forward_pallas"]
+           "unblocked_vmem_bytes", "c_blocked_tile_vmem_bytes",
+           "tiled_vmem_bytes", "choose_tiling", "dp_forward_pallas"]
 
 NEG = -float(2 ** 24)
 
@@ -86,24 +99,68 @@ def unblocked_vmem_bytes(S: int, C: int, n_edges: int, u_max: int,
                 + n_edges * (C + 3))
 
 
-def choose_block_c(S: int, C: int, n_edges: int, u_max: int, off_max: int,
-                   budget: int = VMEM_BUDGET_BYTES) -> int | None:
-    """Pick a capacity-tile width, or ``None`` for the whole-plane kernel.
+def c_blocked_tile_vmem_bytes(S: int, block_c: int, u_max: int) -> int:
+    """Per-grid-step VMEM of the C-blocked (full-height) pipeline: two
+    haloed (S, block_c) input views + two output tiles + the
+    (u_max + S, 2·block_c) shift scratch + the feasibility tile, 4-byte."""
+    return 4 * (4 * S * block_c + (u_max + S) * 2 * block_c + block_c)
 
-    Blocking kicks in only when the whole-plane footprint exceeds the VMEM
-    budget.  The tile must be a multiple of the 128-wide lane dimension and
-    at least ``off_max`` so the halo never reaches past the left neighbor;
-    if that forces a tile spanning the plane, blocking cannot help and the
-    whole-plane kernel is returned (its footprint is then the floor).
+
+def tiled_vmem_bytes(block_s: int, block_c: int, u_max: int) -> int:
+    """Per-grid-step VMEM of the 2-D (S-tile × C-tile) pipeline: four
+    haloed (block_s, block_c) input views + two output tiles + the
+    (u_max + block_s, 2·block_c) shift scratch + the feasibility tile —
+    independent of both plane extents."""
+    return 4 * (6 * block_s * block_c
+                + (u_max + block_s) * 2 * block_c + block_c)
+
+
+def _tile_candidates(extent: int, unit: int, floor: int) -> list:
+    """Descending tile widths for one axis: the full extent plus every
+    power-of-two multiple of ``unit`` below it, all ≥ ``floor`` (the halo
+    legality bound — off_max along C, u_max along S)."""
+    cands = {extent}
+    width = unit
+    while width < extent:
+        if width >= floor:
+            cands.add(width)
+        width *= 2
+    return sorted(cands, reverse=True)
+
+
+def choose_tiling(S: int, C: int, n_edges: int, u_max: int, off_max: int,
+                  budget: int = VMEM_BUDGET_BYTES):
+    """Pick ``(block_s, block_c)`` for :func:`dp_forward_pallas`.
+
+    Returns ``(None, None)`` when the whole-plane kernel fits the VMEM
+    budget; ``(None, block_c)`` for the C-blocked (full-height) pipeline
+    when some legal capacity tile fits; else the largest 2-D tile pair
+    (maximizing block_s·block_c, ties to the wider lane-contiguous
+    block_c) that fits.  Tiles respect the halo floors (block_c ≥ off_max,
+    block_s ≥ u_max) and the VPU lane/sublane units (128 along C, 8 along
+    S) wherever the floors allow; if even the smallest legal pair exceeds
+    the budget it is returned anyway — no smaller tiling exists.
     """
     if unblocked_vmem_bytes(S, C, n_edges, u_max, off_max) <= budget:
-        return None
-    block = 128
-    while block < off_max:
-        block *= 2
-    if block >= C:
-        return None
-    return block
+        return None, None
+    c_cands = _tile_candidates(C, 128, off_max)
+    for bc in c_cands:                           # widest full-height first
+        if c_blocked_tile_vmem_bytes(S, bc, u_max) <= budget:
+            return None, bc
+    s_cands = _tile_candidates(S, 8, max(u_max, 1))
+    best = None
+    for bs in s_cands:
+        for bc in c_cands:
+            if bs == S and bc == C:
+                continue                         # that is the whole plane
+            if tiled_vmem_bytes(bs, bc, u_max) > budget:
+                continue
+            if (best is None or bs * bc > best[0] * best[1]
+                    or (bs * bc == best[0] * best[1] and bc > best[1])):
+                best = (bs, bc)
+    if best is None:
+        best = (s_cands[-1], c_cands[-1])        # floor pair: best possible
+    return best
 
 
 def _dp_kernel(ups_ref, sig_ref, offs_ref, feas_ref, v0_ref,
@@ -175,44 +232,118 @@ def _edge_tile_kernel(u_ref, off_ref, sig_ref, feas_ref, vleft_ref, vcur_ref,
     vout_ref[:, :] = jnp.maximum(cur, take)
 
 
-def _edge_call(V, feas_e, u1, off1, sig1, *, u_max: int, block_c: int,
-               interpret: bool):
-    S, Cp = V.shape
-    kernel = functools.partial(_edge_tile_kernel, u_max=u_max)
+def _edge_stile_kernel(u_ref, off_ref, sig_ref, feas_ref, vup_left_ref,
+                       vup_cur_ref, vleft_ref, vcur_ref, vout_ref, bits_ref,
+                       vpad_ref, *, u_max: int):
+    """One edge update on one (block_s, block_c) tile of the 2-D grid.
+
+    The four ``v*`` refs are views of the SAME value plane: the tile, its
+    left neighbor, and the up-neighbor row of both (S-tile 0 reads itself
+    upward and substitutes the plane's clamp row V[0] — budgets below 0
+    clamp to V[0], exactly the whole-plane kernel's clamp rows; C-tile 0
+    reads itself leftward — those columns are c < offset_e, infeasible,
+    masked).  The (u_max + block_s, 2·block_c) scratch makes both shifts
+    single dynamic-start reads."""
+    Bs, Bc = vcur_ref.shape
+    u = jnp.minimum(u_ref[0], u_max)
+    off = jnp.minimum(off_ref[0], Bc)
+    sig = sig_ref[0].astype(jnp.float32)
+    left = vleft_ref[:, :]
+    cur = vcur_ref[:, :]
+
+    if u_max:
+        # halo rows [0, u_max): last u_max rows of the up-neighbor tile,
+        # or the replicated clamp row V[0] on the first S tile (u_max ≤
+        # block_s keeps the halo inside ONE up neighbor)
+        first = pl.program_id(0) == 0
+        vpad_ref[:u_max, :Bc] = jnp.where(
+            first, jnp.broadcast_to(left[0:1, :], (u_max, Bc)),
+            vup_left_ref[Bs - u_max:, :])
+        vpad_ref[:u_max, Bc:] = jnp.where(
+            first, jnp.broadcast_to(cur[0:1, :], (u_max, Bc)),
+            vup_cur_ref[Bs - u_max:, :])
+    vpad_ref[pl.ds(u_max, Bs), :Bc] = left
+    vpad_ref[pl.ds(u_max, Bs), Bc:] = cur
+    take = vpad_ref[pl.ds(u_max - u, Bs), pl.ds(Bc - off, Bc)] + sig
+
+    take = jnp.where(feas_ref[0:1, :] > 0, take, NEG)
+    bits_ref[:, :] = (take > cur).astype(jnp.int32)
+    vout_ref[:, :] = jnp.maximum(cur, take)
+
+
+def _edge_call(V, feas_e, u1, off1, sig1, *, u_max: int, block_s,
+               block_c: int, interpret: bool):
+    Sp, Cp = V.shape
+    scalar_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),
+        pl.BlockSpec(memory_space=pltpu.SMEM),
+        pl.BlockSpec(memory_space=pltpu.SMEM),
+    ]
+    if block_s is None:
+        kernel = functools.partial(_edge_tile_kernel, u_max=u_max)
+        return pl.pallas_call(
+            kernel,
+            grid=(Cp // block_c,),
+            out_shape=(jax.ShapeDtypeStruct((Sp, Cp), jnp.float32),
+                       jax.ShapeDtypeStruct((Sp, Cp), jnp.int32)),
+            in_specs=scalar_specs + [
+                pl.BlockSpec((1, block_c), lambda j: (0, j)),
+                pl.BlockSpec((Sp, block_c),
+                             lambda j: (0, jnp.maximum(j - 1, 0))),
+                pl.BlockSpec((Sp, block_c), lambda j: (0, j)),
+            ],
+            out_specs=(pl.BlockSpec((Sp, block_c), lambda j: (0, j)),
+                       pl.BlockSpec((Sp, block_c), lambda j: (0, j))),
+            scratch_shapes=[pltpu.VMEM((u_max + Sp, 2 * block_c),
+                                       jnp.float32)],
+            interpret=interpret,
+        )(u1, off1, sig1, feas_e, V, V)
+    kernel = functools.partial(_edge_stile_kernel, u_max=u_max)
+
+    def up(i):
+        return jnp.maximum(i - 1, 0)
+
     return pl.pallas_call(
         kernel,
-        grid=(Cp // block_c,),
-        out_shape=(jax.ShapeDtypeStruct((S, Cp), jnp.float32),
-                   jax.ShapeDtypeStruct((S, Cp), jnp.int32)),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, block_c), lambda j: (0, j)),
-            pl.BlockSpec((S, block_c), lambda j: (0, jnp.maximum(j - 1, 0))),
-            pl.BlockSpec((S, block_c), lambda j: (0, j)),
+        grid=(Sp // block_s, Cp // block_c),
+        out_shape=(jax.ShapeDtypeStruct((Sp, Cp), jnp.float32),
+                   jax.ShapeDtypeStruct((Sp, Cp), jnp.int32)),
+        in_specs=scalar_specs + [
+            pl.BlockSpec((1, block_c), lambda i, j: (0, j)),
+            pl.BlockSpec((block_s, block_c), lambda i, j: (up(i), up(j))),
+            pl.BlockSpec((block_s, block_c), lambda i, j: (up(i), j)),
+            pl.BlockSpec((block_s, block_c), lambda i, j: (i, up(j))),
+            pl.BlockSpec((block_s, block_c), lambda i, j: (i, j)),
         ],
-        out_specs=(pl.BlockSpec((S, block_c), lambda j: (0, j)),
-                   pl.BlockSpec((S, block_c), lambda j: (0, j))),
-        scratch_shapes=[pltpu.VMEM((u_max + S, 2 * block_c), jnp.float32)],
+        out_specs=(pl.BlockSpec((block_s, block_c), lambda i, j: (i, j)),
+                   pl.BlockSpec((block_s, block_c), lambda i, j: (i, j))),
+        scratch_shapes=[pltpu.VMEM((u_max + block_s, 2 * block_c),
+                                   jnp.float32)],
         interpret=interpret,
-    )(u1, off1, sig1, feas_e, V, V)
+    )(u1, off1, sig1, feas_e, V, V, V, V)
 
 
 def _dp_forward_blocked(upsilon, sigma2, feasible, offsets, v0,
                         *, n_edges: int, u_max: int, off_max: int,
-                        block_c: int, interpret: bool):
+                        block_s, block_c: int, interpret: bool):
     if block_c < off_max:
         raise ValueError(
             f"block_c={block_c} < off_max={off_max}: the offset shift would "
-            f"reach past the left-neighbor halo tile")
+            "reach past the left-neighbor halo tile")
+    if block_s is not None and block_s < u_max:
+        raise ValueError(
+            f"block_s={block_s} < u_max={u_max}: the budget shift would "
+            "reach past the up-neighbor halo tile")
     S, C = v0.shape
     Cp = -(-C // block_c) * block_c
-    pad = Cp - C
-    V0 = jnp.pad(v0, ((0, 0), (0, pad)), constant_values=NEG)
-    feas_p = jnp.pad(feasible, ((0, 0), (0, pad)))      # pad states masked
+    Sp = S if block_s is None else -(-S // block_s) * block_s
+    # pad rows/columns sit at the high end of each axis: both shifts read
+    # towards SMALLER indices, so real entries never read a pad entry (pad
+    # rows/states compute garbage that is sliced away at the end)
+    V0 = jnp.pad(v0, ((0, Sp - S), (0, Cp - C)), constant_values=NEG)
+    feas_p = jnp.pad(feasible, ((0, 0), (0, Cp - C)))   # pad states masked
     W = packed_words(n_edges)
-    dec0 = jnp.zeros((W, S, Cp), jnp.int32)
+    dec0 = jnp.zeros((W, Sp, Cp), jnp.int32)
 
     rev = slice(None, None, -1)                          # edges E-1 … 0
     xs = (upsilon[rev], offsets[rev], sigma2[rev], feas_p[rev],
@@ -223,36 +354,45 @@ def _dp_forward_blocked(upsilon, sigma2, feasible, offsets, v0,
         u, off, sig, feas_e, e = x
         Vn, bits = _edge_call(
             V, feas_e[None, :], u[None], off[None], sig[None],
-            u_max=u_max, block_c=block_c, interpret=interpret)
+            u_max=u_max, block_s=block_s, block_c=block_c,
+            interpret=interpret)
         w = e // 32
-        word = jax.lax.dynamic_slice(dec, (w, 0, 0), (1, S, Cp))
+        word = jax.lax.dynamic_slice(dec, (w, 0, 0), (1, Sp, Cp))
         word = word | (bits << (e % 32))[None]
         return (Vn, jax.lax.dynamic_update_slice(dec, word, (w, 0, 0))), None
 
     (V, dec), _ = jax.lax.scan(body, (V0, dec0), xs)
-    return V[:, :C], dec[:, :, :C]
+    return V[:S, :C], dec[:, :S, :C]
 
 
 @functools.partial(jax.jit, static_argnames=("n_edges", "u_max", "off_max",
-                                             "interpret", "block_c"))
+                                             "interpret", "block_c",
+                                             "block_s"))
 def dp_forward_pallas(upsilon, sigma2, feasible, offsets, v0,
                       *, n_edges: int, u_max: int, off_max: int,
                       interpret: bool | None = None,
-                      block_c: int | None = None):
+                      block_c: int | None = None,
+                      block_s: int | None = None):
     """upsilon/sigma2/offsets: (E,) i32; feasible: (E, C) f32 0/1;
     v0: (S, C) f32.  Returns (V_final (S, C) f32,
     decisions (⌈E/32⌉, S, C) i32 — bit (e%32) of word (e//32) is edge e).
 
     ``offsets[e]`` is the mixed-radix transition constant (next(c) = c −
     offsets[e] on feasible states; ``off_max`` ≥ max offsets); ``block_c``
-    selects the C-blocked pipeline (``choose_block_c`` picks it from the
-    VMEM budget).  ``interpret=None`` resolves via :func:`resolve_interpret`
-    (compiled on TPU, interpreter elsewhere)."""
+    selects the C-blocked pipeline and ``block_s`` additionally tiles the
+    budget axis (2-D grid; requires ``block_c``; ``choose_tiling`` picks
+    both from the VMEM budget).  ``interpret=None`` resolves via
+    :func:`resolve_interpret` (compiled on TPU, interpreter elsewhere)."""
     interp = resolve_interpret(interpret)
+    if block_s is not None and block_c is None:
+        raise ValueError(
+            "block_s tiles the budget axis of the blocked pipeline and "
+            "needs block_c (pass block_c=C for a single full-width tile)")
     if block_c is not None:
         return _dp_forward_blocked(
             upsilon, sigma2, feasible, offsets, v0, n_edges=n_edges,
-            u_max=u_max, off_max=off_max, block_c=block_c, interpret=interp)
+            u_max=u_max, off_max=off_max, block_s=block_s, block_c=block_c,
+            interpret=interp)
     S, C = v0.shape
     W = packed_words(n_edges)
     kernel = functools.partial(_dp_kernel, n_edges=n_edges, u_max=u_max,

@@ -2,9 +2,13 @@
 
 Drop-in equivalent of core.dp.solve_budgeted_dp (tested for exact
 agreement): derives the offset-encoded kernel operands, runs the
-VMEM-resident (or C-blocked, for large capacity spaces) kernel, then
-applies the eq.-17 s* rule and backtracks in plain jnp from the bit-packed
-decision words.
+VMEM-resident kernel (or its blocked pipelines — C-blocked for large
+capacity spaces, (S-tile × C-tile) for long horizons; ``choose_tiling``
+resolves the split), then applies the eq.-17 s* rule and backtracks in
+plain jnp from the bit-packed decision words.  The backtrack is
+tiling-oblivious: the forward pass returns the full packed-decision plane
+(device memory, not VMEM), and the walk reads ONE 1-element slice per
+edge, so the same scan serves every tiling.
 
 Operand contract (what makes this usable from the hot path):
   * the kernel operands are the (E, C) feasibility plane and the (E,) int32
@@ -38,7 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...core.dp import DPTables
-from .kernel import (NEG, choose_block_c, dp_forward_pallas,
+from .kernel import (NEG, choose_tiling, dp_forward_pallas,
                      resolve_interpret)
 
 __all__ = ["VALUE_BOUND", "prepare_tables", "max_achievable_value",
@@ -95,8 +99,8 @@ def _check_value_bound(sigma2, tables: DPTables) -> None:
     if bound >= VALUE_BOUND:
         raise ValueError(
             f"budgeted-DP values can reach {bound} ≥ 2^24: the Pallas "
-            f"kernel's f32 arithmetic is no longer exact. Rescale Σ̂² or "
-            f"use the 'reference' (int32) solver backend.")
+            "kernel's f32 arithmetic is no longer exact. Rescale Σ̂² or "
+            "use the 'reference' (int32) solver backend.")
 
 
 def _check_u_max(upsilon, u_max: int) -> None:
@@ -110,17 +114,17 @@ def _check_u_max(upsilon, u_max: int) -> None:
     if top > u_max:
         raise ValueError(
             f"max Υ̂ = {top} exceeds u_max = {u_max}: the shift scratch is "
-            f"too short and the kernel would clamp (wrong values). Pass "
-            f"u_max ≥ max Υ̂ (stats.u_max_for_horizon bounds the default "
-            f"schedules) or leave u_max=None.")
+            "too short and the kernel would clamp (wrong values). Pass "
+            "u_max ≥ max Υ̂ (stats.u_max_for_horizon bounds the default "
+            "schedules) or leave u_max=None.")
 
 
 @functools.partial(jax.jit,
                    static_argnames=("s_cap", "u_max", "off_max", "full_state",
-                                    "interpret", "block_c"))
+                                    "interpret", "block_c", "block_s"))
 def _solve(upsilon, sigma2, feasible, offsets, s_limit,
            *, s_cap: int, u_max: int, off_max: int, full_state: int,
-           interpret: bool, block_c: int | None):
+           interpret: bool, block_c: int | None, block_s: int | None):
     E = upsilon.shape[0]
     S = s_cap + 1
     v0 = jnp.full((S, feasible.shape[1]), NEG, jnp.float32).at[0, :].set(0.0)
@@ -128,7 +132,7 @@ def _solve(upsilon, sigma2, feasible, offsets, s_limit,
     V, decisions = dp_forward_pallas(
         upsilon, sigma2, feasible, offsets, v0,
         n_edges=E, u_max=u_max, off_max=off_max, interpret=interpret,
-        block_c=block_c)
+        block_c=block_c, block_s=block_s)
 
     v_row = V[:, full_state]
     s_vals = jnp.arange(S, dtype=jnp.int32)
@@ -164,15 +168,19 @@ def _solve(upsilon, sigma2, feasible, offsets, s_limit,
 def solve_budgeted_dp_pallas(upsilon, sigma2, tables: DPTables, s_cap: int,
                              s_limit, u_max: int | None = None,
                              allowed=None, interpret: bool | None = None,
-                             block_c: "int | str | None" = "auto"):
+                             block_c: "int | str | None" = "auto",
+                             block_s: int | None = None):
     """Same contract as core.dp.solve_budgeted_dp (+ kernel knobs).
 
     ``interpret=None`` auto-resolves (compiled on TPU, interpreter
     elsewhere); ``u_max=None`` uses the always-safe s_cap+1 shift padding —
     callers that know the schedule bound (``stats.u_max_for_horizon``)
     should pass it to shrink the scratch; ``block_c="auto"`` picks the
-    C-blocked pipeline from the VMEM budget (``None`` forces whole-plane,
-    an int forces that tile width).
+    whole tiling — (block_s, block_c) — from the VMEM budget via
+    ``choose_tiling``: whole-plane when it fits, C-blocked for large
+    capacity spaces, and the 2-D (S-tile × C-tile) grid for long horizons.
+    Explicit ints force a tiling (``block_c=None`` forces whole-plane;
+    ``block_s`` tiles the budget axis and requires a concrete block_c).
     """
     _check_value_bound(sigma2, tables)
     feas, offs = prepare_tables(tables)
@@ -184,12 +192,18 @@ def solve_budgeted_dp_pallas(upsilon, sigma2, tables: DPTables, s_cap: int,
     E = offs.shape[0]
     off_max = int(offs.max()) if E else 0
     if block_c == "auto":
-        block_c = choose_block_c(s_cap + 1, tables.n_states, E,
-                                 int(u_max), off_max)
+        if block_s is not None:
+            raise ValueError(
+                'block_s was forced but block_c is "auto": the auto tiling '
+                "would overwrite it — pass a concrete block_c (e.g. the "
+                "number of capacity states for a single full-width tile)")
+        block_s, block_c = choose_tiling(s_cap + 1, tables.n_states, E,
+                                         int(u_max), off_max)
     x, s_star, v_row = _solve(
         jnp.asarray(upsilon, jnp.int32), jnp.asarray(sigma2, jnp.int32),
         feas, jnp.asarray(offs), jnp.asarray(s_limit, jnp.int32),
         s_cap=s_cap, u_max=int(u_max), off_max=off_max,
         full_state=tables.full_state,
-        interpret=resolve_interpret(interpret), block_c=block_c)
+        interpret=resolve_interpret(interpret), block_c=block_c,
+        block_s=block_s)
     return x, {"s_star": s_star, "value_row": v_row}

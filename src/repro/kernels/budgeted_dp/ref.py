@@ -1,6 +1,12 @@
 """Pure-jnp oracle for the budgeted-DP kernel (mirrors core/dp._dp_forward
 in the kernel's f32 value domain, including the bit-packed decision words
-and the offset-encoded capacity transition next(c) = c − offsets[e])."""
+and the offset-encoded capacity transition next(c) = c − offsets[e]).
+
+This oracle is the CONTRACT every kernel tiling must reproduce bit for
+bit: whole-plane, C-blocked, and the 2-D (S-tile × C-tile) grid all
+compare against the same ``dp_forward_ref`` output — the tiling is an
+execution detail, never a numeric one (enforced in tests/test_kernels.py
+and the hypothesis sweep in tests/test_solver_equiv.py)."""
 from __future__ import annotations
 
 import jax

@@ -35,7 +35,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
         jnp.int32, (g, blk_q), 1).reshape(g * blk_q) + (sk - pl.num_programs(2) * blk_q)
 
     def kv_step(i, carry):
-        m, l, acc = carry
+        m, lsum, acc = carry
         k = k_ref[0, 0, pl.ds(i * blk_k, blk_k), :].astype(jnp.float32)
         v = v_ref[0, 0, pl.ds(i * blk_k, blk_k), :].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
@@ -51,7 +51,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
         m_new = jnp.maximum(m, s.max(axis=1))
         alpha = jnp.exp(m - m_new)
         p = jnp.exp(s - m_new[:, None])
-        l_new = l * alpha + p.sum(axis=1)
+        l_new = lsum * alpha + p.sum(axis=1)
         acc_new = acc * alpha[:, None] + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -64,8 +64,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
         n_live = jnp.minimum((last_q // blk_k) + 1, n_kv)
     else:
         n_live = n_kv
-    m, l, acc = jax.lax.fori_loop(0, n_live, kv_step, (m0, l0, acc0))
-    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    m, lsum, acc = jax.lax.fori_loop(0, n_live, kv_step, (m0, l0, acc0))
+    out = acc / jnp.maximum(lsum, 1e-30)[:, None]
     o_ref[0, 0] = out.reshape(g, blk_q, hd).astype(o_ref.dtype)
 
 

@@ -6,8 +6,6 @@ compatible with models.attention.chunked_attention.
 """
 from __future__ import annotations
 
-import jax
-
 from .kernel import flash_attention
 
 __all__ = ["flash_attention_op"]

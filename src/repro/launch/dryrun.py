@@ -65,10 +65,12 @@ def _compile_cell(cfg, shape, mesh, rules, remat: str, microbatches: int):
     p_abs = model.abstract()
     p_sh = rules.tree_shardings(p_abs, model.axes())
     if shape.kind == "prefill":
-        fn = lambda p, b: model.prefill(p, b, rules=rules)
+        def fn(p, b):
+            return model.prefill(p, b, rules=rules)
         jf = jax.jit(fn, in_shardings=(p_sh, batch_shardings))
     else:
-        fn = lambda p, b: model.decode(p, b, rules=rules)
+        def fn(p, b):
+            return model.decode(p, b, rules=rules)
         jf = jax.jit(fn, in_shardings=(p_sh, batch_shardings),
                      donate_argnums=(1,))
     return jf.lower(p_abs, batch_abs).compile(), model

@@ -28,11 +28,11 @@ def roofline_markdown() -> str:
         r = json.loads(p.read_text())
         if r.get("skipped"):
             rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "
-                        f"| — | — | — | — | — | SKIP: sub-quadratic-only |")
+                        "| — | — | — | — | — | SKIP: sub-quadratic-only |")
             continue
         if r.get("error"):
             rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
-                        f"| — | — | — | — | — | — | — "
+                        "| — | — | — | — | — | — | — "
                         f"| ERROR: {r['error'][:60]} |")
             continue
         t = r["roofline"]

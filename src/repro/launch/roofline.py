@@ -21,9 +21,7 @@ scaled by top_k/E; embedding gather excluded, tied head counted once).
 """
 from __future__ import annotations
 
-import dataclasses
 import re
-from typing import Any
 
 import numpy as np
 

@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..configs import SHAPES, Shape, get_config
+from ..configs import Shape
 from ..models import build_model
 from ..models.layers import DTYPES
 

@@ -32,7 +32,8 @@ __all__ = [
     "cross_attn_specs", "cross_attn", "cross_kv",
 ]
 
-_ID = lambda x, axes: x
+def _ID(x, axes):
+    return x
 _NEG = -1e30
 
 
@@ -66,7 +67,7 @@ def chunked_attention(q, k, v, *, scale: float, causal: bool = True,
     acc0 = jnp.zeros((B, Sq, KH, g, vh), jnp.float32)
 
     def body(carry, inp):
-        m, l, acc = carry
+        m, lsum, acc = carry
         c_idx, kb, vb = inp                        # kb (B, chunk, KH, hd)
         kj = c_idx * chunk + jnp.arange(chunk)[None, :]
         mask = kj < Sk                             # exclude pad keys
@@ -80,14 +81,14 @@ def chunked_attention(q, k, v, *, scale: float, causal: bool = True,
         m_new = jnp.maximum(m, logits.max(axis=-1))
         alpha = jnp.exp(m - m_new)
         p = jnp.exp(logits - m_new[..., None])
-        l = l * alpha + p.sum(axis=-1)
+        lsum = lsum * alpha + p.sum(axis=-1)
         pv = jnp.einsum("bkgqc,bckv->bqkgv", p.astype(vb.dtype), vb)
         acc = acc * alpha.transpose(0, 3, 1, 2)[..., None] + pv
-        return (m_new, l, acc), None
+        return (m_new, lsum, acc), None
 
     xs = (jnp.arange(n_chunks), kc, vc)
-    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), xs)
-    denom = jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    (m, lsum, acc), _ = jax.lax.scan(body, (m0, l0, acc0), xs)
+    denom = jnp.maximum(lsum, 1e-30).transpose(0, 3, 1, 2)[..., None]
     out = (acc / denom).reshape(B, Sq, H, vh)
     return out.astype(q.dtype)
 

@@ -14,7 +14,6 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 __all__ = [
     "SpecTree", "init_params", "abstract_params", "param_axes",
@@ -102,11 +101,11 @@ def init_params(spec: SpecTree, key) -> dict:
 def abstract_params(spec: SpecTree) -> dict:
     return _map_specs(
         spec.tree,
-        lambda l: jax.ShapeDtypeStruct(l["shape"], DTYPES[l["dtype"]]))
+        lambda leaf: jax.ShapeDtypeStruct(leaf["shape"], DTYPES[leaf["dtype"]]))
 
 
 def param_axes(spec: SpecTree) -> dict:
-    return _map_specs(spec.tree, lambda l: l["axes"])
+    return _map_specs(spec.tree, lambda leaf: leaf["axes"])
 
 
 # ---------------------------------------------------------------------------

@@ -29,7 +29,8 @@ from .layers import SpecTree, mlp_apply, mlp_specs
 
 __all__ = ["moe_specs", "moe_apply"]
 
-_ID = lambda x, axes: x
+def _ID(x, axes):
+    return x
 
 
 def moe_specs(spec: SpecTree, path: str, cfg):

@@ -24,7 +24,8 @@ from .layers import SpecTree, rms_norm
 __all__ = ["ssm_specs", "mamba_train", "mamba_decode", "ssd_chunked",
            "conv_dim"]
 
-_ID = lambda x, axes: x
+def _ID(x, axes):
+    return x
 
 
 def conv_dim(cfg) -> int:
@@ -181,7 +182,8 @@ def mamba_decode(p, cfg, x, state, rules=_ID):
 
     xh = xs.reshape(B, H, P).astype(jnp.float32)
     ssm = state["ssm"].astype(jnp.float32)
-    upd = (dt[:, :, None] * xh)[:, :, :, None] * B_[:, None, None, :].astype(jnp.float32)
+    upd = ((dt[:, :, None] * xh)[:, :, :, None]
+           * B_[:, None, None, :].astype(jnp.float32))
     ssm_new = ssm * dA[:, :, None, None] + upd             # (B,H,P,N)
     y = jnp.einsum("bhpn,bn->bhp", ssm_new, C_.astype(jnp.float32))
     y = y + xh * p["D"][None, :, None]

@@ -17,7 +17,6 @@ Every homogeneous run of layers is a ``lax.scan`` over stacked parameters
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable
 
 import jax
@@ -35,7 +34,8 @@ from .layers import (DTYPES, SpecTree, abstract_params, init_params,
 from .moe import moe_apply, moe_specs
 from .ssm import conv_dim, mamba_decode, mamba_train, ssm_specs
 
-_ID = lambda x, axes: x
+def _ID(x, axes):
+    return x
 
 
 def _cfg_scan(cfg, body, init, xs):
@@ -488,7 +488,7 @@ def _build_ssm_lm(cfg):
                                  {"ssm": lssm, "conv": lconv}, rules=rules)
             return h + y, (st["ssm"], st["conv"])
 
-        h, (ssm, conv) = _cfg_scan(cfg, 
+        h, (ssm, conv) = _cfg_scan(cfg,
             body, h, (params["blocks"], cache["ssm"], cache["conv"]))
         h = _norm(params["final_norm"], cfg, h)
         logits = _logits(params, cfg, h, rules)[:, 0]
@@ -626,14 +626,14 @@ def _build_hybrid_lm(cfg):
                 rules)
             return h, (ssm, conv, kv)
 
-        h, (g_ssm, g_conv, g_kv) = _cfg_scan(cfg, 
+        h, (g_ssm, g_conv, g_kv) = _cfg_scan(cfg,
             group_body, h,
             (params["groups"], cache["g_ssm"], cache["g_conv"],
              (cache["k"], cache["v"])))
         new = {"g_ssm": g_ssm, "g_conv": g_conv,
                "k": g_kv[0], "v": g_kv[1]}
         if tail:
-            h, (tssm, tconv) = _cfg_scan(cfg, 
+            h, (tssm, tconv) = _cfg_scan(cfg,
                 mamba_step, h,
                 (params["tail"], cache["t_ssm"], cache["t_conv"]))
             new["t_ssm"], new["t_conv"] = tssm, tconv
@@ -808,7 +808,7 @@ def _build_encdec(cfg):
             f = mlp_apply(lp["mlp"], _ln(lp["ln3"], cfg, h), "gelu")
             return h + f, kv
 
-        h, kv = _cfg_scan(cfg, 
+        h, kv = _cfg_scan(cfg,
             body, h, (params["dec"], cache["k"], cache["v"],
                       cache["ck"], cache["cv"]))
         h = _ln(params["dec_final_ln"], cfg, h)

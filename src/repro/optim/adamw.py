@@ -37,7 +37,8 @@ class AdamW:
     grad_clip: Optional[float] = 1.0
 
     def init(self, params) -> OptState:
-        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def zeros(p):
+            return jnp.zeros(p.shape, jnp.float32)
         return OptState(step=jnp.zeros((), jnp.int32),
                         m=jax.tree.map(zeros, params),
                         v=jax.tree.map(zeros, params))

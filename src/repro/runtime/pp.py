@@ -14,8 +14,6 @@ low-bandwidth pod interconnect.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

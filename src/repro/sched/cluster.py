@@ -54,19 +54,19 @@ def build_instance(slices: list[Slice], jobs: list[JobType],
     """
     L, R = len(jobs), len(slices)
     edges, A_cols, mu, rate = [], [], [], []
-    for l, job in enumerate(jobs):
+    for li, job in enumerate(jobs):
         for r, sl in enumerate(slices):
             if sl.accel not in job.accel_ok:
                 continue
             if (sl.chips < job.chips or sl.hosts < job.hosts
                     or sl.ici_domains < job.ici_domains):
                 continue                      # not solely-servable (Sec 2.1)
-            if mean_rates[l, r] <= 0:
+            if mean_rates[li, r] <= 0:
                 continue
-            edges.append((l, r))
+            edges.append((li, r))
             A_cols.append([job.chips, job.hosts, job.ici_domains])
-            mu.append(job.value_rate * mean_rates[l, r])
-            rate.append(mean_rates[l, r])
+            mu.append(job.value_rate * mean_rates[li, r])
+            rate.append(mean_rates[li, r])
     edges = np.asarray(edges, np.int32)
     A = np.asarray(A_cols, np.int64).T.astype(np.int32)      # (K, E)
 

@@ -18,7 +18,7 @@ import pathlib
 
 import numpy as np
 
-from ..configs import SHAPES, get_config
+from ..configs import SHAPES
 
 __all__ = ["roofline_rate", "rate_matrix"]
 
@@ -56,9 +56,9 @@ def rate_matrix(jobs, slices, results_dir: str = "results/dryrun",
     """mean_rates[l, r] for build_instance; slice_speed scales per slice
     (heterogeneous fleets / chronic stragglers)."""
     out = np.zeros((len(jobs), len(slices)), np.float32)
-    for l, job in enumerate(jobs):
+    for li, job in enumerate(jobs):
         base = roofline_rate(job.arch, job.shape, results_dir)
         for r, sl in enumerate(slices):
             speed = (slice_speed or {}).get(sl.name, 1.0)
-            out[l, r] = base * speed * sl.chips
+            out[li, r] = base * speed * sl.chips
     return out

@@ -11,7 +11,6 @@ except ImportError:
     HAS_HYPOTHESIS = False
 
 from repro.core.dp import NEG, build_tables, oracle_knapsack, solve_budgeted_dp
-from repro.core.graph import generate_instance
 
 import jax.numpy as jnp
 

@@ -9,8 +9,8 @@ try:        # optional [test] extra — property tests skip cleanly without it
 except ImportError:
     HAS_HYPOTHESIS = False
 
-from repro.core.stats import (DELTA_VARIANTS, G_VARIANTS, s_cap_for_horizon,
-                              scale_statistics, xi_of)
+from repro.core.stats import (DELTA_VARIANTS, G_VARIANTS, horizon_for_s_cap,
+                              s_cap_for_horizon, scale_statistics, xi_of)
 
 
 if HAS_HYPOTHESIS:
@@ -62,3 +62,45 @@ def test_g_variants_ordering():
     t = jnp.float32(1000.0)
     assert float(G_VARIANTS["default"](t, 16)) > float(
         G_VARIANTS["logt_only"](t, 16))
+
+
+def test_horizon_for_s_cap_inverts_s_cap_for_horizon():
+    """The inverse sizing helper: when a horizon within t_max reaches the
+    requested budget axis, the returned T does so minimally (T−1 does
+    not); unreachable combinations — ξ grows only logarithmically, so
+    s_cap ≫ m² needs astronomic horizons under the slow δ schedules —
+    yield None instead of overflowing.  This is what ties the long-S
+    benchmark configs (S = 4096/8192) back to concrete sampling
+    horizons (large-m instances)."""
+    for name, d in DELTA_VARIANTS.items():
+        for m in (8, 16, 36):
+            for s_cap in (64, 1024, 4096):
+                T = horizon_for_s_cap(s_cap, m, d)
+                if T is None:
+                    # genuinely unreachable within t_max
+                    assert s_cap_for_horizon(10 ** 12, m, d) < s_cap, \
+                        (name, m, s_cap)
+                    continue
+                assert s_cap_for_horizon(T, m, d) >= s_cap, (name, m, s_cap)
+                if T > 1:
+                    assert s_cap_for_horizon(T - 1, m, d) < s_cap, \
+                        (name, m, s_cap)
+    # the S = 4096 benchmark regime is reachable for paper-scale m
+    assert horizon_for_s_cap(4096, 36) is not None
+
+
+def test_horizon_for_s_cap_t_max_window():
+    """Regression: thresholds between the last power-of-two probe and
+    t_max must still be found (the doubling loop clamps its final probe
+    to t_max instead of bailing past it)."""
+    def delta(t):
+        return 1.0 / jnp.sqrt(t)            # s_cap grows fast enough
+
+    m, s_cap = 4, 72
+    T = horizon_for_s_cap(s_cap, m, delta)  # unbounded-ish search
+    assert T is not None and s_cap_for_horizon(T, m, delta) >= s_cap
+    # t_max sits between 2^k and the threshold: must still resolve
+    got = horizon_for_s_cap(s_cap, m, delta, t_max=T + 1)
+    assert got == T
+    # and a t_max just below the threshold is genuinely unreachable
+    assert horizon_for_s_cap(s_cap, m, delta, t_max=T - 1) is None

@@ -9,7 +9,9 @@ from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.ssd.ops import ssd_op
 from repro.kernels.ssd.ref import ssd_ref
 from repro.core.dp import build_tables, solve_budgeted_dp
-from repro.kernels.budgeted_dp.kernel import NEG, dp_forward_pallas
+from repro.kernels.budgeted_dp.kernel import (
+    NEG, VMEM_BUDGET_BYTES, c_blocked_tile_vmem_bytes, choose_tiling,
+    dp_forward_pallas, tiled_vmem_bytes, unblocked_vmem_bytes)
 from repro.kernels.budgeted_dp.ops import prepare_tables, solve_budgeted_dp_pallas
 from repro.kernels.budgeted_dp.ref import dp_forward_ref
 
@@ -163,6 +165,150 @@ def test_budgeted_dp_blocked_grid_matches_ref(tile):
                                 offs, v0)
     np.testing.assert_array_equal(np.asarray(V_b), np.asarray(V_r))
     np.testing.assert_array_equal(np.asarray(dec_b), np.asarray(dec_r))
+
+
+def _tiling_problem(seed=13, E=14, K=3):
+    rng = np.random.default_rng(seed)
+    A = rng.integers(1, 3, (K, E))
+    c = rng.integers(1, 4, K)
+    A = np.minimum(A, c[:, None])
+    ups = rng.integers(0, 5, E).astype(np.int32)
+    sig = rng.integers(1, 3000, E).astype(np.int32)
+    return A, c, ups, sig
+
+
+@pytest.mark.parametrize("tile", ["tight", "padded", "full_c", "single_s"])
+def test_budgeted_dp_s_tiled_grid_matches_ref(tile):
+    """The 2-D (S-tile × C-tile) pipeline is bit-exact vs the oracle —
+    values and packed decision words — across tile geometries: ``tight``
+    runs the minimum legal pair (block_s = u_max, block_c = off_max:
+    maximum tile counts, every read crosses a halo); ``padded`` tile
+    widths that divide neither S nor C (pad-row/pad-state masking);
+    ``full_c`` a single full-width capacity tile (S-only tiling);
+    ``single_s`` one S tile spanning the padded plane (the 2-D kernel's
+    clamp-row branch on every tile)."""
+    A, c, ups, sig = _tiling_problem()
+    tables = build_tables(A, c)
+    s_cap = int(ups.sum())
+    S, C = s_cap + 1, tables.n_states
+    feas, offs = prepare_tables(tables)
+    feas, offs = jnp.asarray(feas), jnp.asarray(offs)
+    off_max = int(offs.max())
+    u_max = int(ups.max() + 1)
+    block_s, block_c = {
+        "tight": (u_max, off_max),
+        "padded": (u_max + 2, off_max + 3),
+        "full_c": (u_max + 1, C),
+        "single_s": (S + 3, off_max),
+    }[tile]
+    v0 = jnp.full((S, C), NEG, jnp.float32).at[0, :].set(0.0)
+    V_t, dec_t = dp_forward_pallas(
+        jnp.asarray(ups), jnp.asarray(sig), feas, offs, v0, n_edges=len(ups),
+        u_max=u_max, off_max=off_max, interpret=True,
+        block_c=block_c, block_s=block_s)
+    V_r, dec_r = dp_forward_ref(jnp.asarray(ups), jnp.asarray(sig), feas,
+                                offs, v0)
+    np.testing.assert_array_equal(np.asarray(V_t), np.asarray(V_r))
+    np.testing.assert_array_equal(np.asarray(dec_t), np.asarray(dec_r))
+
+
+def test_budgeted_dp_s_tiled_u_max_halo_edge():
+    """u_max == max Υ̂ exactly (the legal minimum): the deepest s-shift
+    reads the FIRST halo row of each tile, and block_s == u_max makes the
+    halo as tall as the tile itself."""
+    A, c, ups, sig = _tiling_problem(seed=17)
+    ups[0] = max(int(ups.max()), 1)          # ensure the max is taken
+    tables = build_tables(A, c)
+    s_cap = int(ups.sum())
+    S, C = s_cap + 1, tables.n_states
+    feas, offs = prepare_tables(tables)
+    feas, offs = jnp.asarray(feas), jnp.asarray(offs)
+    u_max = int(ups.max())                   # no +1 margin
+    v0 = jnp.full((S, C), NEG, jnp.float32).at[0, :].set(0.0)
+    V_t, dec_t = dp_forward_pallas(
+        jnp.asarray(ups), jnp.asarray(sig), feas, offs, v0, n_edges=len(ups),
+        u_max=u_max, off_max=int(offs.max()), interpret=True,
+        block_c=int(offs.max()), block_s=u_max)
+    V_r, dec_r = dp_forward_ref(jnp.asarray(ups), jnp.asarray(sig), feas,
+                                offs, v0)
+    np.testing.assert_array_equal(np.asarray(V_t), np.asarray(V_r))
+    np.testing.assert_array_equal(np.asarray(dec_t), np.asarray(dec_r))
+
+
+def test_budgeted_dp_s_tiled_solver_with_allowed_mask():
+    """Solver-level S-tiled path: x / s* / value_row match the reference
+    backend under an eligibility mask."""
+    A, c, ups, sig = _tiling_problem(seed=19)
+    rng = np.random.default_rng(19)
+    allowed = rng.integers(0, 2, len(ups)).astype(bool)
+    allowed[:2] = True
+    tables = build_tables(A, c)
+    s_cap = int(ups.sum())
+    u_max = int(ups.max() + 1)
+    x1, i1 = solve_budgeted_dp(jnp.asarray(ups), jnp.asarray(sig), tables,
+                               s_cap, jnp.int32(s_cap),
+                               allowed=jnp.asarray(allowed))
+    x2, i2 = solve_budgeted_dp_pallas(
+        ups, sig, tables, s_cap, s_cap, u_max=u_max, allowed=allowed,
+        interpret=True, block_c=int(tables.offsets.max()) + 1,
+        block_s=u_max + 1)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+    assert int(i1["s_star"]) == int(i2["s_star"])
+    r1 = np.asarray(i1["value_row"]).astype(np.int64)
+    r2 = np.asarray(i2["value_row"])
+    np.testing.assert_array_equal(r1 >= 0, r2 >= 0)
+    np.testing.assert_array_equal(r1[r1 >= 0], r2[r2 >= 0].astype(np.int64))
+
+
+def test_budgeted_dp_s_tiled_halo_contract_errors():
+    """Tiles thinner than the halos are rejected, and block_s without a
+    concrete block_c is a usage error — never a silent wrong answer."""
+    A, c, ups, sig = _tiling_problem(seed=23)
+    tables = build_tables(A, c)
+    s_cap = int(ups.sum())
+    feas, offs = prepare_tables(tables)
+    feas, offs = jnp.asarray(feas), jnp.asarray(offs)
+    off_max = int(offs.max())
+    u_max = int(ups.max() + 1)
+    v0 = jnp.full((s_cap + 1, tables.n_states), NEG,
+                  jnp.float32).at[0, :].set(0.0)
+    kwargs = dict(n_edges=len(ups), u_max=u_max, off_max=off_max,
+                  interpret=True)
+    with pytest.raises(ValueError, match="block_s"):
+        dp_forward_pallas(jnp.asarray(ups), jnp.asarray(sig), feas, offs,
+                          v0, block_c=off_max, block_s=u_max - 1, **kwargs)
+    with pytest.raises(ValueError, match="block_c"):
+        dp_forward_pallas(jnp.asarray(ups), jnp.asarray(sig), feas, offs,
+                          v0, block_c=None, block_s=u_max, **kwargs)
+    # a forced block_s must never be silently overwritten by auto tiling
+    with pytest.raises(ValueError, match="auto"):
+        solve_budgeted_dp_pallas(ups, sig, tables, s_cap, s_cap,
+                                 u_max=u_max, interpret=True,
+                                 block_s=u_max)
+
+
+def test_choose_tiling_decision_table():
+    """The tiling chooser: whole-plane when it fits, full-height C blocks
+    when they fit, 2-D tiles for long horizons — every returned pair
+    respects the halo floors and the VMEM budget."""
+    # paper-default sizes: trivially VMEM-resident
+    assert choose_tiling(110, 27, 40, 9, 13) == (None, None)
+    # large C, short S: full-height C-blocking suffices
+    bs, bc = choose_tiling(64, 1 << 16, 16, 8, 100)
+    assert bs is None and bc is not None
+    assert bc >= 100 and c_blocked_tile_vmem_bytes(64, bc, 8) <= \
+        VMEM_BUDGET_BYTES
+    # long S with large C: the whole plane and every full-height block
+    # are impossible — the 2-D grid is chosen
+    S, C, E, u_max, off_max = 4096, 512, 16, 4, 73
+    assert unblocked_vmem_bytes(S, C, E, u_max, off_max) > VMEM_BUDGET_BYTES
+    bs, bc = choose_tiling(S, C, E, u_max, off_max)
+    assert bs is not None and bs >= u_max and bc >= off_max
+    assert tiled_vmem_bytes(bs, bc, u_max) <= VMEM_BUDGET_BYTES
+    # a tighter budget still yields a legal (if smaller) pair
+    bs2, bc2 = choose_tiling(S, C, E, u_max, off_max, budget=2 ** 20)
+    assert bs2 >= u_max and bc2 >= off_max
+    assert bs2 * bc2 <= bs * bc
 
 
 def test_budgeted_dp_value_rows_share_feasibility_contract():

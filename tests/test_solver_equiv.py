@@ -246,6 +246,46 @@ if HAS_HYPOTHESIS:
             states - tables.offsets[edges])
 
 
+if HAS_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_s_tiled_solver_bitexact_random_tilings(seed):
+        """The 2-D (S-tile × C-tile) pipeline under RANDOM legal tilings —
+        tight (block = halo floor), padded (dividing neither plane
+        extent), and everything between, with u_max at or above the exact
+        Υ̂ maximum and optional allowed masks — yields bit-identical
+        x / s* / value_row vs the reference backend."""
+        rng = np.random.default_rng(seed)
+        E = int(rng.choice([6, 10]))
+        K = int(rng.integers(1, 3))
+        A, c, ups, sig = _rand_problem(rng, E, K, c_hi=2, u_hi=4,
+                                       sig_hi=10**4)
+        allowed = (rng.integers(0, 2, E).astype(bool)
+                   if rng.integers(0, 2) else None)
+        tables = build_tables(A, c)
+        s_cap = 4 * E                        # static per E: few jit keys
+        S, C = s_cap + 1, tables.n_states
+        off_max = int(tables.offsets.max())
+        # u_max halo edge cases: the exact bound, +1 margin, or generous
+        u_max = int(ups.max()) + int(rng.integers(0, 3))
+        u_max = max(u_max, 1)
+        block_s = int(rng.integers(max(u_max, 2), S + 3))
+        block_c = int(rng.integers(max(off_max, 1), C + 3))
+        s_limit = int(rng.integers(0, s_cap + 1))
+        got_ref = _solve_with(REF, ups, sig, tables, s_cap, s_limit, allowed)
+        x, info = solve_budgeted_dp_pallas(
+            ups, sig, tables, s_cap, s_limit, u_max=u_max,
+            allowed=None if allowed is None else jnp.asarray(allowed),
+            interpret=True, block_c=block_c, block_s=block_s)
+        np.testing.assert_array_equal(got_ref[0], np.asarray(x))
+        assert got_ref[1] == int(info["s_star"])
+        row_ref = got_ref[2].astype(np.int64)
+        row = np.asarray(info["value_row"])
+        np.testing.assert_array_equal(row_ref >= 0, row >= 0)
+        np.testing.assert_array_equal(row_ref[row_ref >= 0],
+                                      row[row >= 0].astype(np.int64))
+
+
 def test_prepare_tables_offsets_track_tables():
     """Kernel operands are pure derivations of DPTables fields — a replaced
     tables object can never serve stale operands (the old side-channel
