@@ -25,14 +25,23 @@ machine class to re-arm it).
 The compiled-pallas leg only runs on a real TPU; elsewhere it is recorded
 as skipped (the interpreter leg still exercises the kernel's program).
 Configs with a forced ``block`` additionally time the blocked grid paths
-(C-blocked and S-tiled) as backend ``pallas_interpret_blocked``; every
-S-tiled leg is first checked BIT-EXACT against the reference backend on
-x / s* / value_row (the acceptance contract), and its record carries the
-tiling plus ``unblocked_vmem_bytes`` so "impossible unblocked" is visible
-in the artifact.  Per-point records include the one-off table/operand
+as backend ``pallas_interpret_blocked``; every blocked/fused leg is first
+checked BIT-EXACT against the reference backend on x / s* / value_row
+(the acceptance contract), and its record carries the tiling plus
+``unblocked_vmem_bytes`` so "impossible unblocked" is visible in the
+artifact.  Per-point records include the one-off table/operand
 preparation cost plus a kernel-vs-wrapper split: ``forward_ms`` times the
 DP forward kernel alone, so the share spent in the eq.-17 selection +
 backtrack wrapper is visible in the numbers.
+
+Every pallas leg also records ``hbm_bytes_streamed`` — the MODELED HBM
+traffic of its tiling (``kernel.modeled_hbm_bytes``; wall-clock on
+interpret-CPU does not see HBM, so the model is what the nightly perf
+trend tracks).  Blocked configs time BOTH the edge-fused pipeline (the
+auto tiling since PR 5) and a forced per-edge-scan leg
+(``pallas_interpret_scan``, same plane tiling with ``block_e=None``), and
+record ``hbm_reduction_vs_scan`` — the modeled traffic ratio the fusion
+buys (the PR-5 acceptance bound is ≥ 4× on E16_C512_S4096).
 """
 from __future__ import annotations
 
@@ -52,7 +61,7 @@ from repro.core.dp import build_tables, solve_budgeted_dp
 from repro.core.solvers import get_solver
 from repro.kernels.budgeted_dp.kernel import (
     NEG, VMEM_BUDGET_BYTES, choose_tiling, dp_forward_pallas,
-    unblocked_vmem_bytes)
+    modeled_hbm_bytes, unblocked_vmem_bytes)
 from repro.kernels.budgeted_dp.ops import (prepare_tables,
                                            solve_budgeted_dp_pallas)
 
@@ -71,8 +80,9 @@ CONFIGS = [
     {"name": "E16_C512", "E": 16, "c": (7, 7, 7), "u_hi": 3},
     {"name": "E16_C1024", "E": 16, "c": (3, 15, 15), "u_hi": 3},
     {"name": "E16_C4096", "E": 16, "c": (7, 7, 7, 7), "u_hi": 2,
-     "block": (None, 1024)},   # off_max ≈ 585 (stride of the 4th resource
-                               # is 512), so the halo needs ≥ 1024 tiles
+     "block": (8, None, 1024)},  # off_max ≈ 585 (stride of the 4th resource
+                                 # is 512), so the halo needs ≥ 1024 tiles;
+                                 # fused in chunks of 8 edges
     {"name": "E16_C512_S4096", "E": 16, "c": (7, 7, 7), "u_hi": 3,
      "s_cap": 4095, "verify": True},
     {"name": "E16_C512_S8192", "E": 16, "c": (7, 7, 7), "u_hi": 3,
@@ -149,7 +159,7 @@ def _time_solver(solver, ups, sig, tables, s_cap, runs: int, u_max: int):
 
 def _time_forward(ups, sig, tables, s_cap, runs: int, interpret: bool,
                   u_max: int, block_c: int | None = None,
-                  block_s: int | None = None):
+                  block_s: int | None = None, block_e: int | None = None):
     """The DP forward kernel alone — the kernel side of the
     kernel-vs-wrapper split (mean_ms − forward_ms ≈ s*-rule + backtrack)."""
     feas, offs = prepare_tables(tables)
@@ -158,7 +168,8 @@ def _time_forward(ups, sig, tables, s_cap, runs: int, interpret: bool,
     fn = jax.jit(lambda u, s: dp_forward_pallas(
         u, s, jnp.asarray(feas), jnp.asarray(offs), v0, n_edges=offs.shape[0],
         u_max=u_max, off_max=int(offs.max()),
-        interpret=interpret, block_c=block_c, block_s=block_s))
+        interpret=interpret, block_c=block_c, block_s=block_s,
+        block_e=block_e))
 
     def call():
         jax.block_until_ready(fn(jnp.asarray(ups), jnp.asarray(sig)))
@@ -166,18 +177,29 @@ def _time_forward(ups, sig, tables, s_cap, runs: int, interpret: bool,
     return _timed(call, runs)
 
 
+def _hbm_model(tables, s_cap: int, E: int, u_max: int,
+               block_e, block_s, block_c) -> int:
+    """Modeled HBM bytes streamed by one forward solve under a tiling."""
+    _, offs = prepare_tables(tables)
+    return modeled_hbm_bytes(s_cap + 1, tables.n_states, E, u_max,
+                             int(offs.max()), block_e, block_s, block_c)
+
+
 def _verify_blocked_bitexact(ups, sig, tables, s_cap, u_max: int,
-                             block_s, block_c, interpret: bool) -> None:
-    """Acceptance contract for the blocked/tiled legs: x, s*, and the
-    feasibility-normalized value row are bit-exact vs the reference
+                             block_s, block_c, interpret: bool,
+                             block_e=None, ref=None) -> None:
+    """Acceptance contract for the blocked/tiled/fused legs: x, s*, and
+    the feasibility-normalized value row are bit-exact vs the reference
     backend.  Raises on any mismatch — a wrong kernel must fail the
-    benchmark, not record a fast wrong number."""
-    x_ref, info_ref = solve_budgeted_dp(
+    benchmark, not record a fast wrong number.  ``ref`` is an optional
+    precomputed reference solution — configs gating several legs solve
+    the (slow, exact) reference once and share it."""
+    x_ref, info_ref = ref if ref is not None else solve_budgeted_dp(
         jnp.asarray(ups, jnp.int32), jnp.asarray(sig, jnp.int32), tables,
         s_cap, jnp.int32(s_cap))
     x_t, info_t = solve_budgeted_dp_pallas(
         ups, sig, tables, s_cap, s_cap, u_max=u_max, interpret=interpret,
-        block_c=block_c, block_s=block_s)
+        block_c=block_c, block_s=block_s, block_e=block_e)
     np.testing.assert_array_equal(np.asarray(x_ref), np.asarray(x_t))
     assert int(info_ref["s_star"]) == int(info_t["s_star"])
     row_ref = np.asarray(info_ref["value_row"]).astype(np.int64)
@@ -207,19 +229,35 @@ def bench(configs, runs: int) -> dict:
         # the tiling the pallas backends auto-resolve for this plane: the
         # solver legs below time exactly that execution path, so the
         # long-S configs get an end-to-end mean_ms AND a kernel-vs-wrapper
-        # split through the S-tiled pipeline, not just a forward number
-        block_s, block_c = choose_tiling(S, C, cfg["E"], u_max, off_max)
+        # split through the edge-fused S-tiled pipeline, not just a
+        # forward number
+        block_e, block_s, block_c = choose_tiling(S, C, cfg["E"], u_max,
+                                                  off_max)
+        auto_hbm = _hbm_model(tables, s_cap, cfg["E"], u_max,
+                              block_e, block_s, block_c)
         point = {"config": cfg["name"], "E": cfg["E"], "K": len(c),
                  "n_states": C, "S": S,
                  "build_tables_ms": build_ms,
                  "prepare_operands_ms": prepare_ms,
                  "unblocked_vmem_bytes": unblocked,
                  "vmem_budget_bytes": VMEM_BUDGET_BYTES,
-                 "tiling": {"block_s": block_s, "block_c": block_c},
+                 "tiling": {"block_e": block_e, "block_s": block_s,
+                            "block_c": block_c},
+                 "hbm_bytes_streamed": auto_hbm,
                  "backends": {}}
+        # one exact reference solution per config, shared by every
+        # bit-exact gate below (it is the slowest solve on the long-S
+        # configs — never compute it twice)
+        ref = None
+        if cfg.get("verify") or cfg.get("block") or (
+                block_c is not None and block_e is not None):
+            ref = solve_budgeted_dp(
+                jnp.asarray(ups, jnp.int32), jnp.asarray(sig, jnp.int32),
+                tables, s_cap, jnp.int32(s_cap))
         if cfg.get("verify"):
             _verify_blocked_bitexact(ups, sig, tables, s_cap, u_max,
-                                     block_s, block_c, platform != "tpu")
+                                     block_s, block_c, platform != "tpu",
+                                     block_e=block_e, ref=ref)
             point["bitexact_vs_reference"] = True
         for name in backends:
             if name == "pallas" and platform != "tpu":
@@ -233,23 +271,53 @@ def bench(configs, runs: int) -> dict:
             if name != "reference":
                 interpret = (name == "pallas_interpret" or platform != "tpu")
                 fwd = _time_forward(ups, sig, tables, s_cap, runs, interpret,
-                                    u_max, block_c=block_c, block_s=block_s)
+                                    u_max, block_c=block_c, block_s=block_s,
+                                    block_e=block_e)
                 rec["forward_ms"] = fwd["mean_ms"]
                 rec["wrapper_ms"] = max(rec["mean_ms"] - fwd["mean_ms"], 0.0)
+                rec["hbm_bytes_streamed"] = auto_hbm
                 if block_c is not None:
+                    rec["block_e"] = block_e
                     rec["block_s"], rec["block_c"] = block_s, block_c
             point["backends"][name] = rec
-        if cfg.get("block"):
-            # additionally time a FORCED tiling (e.g. the C-blocked grid on
-            # a plane that also fits whole-plane, for comparison)
-            fbs, fbc = cfg["block"]
+        if block_c is not None and block_e is not None:
+            # the fused-vs-scan comparison: the SAME plane tiling forced
+            # through the per-edge-scan pipeline (one pallas_call per
+            # edge), bit-exact-gated, so the artifact shows what the
+            # fusion buys in wall-clock AND modeled HBM traffic
             interpret = platform != "tpu"
+            _verify_blocked_bitexact(ups, sig, tables, s_cap, u_max,
+                                     block_s, block_c, interpret,
+                                     block_e=None, ref=ref)
             fwd = _time_forward(ups, sig, tables, s_cap, runs, interpret,
-                                u_max, block_c=fbc, block_s=fbs)
+                                u_max, block_c=block_c, block_s=block_s,
+                                block_e=None)
+            scan_hbm = _hbm_model(tables, s_cap, cfg["E"], u_max,
+                                  None, block_s, block_c)
+            point["backends"]["pallas_interpret_scan" if interpret
+                              else "pallas_scan"] = {
+                "forward_ms": fwd["mean_ms"], "warmup_ms": fwd["warmup_ms"],
+                "runs": runs, "block_c": block_c, "block_s": block_s,
+                "block_e": None, "hbm_bytes_streamed": scan_hbm}
+            point["hbm_reduction_vs_scan"] = scan_hbm / auto_hbm
+        if cfg.get("block"):
+            # additionally time a FORCED tiling (e.g. the fused C-blocked
+            # grid on a plane that also fits whole-plane, for comparison)
+            fbe, fbs, fbc = cfg["block"]
+            interpret = platform != "tpu"
+            _verify_blocked_bitexact(ups, sig, tables, s_cap, u_max,
+                                     fbs, fbc, interpret, block_e=fbe,
+                                     ref=ref)
+            fwd = _time_forward(ups, sig, tables, s_cap, runs, interpret,
+                                u_max, block_c=fbc, block_s=fbs,
+                                block_e=fbe)
             point["backends"]["pallas_interpret_blocked" if interpret
                               else "pallas_blocked"] = {
                 "forward_ms": fwd["mean_ms"], "warmup_ms": fwd["warmup_ms"],
-                "runs": runs, "block_c": fbc, "block_s": fbs}
+                "runs": runs, "block_c": fbc, "block_s": fbs,
+                "block_e": fbe,
+                "hbm_bytes_streamed": _hbm_model(tables, s_cap, cfg["E"],
+                                                 u_max, fbe, fbs, fbc)}
         records.append(point)
         print(f"{cfg['name']}: E={cfg['E']} C={C} "
               f"S={S}: " + "  ".join(

@@ -15,7 +15,10 @@ too. That structure is exactly what `kernels/budgeted_dp` exploits on TPU
 (whole plane in VMEM, both shifts = padded dynamic slices, transitions = an
 (E,) offset vector instead of an (E, C, C) one-hot; planes too big for
 VMEM stream through C-blocked or 2-D S×C-tiled grids — both shifts read
-only towards smaller indices, so one halo tile per axis covers them).
+only towards smaller indices, so one halo tile per axis covers them — and
+the edge loop fuses into those grids in chunks of `block_e`, so each tile
+streams HBM once per chunk instead of once per edge; see
+docs/kernel_pipeline.md).
 This module is the pure-JAX *reference* backend of the pluggable solver
 registry (`core/solvers.py`); the Pallas kernel backend is validated against
 `solve_budgeted_dp` by the differential harness in tests/test_solver_equiv.py.
@@ -62,6 +65,21 @@ class DPTables:
 
 
 def build_tables(A: np.ndarray, c: np.ndarray) -> DPTables:
+    """Build the static capacity-state transition tables for one instance.
+
+    Args:
+      A: (K, E) int demand matrix — column e is edge e's device
+        requirement vector a^e over the K resource types.
+      c: (K,) int cluster capacities.
+
+    Returns:
+      :class:`DPTables` over the Π_k (c_k + 1) mixed-radix capacity
+      states, with the per-edge transition offsets derived AND validated
+      (``next_state[c, e] == c - offsets[e]`` is asserted on every
+      feasible pair — the structural identity the TPU kernel's uniform
+      capacity shift rests on).  Host numpy; build once per instance and
+      share across slots/backends (every solver takes ``tables``).
+    """
     A = np.asarray(A, dtype=np.int64)
     c = np.asarray(c, dtype=np.int64)
     K, E = A.shape

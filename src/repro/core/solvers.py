@@ -22,11 +22,14 @@ Registry:
                      (``kernels.budgeted_dp``); compiled on TPU, Pallas
                      interpreter elsewhere (never silently interpreted on
                      real TPU hardware).  Plane tiling (whole-plane vs
-                     C-blocked vs the 2-D S×C grid for long horizons) is
+                     C-blocked vs the 2-D S×C grid for long horizons, with
+                     edge-fused chunks keeping tiles VMEM-resident across
+                     ``block_e`` consecutive edges on the blocked paths) is
                      resolved inside the backend from the VMEM budget
                      (``kernels.budgeted_dp.kernel.choose_tiling``) — it is
                      an execution detail invisible at this contract, and
-                     never changes results.
+                     never changes results.  See ``docs/kernel_pipeline.md``
+                     for the kernel internals.
   pallas_interpret — the same kernel forced through the interpreter on any
                      backend; what differential tests run on CPU CI.
   auto             — TPU → pallas (compiled), CPU/GPU → reference.

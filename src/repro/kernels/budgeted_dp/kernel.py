@@ -42,6 +42,36 @@ is then independent of BOTH plane extents, which is what lets S ≳ 4096
 with large C run at all; ``choose_tiling`` picks the largest (block_s,
 block_c) pair that fits the VMEM budget.
 
+``block_e`` FUSES the edge loop into that grid — a temporal blocking of
+the DP recurrence.  The per-edge-scan pipelines above re-stream the whole
+value plane HBM↔VMEM once per edge; the fused pipeline runs one
+pallas_call per chunk of ``block_e`` consecutive edges, and each tile stays
+VMEM-resident (in the shift scratch's body region) across the whole chunk,
+cutting plane traffic ``block_e``-fold.  The price is the halo: by the
+time tile (i, j) runs, its up/left neighbors have already advanced through
+ALL ``block_e`` edges of the chunk, so their boundary values at each
+*intermediate* edge must be preserved.  Two persistent VMEM scratch
+buffers carry exactly that history across grid steps (the TPU grid is
+sequential, and scratch survives grid iterations):
+
+  * ``lefth`` — (block_e, block_s, off_max): the last off_max columns of
+    the previous C-tile *before* each edge of the chunk.  Each tile reads
+    its left halo for edge k from ``lefth[k]``, then overwrites it with
+    its own pre-edge-k boundary for the next tile (read-then-write within
+    one grid step, so a single buffer suffices along C);
+  * ``rowh`` — (2 × block_e, u_max, C_padded): the bottom u_max rows of
+    every tile of the previous S-row, per edge, double-banked by S-row
+    parity — tile (i, j) reads bank (i−1) mod 2 (up halo at columns of
+    tiles j−1 and j, the j−1 part being the up-left corner) and writes
+    bank i mod 2, so row i's writes never clobber the corner history row
+    i+1 still needs.
+
+Decision bits for the whole chunk pack into ONE (S, C) int32 word-plane
+per tile (bit Υ = global edge id mod 32 — legal because block_e ≤ 32 keeps
+in-chunk bit positions distinct); the host scan ORs each chunk word into
+the packed (⌈E/32⌉, S, C) decision planes through static per-chunk word
+masks, which also handles chunks straddling a 32-bit word boundary.
+
 Arithmetic is f32 with integer values; exactness holds for values < 2²⁴
 (ops.py enforces the bound — see core/stats.py for why defaults are ≪ 2²⁴).
 
@@ -57,17 +87,23 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["NEG", "VMEM_BUDGET_BYTES", "resolve_interpret", "packed_words",
-           "unblocked_vmem_bytes", "c_blocked_tile_vmem_bytes",
-           "tiled_vmem_bytes", "choose_tiling", "dp_forward_pallas"]
+__all__ = ["NEG", "VMEM_BUDGET_BYTES", "MAX_BLOCK_E", "resolve_interpret",
+           "packed_words", "unblocked_vmem_bytes", "c_blocked_tile_vmem_bytes",
+           "tiled_vmem_bytes", "fused_tile_vmem_bytes", "modeled_hbm_bytes",
+           "choose_tiling", "dp_forward_pallas"]
 
 NEG = -float(2 ** 24)
 
 # conservative share of the ~16 MB/core VMEM left to this kernel
 VMEM_BUDGET_BYTES = 12 * 2 ** 20
+
+# fused chunks pack their decision bits into ONE int32 word-plane, so
+# in-chunk bit positions (global edge id mod 32) must be distinct
+MAX_BLOCK_E = 32
 
 
 def resolve_interpret(interpret: bool | None = None,
@@ -115,6 +151,64 @@ def tiled_vmem_bytes(block_s: int, block_c: int, u_max: int) -> int:
                 + (u_max + block_s) * 2 * block_c + block_c)
 
 
+def fused_tile_vmem_bytes(block_e: int, block_s: int, block_c: int,
+                          u_max: int, off_max: int, S: int, C: int) -> int:
+    """Per-grid-step VMEM of the edge-fused pipeline: one (block_s, block_c)
+    input tile + two output tiles (value + chunk bits) + the
+    (u_max + block_s, off_max + block_c) shift scratch + the per-chunk
+    feasibility block + the two persistent halo-history scratches —
+    ``lefth`` (block_e, block_s, off_max) and the double-banked ``rowh``
+    (2·block_e, u_max, C_padded), the only term that scales with the plane
+    width.  A single-S-row grid (block_s ≥ S, i.e. full-height tiles) has
+    no up neighbors: ``rowh`` is neither allocated nor charged, which is
+    what keeps large fused chunks affordable at very large C.  All
+    4-byte."""
+    Cp = -(-C // block_c) * block_c
+    rowh = 0 if block_s >= S else 2 * block_e * max(u_max, 1) * Cp
+    return 4 * (3 * block_s * block_c
+                + (u_max + block_s) * (off_max + block_c)
+                + block_e * block_c                      # feasibility chunk
+                + rowh                                   # rowh banks
+                + block_e * block_s * max(off_max, 1)    # lefth
+                + 4 * block_e)                           # SMEM scalars
+
+
+def modeled_hbm_bytes(S: int, C: int, n_edges: int, u_max: int, off_max: int,
+                      block_e, block_s, block_c) -> int:
+    """Modeled HBM bytes streamed by one DP forward solve under a tiling.
+
+    Counts the plane-sized flows only (operand vectors are O(E)): value
+    blocks read/written by the pallas pipeline, the per-step feasibility
+    blocks, and the host-side merge of decision bits into the packed
+    (⌈E/32⌉, S, C) words (a read-modify-write of one word plane per edge
+    for the scan pipelines, of all W planes per chunk for the fused one).
+    The whole-plane kernel streams everything exactly once.  This is the
+    ``hbm_bytes_streamed`` model `benchmarks/dp_bench.py` records — a
+    traffic model for the perf trend, not a measurement.
+    """
+    W = packed_words(n_edges)
+    if block_c is None:                      # whole-plane, VMEM-resident
+        return 4 * (S * C            # v0 in
+                    + n_edges * C    # feasibility plane in
+                    + S * C          # V out
+                    + W * S * C)     # packed decisions out
+    Cp = -(-C // block_c) * block_c
+    Sp = S if block_s is None else -(-S // block_s) * block_s
+    plane = 4 * Sp * Cp
+    if block_e is None:
+        # one pallas_call per edge: every tile re-loads its halo views
+        # (2 for the C-blocked row, 4 for the 2-D grid), writes V' + bits,
+        # and the host ORs the bits into one packed word (read + write)
+        views = 2 if block_s is None else 4
+        per_edge = (views + 2) * plane + 2 * plane + 4 * Cp
+        return n_edges * per_edge
+    # fused: each chunk streams the plane in/out ONCE, plus the chunk's
+    # bits plane and the W-word packed-decision merge
+    n_chunks = -(-n_edges // block_e)
+    per_chunk = (1 + 2) * plane + (1 + 2 * W) * plane + 4 * block_e * Cp
+    return n_chunks * per_chunk
+
+
 def _tile_candidates(extent: int, unit: int, floor: int) -> list:
     """Descending tile widths for one axis: the full extent plus every
     power-of-two multiple of ``unit`` below it, all ≥ ``floor`` (the halo
@@ -130,37 +224,55 @@ def _tile_candidates(extent: int, unit: int, floor: int) -> list:
 
 def choose_tiling(S: int, C: int, n_edges: int, u_max: int, off_max: int,
                   budget: int = VMEM_BUDGET_BYTES):
-    """Pick ``(block_s, block_c)`` for :func:`dp_forward_pallas`.
+    """Pick ``(block_e, block_s, block_c)`` for :func:`dp_forward_pallas`.
 
-    Returns ``(None, None)`` when the whole-plane kernel fits the VMEM
-    budget; ``(None, block_c)`` for the C-blocked (full-height) pipeline
-    when some legal capacity tile fits; else the largest 2-D tile pair
-    (maximizing block_s·block_c, ties to the wider lane-contiguous
-    block_c) that fits.  Tiles respect the halo floors (block_c ≥ off_max,
-    block_s ≥ u_max) and the VPU lane/sublane units (128 along C, 8 along
-    S) wherever the floors allow; if even the smallest legal pair exceeds
-    the budget it is returned anyway — no smaller tiling exists.
+    Returns ``(None, None, None)`` when the whole-plane kernel fits the
+    VMEM budget (edges already run inside one pallas_call there — nothing
+    to fuse).  Otherwise the plane tiles exactly as before — ``block_s is
+    None`` selects the C-blocked (full-height) pipeline when some legal
+    capacity tile fits, else the largest 2-D tile pair (maximizing
+    block_s·block_c, ties to the wider lane-contiguous block_c) — and
+    ``block_e`` is then the largest edge-chunk ≤ min(``MAX_BLOCK_E``, E)
+    whose fused pipeline (``fused_tile_vmem_bytes``: the plane tile plus
+    the halo-history scratches) still fits the budget, cutting HBM plane
+    traffic ``block_e``-fold.  ``block_e is None`` falls back to the
+    per-edge-scan pipelines (one pallas_call per edge) — only reachable
+    when even a 1-edge chunk's history scratch overflows the budget.
+
+    Tiles respect the halo floors (block_c ≥ off_max, block_s ≥ u_max) and
+    the VPU lane/sublane units (128 along C, 8 along S) wherever the
+    floors allow; if even the smallest legal pair exceeds the budget it is
+    returned anyway — no smaller tiling exists.
     """
     if unblocked_vmem_bytes(S, C, n_edges, u_max, off_max) <= budget:
-        return None, None
+        return None, None, None
     c_cands = _tile_candidates(C, 128, off_max)
+    block_s = block_c = None
     for bc in c_cands:                           # widest full-height first
         if c_blocked_tile_vmem_bytes(S, bc, u_max) <= budget:
-            return None, bc
-    s_cands = _tile_candidates(S, 8, max(u_max, 1))
-    best = None
-    for bs in s_cands:
-        for bc in c_cands:
-            if bs == S and bc == C:
-                continue                         # that is the whole plane
-            if tiled_vmem_bytes(bs, bc, u_max) > budget:
-                continue
-            if (best is None or bs * bc > best[0] * best[1]
-                    or (bs * bc == best[0] * best[1] and bc > best[1])):
-                best = (bs, bc)
-    if best is None:
-        best = (s_cands[-1], c_cands[-1])        # floor pair: best possible
-    return best
+            block_c = bc
+            break
+    if block_c is None:
+        s_cands = _tile_candidates(S, 8, max(u_max, 1))
+        best = None
+        for bs in s_cands:
+            for bc in c_cands:
+                if bs == S and bc == C:
+                    continue                     # that is the whole plane
+                if tiled_vmem_bytes(bs, bc, u_max) > budget:
+                    continue
+                if (best is None or bs * bc > best[0] * best[1]
+                        or (bs * bc == best[0] * best[1] and bc > best[1])):
+                    best = (bs, bc)
+        if best is None:
+            best = (s_cands[-1], c_cands[-1])    # floor pair: best possible
+        block_s, block_c = best
+    bs_eff = S if block_s is None else block_s
+    for be in range(min(MAX_BLOCK_E, max(n_edges, 1)), 0, -1):
+        if fused_tile_vmem_bytes(be, bs_eff, block_c, u_max, off_max,
+                                 S, C) <= budget:
+            return be, block_s, block_c
+    return None, block_s, block_c
 
 
 def _dp_kernel(ups_ref, sig_ref, offs_ref, feas_ref, v0_ref,
@@ -323,6 +435,180 @@ def _edge_call(V, feas_e, u1, off1, sig1, *, u_max: int, block_s,
     )(u1, off1, sig1, feas_e, V, V, V, V)
 
 
+def _fused_chunk_kernel(ups_ref, offs_ref, sig_ref, bitpos_ref, feas_ref,
+                        vin_ref, vout_ref, bits_ref, vpad_ref, rowh_ref,
+                        lefth_ref, *, n_chunk: int, u_max: int, off_max: int,
+                        multi_row: bool):
+    """``n_chunk`` consecutive edges on one (block_s, block_c) tile.
+
+    The tile lives in the BODY region of ``vpad`` (rows [u_max:], columns
+    [off_max:]) for the whole chunk — loaded from HBM once, written back
+    once.  Per edge k the halo regions refresh from the persistent history
+    scratches (see the module docstring): ``lefth[k]`` holds the left
+    neighbor's last off_max columns *before* edge k (read, then overwritten
+    with this tile's own pre-edge-k boundary for the next C-tile), and
+    ``rowh`` holds the previous S-row's bottom u_max rows per edge,
+    double-banked by row parity so the up-left corner read never races the
+    current row's writes.  S-row 0 replicates the clamp row V[0] (= body
+    row 0, and the left halo's row 0 for the corner columns) exactly like
+    the unfused kernels; C-tile 0's left halo is garbage by construction —
+    every read landing there is a state c < offset_e, infeasible, masked
+    to NEG.  Decision bits of the whole chunk OR into one int32 word plane
+    at bit ``bitpos[k]`` (global edge id mod 32)."""
+    Bs = vin_ref.shape[0]
+    Bc = vin_ref.shape[1]
+    i = pl.program_id(0)
+    rd = (i + 1) % 2                  # rowh bank written by S-row i-1
+    wr = i % 2
+    j = pl.program_id(1)
+    vpad_ref[pl.ds(u_max, Bs), pl.ds(off_max, Bc)] = vin_ref[:, :]
+    bits_ref[:, :] = jnp.zeros((Bs, Bc), jnp.int32)
+
+    def edge_step(k, _):
+        u = jnp.minimum(ups_ref[k], u_max)
+        off = jnp.minimum(offs_ref[k], off_max)
+        sig = sig_ref[k].astype(jnp.float32)
+        bit = jnp.left_shift(jnp.int32(1), bitpos_ref[k])
+
+        if off_max:
+            # left halo for edge k, then this tile's own boundary history
+            # (pre-edge-k values) — read-then-write keeps one buffer legal
+            vpad_ref[pl.ds(u_max, Bs), :off_max] = \
+                lefth_ref[pl.ds(k, 1)][0]
+            lefth_ref[pl.ds(k, 1)] = \
+                vpad_ref[pl.ds(u_max, Bs), pl.ds(Bc, off_max)][None]
+        if u_max and multi_row:
+            @pl.when(i > 0)
+            def _up_from_history():
+                bank = rd * n_chunk + k
+                vpad_ref[:u_max, pl.ds(off_max, Bc)] = \
+                    rowh_ref[pl.ds(bank, 1), :, pl.ds(j * Bc, Bc)][0]
+                if off_max:
+                    # up-left corner: bottom-right of tile (i-1, j-1);
+                    # j == 0 clamps to garbage that only infeasible
+                    # states (c < offset_e) ever read
+                    start = jnp.maximum(j * Bc - off_max, 0)
+                    vpad_ref[:u_max, :off_max] = \
+                        rowh_ref[pl.ds(bank, 1), :, pl.ds(start, off_max)][0]
+
+            @pl.when(i == 0)
+            def _up_from_clamp_row():
+                # budgets below 0 clamp to V[0] — body row 0 across the
+                # full scratch width (the corner columns got the left
+                # halo's row 0, written just above)
+                vpad_ref[:u_max, :] = jnp.broadcast_to(
+                    vpad_ref[pl.ds(u_max, 1), :], (u_max, off_max + Bc))
+            # bottom-rows history (pre-edge-k) for S-row i+1
+            rowh_ref[pl.ds(wr * n_chunk + k, 1), :, pl.ds(j * Bc, Bc)] = \
+                vpad_ref[pl.ds(Bs, u_max), pl.ds(off_max, Bc)][None]
+        elif u_max:
+            # single-S-row grid: no up neighbors exist, no history to keep
+            # — every tile just replicates its clamp row V[0]
+            vpad_ref[:u_max, :] = jnp.broadcast_to(
+                vpad_ref[pl.ds(u_max, 1), :], (u_max, off_max + Bc))
+
+        cur = vpad_ref[pl.ds(u_max, Bs), pl.ds(off_max, Bc)]
+        take = vpad_ref[pl.ds(u_max - u, Bs), pl.ds(off_max - off, Bc)] + sig
+        take = jnp.where(feas_ref[k, :][None, :] > 0, take, NEG)
+        dec = (take > cur).astype(jnp.int32)
+        bits_ref[:, :] = bits_ref[:, :] | (dec * bit)
+        vpad_ref[pl.ds(u_max, Bs), pl.ds(off_max, Bc)] = \
+            jnp.maximum(cur, take)
+        return 0
+
+    jax.lax.fori_loop(0, n_chunk, edge_step, 0)
+    vout_ref[:, :] = vpad_ref[pl.ds(u_max, Bs), pl.ds(off_max, Bc)]
+
+
+def _chunk_word_masks(n_edges: int, block_e: int) -> np.ndarray:
+    """(n_chunks, ⌈E/32⌉) int32: word w's bits owned by chunk c.
+
+    Edges are processed in reverse (E-1 … 0) in chunks of ``block_e``; a
+    chunk's bits land at positions e mod 32 of its single word plane, and
+    these masks route them into the packed word e // 32 — including chunks
+    that straddle a word boundary (their two words get disjoint masks)."""
+    W = packed_words(n_edges)
+    n_chunks = -(-n_edges // block_e)
+    masks = np.zeros((n_chunks, W), np.uint32)
+    for idx, e in enumerate(range(n_edges - 1, -1, -1)):
+        masks[idx // block_e, e // 32] |= np.uint32(1) << np.uint32(e % 32)
+    return masks.view(np.int32)
+
+
+def _dp_forward_fused(upsilon, sigma2, feasible, offsets, v0,
+                      *, n_edges: int, u_max: int, off_max: int,
+                      block_e: int, block_s, block_c: int, interpret: bool):
+    if not 1 <= block_e <= MAX_BLOCK_E:
+        raise ValueError(
+            f"block_e={block_e} outside [1, {MAX_BLOCK_E}]: a fused chunk "
+            "packs its decision bits into one int32 word plane, so "
+            "in-chunk bit positions (edge id mod 32) must stay distinct")
+    S, C = v0.shape
+    Cp = -(-C // block_c) * block_c
+    bs = S if block_s is None else block_s
+    Sp = -(-S // bs) * bs
+    V0 = jnp.pad(v0, ((0, Sp - S), (0, Cp - C)), constant_values=NEG)
+    feas_p = jnp.pad(feasible, ((0, 0), (0, Cp - C)))   # pad states masked
+    W = packed_words(n_edges)
+    dec0 = jnp.zeros((W, Sp, Cp), jnp.int32)
+
+    # edges processed E-1 … 0, padded up to whole chunks with inert edges
+    # (feasible ≡ 0 masks them to NEG everywhere, so dec ≡ 0)
+    n_chunks = -(-n_edges // block_e)
+    Ep = n_chunks * block_e
+    pad_e = Ep - n_edges
+    rev = slice(None, None, -1)
+
+    def _chunked(arr, pad_width):
+        return jnp.pad(arr[rev], pad_width).reshape((n_chunks, block_e)
+                                                    + arr.shape[1:])
+
+    e_ids = jnp.arange(n_edges - 1, -1, -1, dtype=jnp.int32)
+    xs = (_chunked(upsilon, (0, pad_e)),
+          _chunked(offsets, (0, pad_e)),
+          _chunked(sigma2, (0, pad_e)),
+          jnp.pad(e_ids % 32, (0, pad_e)).reshape(n_chunks, block_e),
+          _chunked(feas_p, ((0, pad_e), (0, 0))),
+          jnp.asarray(_chunk_word_masks(n_edges, block_e)))
+
+    multi_row = Sp // bs > 1
+    kernel = functools.partial(_fused_chunk_kernel, n_chunk=block_e,
+                               u_max=u_max, off_max=off_max,
+                               multi_row=multi_row)
+    scalar_specs = [pl.BlockSpec(memory_space=pltpu.SMEM)] * 4
+    # a single-S-row grid never reads rowh — allocate a token buffer so
+    # the large-C fused regime is not charged 2·block_e·u_max·Cp for it
+    rowh_shape = (2 * block_e, max(u_max, 1), Cp) if multi_row else (1, 1, 1)
+    call = pl.pallas_call(
+        kernel,
+        grid=(Sp // bs, Cp // block_c),
+        out_shape=(jax.ShapeDtypeStruct((Sp, Cp), jnp.float32),
+                   jax.ShapeDtypeStruct((Sp, Cp), jnp.int32)),
+        in_specs=scalar_specs + [
+            pl.BlockSpec((block_e, block_c), lambda i, j: (0, j)),
+            pl.BlockSpec((bs, block_c), lambda i, j: (i, j)),
+        ],
+        out_specs=(pl.BlockSpec((bs, block_c), lambda i, j: (i, j)),
+                   pl.BlockSpec((bs, block_c), lambda i, j: (i, j))),
+        scratch_shapes=[
+            pltpu.VMEM((u_max + bs, off_max + block_c), jnp.float32),
+            pltpu.VMEM(rowh_shape, jnp.float32),
+            pltpu.VMEM((block_e, bs, max(off_max, 1)), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+
+    def body(carry, x):
+        V, dec = carry
+        ups_c, offs_c, sig_c, bitpos_c, feas_c, mask_c = x
+        Vn, bits = call(ups_c, offs_c, sig_c, bitpos_c, feas_c, V)
+        dec = dec | (bits[None, :, :] & mask_c[:, None, None])
+        return (Vn, dec), None
+
+    (V, dec), _ = jax.lax.scan(body, (V0, dec0), xs)
+    return V[:S, :C], dec[:, :S, :C]
+
+
 def _dp_forward_blocked(upsilon, sigma2, feasible, offsets, v0,
                         *, n_edges: int, u_max: int, off_max: int,
                         block_s, block_c: int, interpret: bool):
@@ -367,28 +653,50 @@ def _dp_forward_blocked(upsilon, sigma2, feasible, offsets, v0,
 
 @functools.partial(jax.jit, static_argnames=("n_edges", "u_max", "off_max",
                                              "interpret", "block_c",
-                                             "block_s"))
+                                             "block_s", "block_e"))
 def dp_forward_pallas(upsilon, sigma2, feasible, offsets, v0,
                       *, n_edges: int, u_max: int, off_max: int,
                       interpret: bool | None = None,
                       block_c: int | None = None,
-                      block_s: int | None = None):
+                      block_s: int | None = None,
+                      block_e: int | None = None):
     """upsilon/sigma2/offsets: (E,) i32; feasible: (E, C) f32 0/1;
     v0: (S, C) f32.  Returns (V_final (S, C) f32,
     decisions (⌈E/32⌉, S, C) i32 — bit (e%32) of word (e//32) is edge e).
 
     ``offsets[e]`` is the mixed-radix transition constant (next(c) = c −
     offsets[e] on feasible states; ``off_max`` ≥ max offsets); ``block_c``
-    selects the C-blocked pipeline and ``block_s`` additionally tiles the
-    budget axis (2-D grid; requires ``block_c``; ``choose_tiling`` picks
-    both from the VMEM budget).  ``interpret=None`` resolves via
-    :func:`resolve_interpret` (compiled on TPU, interpreter elsewhere)."""
+    selects the blocked pipelines, ``block_s`` additionally tiles the
+    budget axis (2-D grid; requires ``block_c``), and ``block_e`` fuses
+    chunks of that many consecutive edges into each pallas_call (temporal
+    blocking — tiles stay VMEM-resident across the chunk; requires
+    ``block_c``, 1 ≤ block_e ≤ ``MAX_BLOCK_E``; need not divide E).
+    ``choose_tiling`` picks all three from the VMEM budget.
+    ``interpret=None`` resolves via :func:`resolve_interpret` (compiled on
+    TPU, interpreter elsewhere)."""
     interp = resolve_interpret(interpret)
     if block_s is not None and block_c is None:
         raise ValueError(
             "block_s tiles the budget axis of the blocked pipeline and "
             "needs block_c (pass block_c=C for a single full-width tile)")
+    if block_e is not None and block_c is None:
+        raise ValueError(
+            "block_e fuses edges into the blocked pipeline's grid and "
+            "needs block_c (pass block_c=C for a single full-width tile)")
     if block_c is not None:
+        if block_c < off_max:
+            raise ValueError(
+                f"block_c={block_c} < off_max={off_max}: the offset shift "
+                "would reach past the left-neighbor halo")
+        if block_s is not None and block_s < u_max:
+            raise ValueError(
+                f"block_s={block_s} < u_max={u_max}: the budget shift "
+                "would reach past the up-neighbor halo")
+        if block_e is not None:
+            return _dp_forward_fused(
+                upsilon, sigma2, feasible, offsets, v0, n_edges=n_edges,
+                u_max=u_max, off_max=off_max, block_e=block_e,
+                block_s=block_s, block_c=block_c, interpret=interp)
         return _dp_forward_blocked(
             upsilon, sigma2, feasible, offsets, v0, n_edges=n_edges,
             u_max=u_max, off_max=off_max, block_s=block_s, block_c=block_c,

@@ -3,9 +3,12 @@
 Drop-in equivalent of core.dp.solve_budgeted_dp (tested for exact
 agreement): derives the offset-encoded kernel operands, runs the
 VMEM-resident kernel (or its blocked pipelines — C-blocked for large
-capacity spaces, (S-tile × C-tile) for long horizons; ``choose_tiling``
-resolves the split), then applies the eq.-17 s* rule and backtracks in
-plain jnp from the bit-packed decision words.  The backtrack is
+capacity spaces, (S-tile × C-tile) for long horizons, both edge-FUSED by
+default so every tile stays VMEM-resident across ``block_e`` consecutive
+edges instead of re-streaming the plane per edge; ``choose_tiling``
+resolves the whole (block_e, block_s, block_c) split), then applies the
+eq.-17 s* rule and backtracks in plain jnp from the bit-packed decision
+words.  The backtrack is
 tiling-oblivious: the forward pass returns the full packed-decision plane
 (device memory, not VMEM), and the walk reads ONE 1-element slice per
 edge, so the same scan serves every tiling.
@@ -121,10 +124,12 @@ def _check_u_max(upsilon, u_max: int) -> None:
 
 @functools.partial(jax.jit,
                    static_argnames=("s_cap", "u_max", "off_max", "full_state",
-                                    "interpret", "block_c", "block_s"))
+                                    "interpret", "block_c", "block_s",
+                                    "block_e"))
 def _solve(upsilon, sigma2, feasible, offsets, s_limit,
            *, s_cap: int, u_max: int, off_max: int, full_state: int,
-           interpret: bool, block_c: int | None, block_s: int | None):
+           interpret: bool, block_c: int | None, block_s: int | None,
+           block_e: int | None):
     E = upsilon.shape[0]
     S = s_cap + 1
     v0 = jnp.full((S, feasible.shape[1]), NEG, jnp.float32).at[0, :].set(0.0)
@@ -132,7 +137,7 @@ def _solve(upsilon, sigma2, feasible, offsets, s_limit,
     V, decisions = dp_forward_pallas(
         upsilon, sigma2, feasible, offsets, v0,
         n_edges=E, u_max=u_max, off_max=off_max, interpret=interpret,
-        block_c=block_c, block_s=block_s)
+        block_c=block_c, block_s=block_s, block_e=block_e)
 
     v_row = V[:, full_state]
     s_vals = jnp.arange(S, dtype=jnp.int32)
@@ -169,18 +174,38 @@ def solve_budgeted_dp_pallas(upsilon, sigma2, tables: DPTables, s_cap: int,
                              s_limit, u_max: int | None = None,
                              allowed=None, interpret: bool | None = None,
                              block_c: "int | str | None" = "auto",
-                             block_s: int | None = None):
-    """Same contract as core.dp.solve_budgeted_dp (+ kernel knobs).
+                             block_s: int | None = None,
+                             block_e: int | None = None):
+    """Same contract as :func:`repro.core.dp.solve_budgeted_dp`, executed on
+    the Pallas kernel (+ kernel knobs).
 
-    ``interpret=None`` auto-resolves (compiled on TPU, interpreter
-    elsewhere); ``u_max=None`` uses the always-safe s_cap+1 shift padding —
-    callers that know the schedule bound (``stats.u_max_for_horizon``)
-    should pass it to shrink the scratch; ``block_c="auto"`` picks the
-    whole tiling — (block_s, block_c) — from the VMEM budget via
-    ``choose_tiling``: whole-plane when it fits, C-blocked for large
-    capacity spaces, and the 2-D (S-tile × C-tile) grid for long horizons.
-    Explicit ints force a tiling (``block_c=None`` forces whole-plane;
-    ``block_s`` tiles the budget axis and requires a concrete block_c).
+    Args:
+      upsilon, sigma2: (E,) int32 scaled statistics Υ̂(t), Σ̂²(t).
+      tables: :class:`repro.core.dp.DPTables` from ``build_tables``.
+      s_cap: static bound on s (value-row height − 1).
+      s_limit: dynamic ξ(t)·m budget mask (s values beyond it are ignored
+        by the eq.-17 selection).
+      u_max: static bound on max Υ̂ used to size the kernel's shift
+        scratch.  ``None`` uses the always-safe ``s_cap + 1`` padding;
+        callers that know the schedule bound
+        (``stats.u_max_for_horizon``) should pass it — the scratch shrinks
+        m-fold.  An undersized concrete bound raises instead of clamping.
+      allowed: optional (E,) bool eligibility mask (arrival ∧ aliveness).
+      interpret: ``None`` auto-resolves (compiled on TPU, Pallas
+        interpreter elsewhere); an explicit bool forces the mode.
+      block_c, block_s, block_e: the plane tiling.  ``block_c="auto"``
+        (default) picks all three from the VMEM budget via
+        ``choose_tiling``: whole-plane when it fits, C-blocked for large
+        capacity spaces, the 2-D (S-tile × C-tile) grid for long
+        horizons — and on every blocked pipeline the largest edge-fused
+        chunk ``block_e`` that fits, so tiles stay VMEM-resident across
+        ``block_e`` consecutive edges instead of re-streaming per edge.
+        Explicit ints force a tiling (``block_c=None`` forces whole-plane;
+        ``block_s``/``block_e`` require a concrete ``block_c``).
+
+    Returns:
+      ``(x, info)`` — the (E,) int32 dispatch vector and ``{"s_star",
+      "value_row"}``, bit-exact vs the reference backend for every tiling.
     """
     _check_value_bound(sigma2, tables)
     feas, offs = prepare_tables(tables)
@@ -192,18 +217,20 @@ def solve_budgeted_dp_pallas(upsilon, sigma2, tables: DPTables, s_cap: int,
     E = offs.shape[0]
     off_max = int(offs.max()) if E else 0
     if block_c == "auto":
-        if block_s is not None:
+        if block_s is not None or block_e is not None:
+            forced = "block_s" if block_s is not None else "block_e"
             raise ValueError(
-                'block_s was forced but block_c is "auto": the auto tiling '
-                "would overwrite it — pass a concrete block_c (e.g. the "
-                "number of capacity states for a single full-width tile)")
-        block_s, block_c = choose_tiling(s_cap + 1, tables.n_states, E,
-                                         int(u_max), off_max)
+                f'{forced} was forced but block_c is "auto": the auto '
+                "tiling would overwrite it — pass a concrete block_c "
+                "(e.g. the number of capacity states for a single "
+                "full-width tile)")
+        block_e, block_s, block_c = choose_tiling(
+            s_cap + 1, tables.n_states, E, int(u_max), off_max)
     x, s_star, v_row = _solve(
         jnp.asarray(upsilon, jnp.int32), jnp.asarray(sigma2, jnp.int32),
         feas, jnp.asarray(offs), jnp.asarray(s_limit, jnp.int32),
         s_cap=s_cap, u_max=int(u_max), off_max=off_max,
         full_state=tables.full_state,
         interpret=resolve_interpret(interpret), block_c=block_c,
-        block_s=block_s)
+        block_s=block_s, block_e=block_e)
     return x, {"s_star": s_star, "value_row": v_row}

@@ -1,0 +1,71 @@
+"""Executable documentation: every fenced ```python snippet in README.md
+and docs/*.md runs as a test, so example code can never rot silently.
+
+Rules (kept deliberately simple so docs stay honest):
+  * snippets must be SELF-CONTAINED — they build their own instances and
+    import what they use, exactly as a reader would paste them;
+  * snippets run with cwd set to a temp dir, so examples may write
+    relative paths (``results/my_sweep.csv``) without dirtying the repo;
+  * a ``<!-- doc-snippet: compile-only -->`` comment right before a fence
+    downgrades it to a syntax check (for templates with ``...`` bodies
+    that must not execute, e.g. the add-a-regime skeleton — executing it
+    would register a scenario that cannot simulate and leak it into the
+    process-wide registry other tests iterate);
+  * snippets are sized for CI (small instances, short horizons) — the
+    docs say so where it matters.
+
+The CI lint job runs exactly this file (see .github/workflows/ci.yml), and
+it is part of tier-1.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import re
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = sorted(
+    [REPO / "README.md"] + list((REPO / "docs").glob("*.md")),
+    key=lambda p: p.name)
+
+COMPILE_ONLY = "compile-only"
+_FENCE = re.compile(
+    r"(?P<mark><!-- doc-snippet: (?P<mode>[a-z-]+) -->\s*\n)?"
+    r"^```python[ \t]*\n(?P<body>.*?)^```[ \t]*$",
+    re.DOTALL | re.MULTILINE)
+
+
+def extract_snippets(path: pathlib.Path):
+    """(relative file name, index, mode, source) for every python fence."""
+    out = []
+    for i, m in enumerate(_FENCE.finditer(path.read_text())):
+        mode = m.group("mode") or "exec"
+        out.append((path.name, i, mode, m.group("body")))
+    return out
+
+
+SNIPPETS = [s for f in DOC_FILES for s in extract_snippets(f)]
+
+
+def test_docs_actually_contain_snippets():
+    """The extractor must keep finding the documented examples — an empty
+    sweep would turn this whole harness into a silent no-op."""
+    files = {name for name, *_ in SNIPPETS}
+    assert {"README.md", "solvers.md", "scenarios.md", "api.md"} <= files
+    assert len(SNIPPETS) >= 5
+    assert any(mode == COMPILE_ONLY for _, _, mode, _ in SNIPPETS)
+
+
+@pytest.mark.parametrize(
+    "name,idx,mode,src",
+    SNIPPETS, ids=[f"{n}:{i}" for n, i, _, _ in SNIPPETS])
+def test_doc_snippet(name, idx, mode, src, tmp_path, monkeypatch):
+    code = compile(src, f"{name}:snippet{idx}", "exec")
+    if mode == COMPILE_ONLY:
+        return                      # template: syntax-checked, not run
+    assert mode == "exec", f"unknown doc-snippet mode {mode!r}"
+    monkeypatch.chdir(tmp_path)     # relative writes land in the temp dir
+    exec(code, {"__name__": f"doc_snippet_{name}_{idx}"})
+    assert os.getcwd() == str(tmp_path)

@@ -10,8 +10,9 @@ from repro.kernels.ssd.ops import ssd_op
 from repro.kernels.ssd.ref import ssd_ref
 from repro.core.dp import build_tables, solve_budgeted_dp
 from repro.kernels.budgeted_dp.kernel import (
-    NEG, VMEM_BUDGET_BYTES, c_blocked_tile_vmem_bytes, choose_tiling,
-    dp_forward_pallas, tiled_vmem_bytes, unblocked_vmem_bytes)
+    MAX_BLOCK_E, NEG, VMEM_BUDGET_BYTES, c_blocked_tile_vmem_bytes,
+    choose_tiling, dp_forward_pallas, fused_tile_vmem_bytes,
+    modeled_hbm_bytes, tiled_vmem_bytes, unblocked_vmem_bytes)
 from repro.kernels.budgeted_dp.ops import prepare_tables, solve_budgeted_dp_pallas
 from repro.kernels.budgeted_dp.ref import dp_forward_ref
 
@@ -289,26 +290,202 @@ def test_budgeted_dp_s_tiled_halo_contract_errors():
 
 def test_choose_tiling_decision_table():
     """The tiling chooser: whole-plane when it fits, full-height C blocks
-    when they fit, 2-D tiles for long horizons — every returned pair
-    respects the halo floors and the VMEM budget."""
-    # paper-default sizes: trivially VMEM-resident
-    assert choose_tiling(110, 27, 40, 9, 13) == (None, None)
-    # large C, short S: full-height C-blocking suffices
-    bs, bc = choose_tiling(64, 1 << 16, 16, 8, 100)
+    when they fit, 2-D tiles for long horizons — every returned tiling
+    respects the halo floors and the VMEM budget, and every blocked tiling
+    carries the largest edge-fused chunk that fits."""
+    # paper-default sizes: trivially VMEM-resident (nothing to fuse — the
+    # whole-plane kernel already walks edges inside one pallas_call)
+    assert choose_tiling(110, 27, 40, 9, 13) == (None, None, None)
+    # large C, short S: full-height C-blocking suffices — and because the
+    # single-S-row grid keeps no rowh history, the whole edge set fuses
+    # even at this plane width
+    be, bs, bc = choose_tiling(64, 1 << 16, 16, 8, 100)
     assert bs is None and bc is not None
     assert bc >= 100 and c_blocked_tile_vmem_bytes(64, bc, 8) <= \
         VMEM_BUDGET_BYTES
+    assert be == min(16, MAX_BLOCK_E)
+    assert fused_tile_vmem_bytes(be, 64, bc, 8, 100, 64, 1 << 16) <= \
+        VMEM_BUDGET_BYTES
     # long S with large C: the whole plane and every full-height block
-    # are impossible — the 2-D grid is chosen
+    # are impossible — the 2-D grid is chosen, fused over every edge
     S, C, E, u_max, off_max = 4096, 512, 16, 4, 73
     assert unblocked_vmem_bytes(S, C, E, u_max, off_max) > VMEM_BUDGET_BYTES
-    bs, bc = choose_tiling(S, C, E, u_max, off_max)
+    be, bs, bc = choose_tiling(S, C, E, u_max, off_max)
     assert bs is not None and bs >= u_max and bc >= off_max
     assert tiled_vmem_bytes(bs, bc, u_max) <= VMEM_BUDGET_BYTES
+    assert be == min(E, MAX_BLOCK_E)      # small histories: whole E fuses
+    assert fused_tile_vmem_bytes(be, bs, bc, u_max, off_max, S, C) <= \
+        VMEM_BUDGET_BYTES
     # a tighter budget still yields a legal (if smaller) pair
-    bs2, bc2 = choose_tiling(S, C, E, u_max, off_max, budget=2 ** 20)
+    be2, bs2, bc2 = choose_tiling(S, C, E, u_max, off_max, budget=2 ** 20)
     assert bs2 >= u_max and bc2 >= off_max
     assert bs2 * bc2 <= bs * bc
+    assert be2 is None or be2 <= be
+
+
+def test_fused_hbm_model_cuts_traffic_blockwise():
+    """The modeled HBM traffic of the fused pipeline drops ~block_e-fold vs
+    the per-edge scan on the same plane tiling — the quantity dp_bench
+    records as ``hbm_bytes_streamed`` and the point of the fusion."""
+    S, C, E, u_max, off_max = 4096, 512, 16, 4, 73
+    be, bs, bc = choose_tiling(S, C, E, u_max, off_max)
+    scan = modeled_hbm_bytes(S, C, E, u_max, off_max, None, bs, bc)
+    fused = modeled_hbm_bytes(S, C, E, u_max, off_max, be, bs, bc)
+    assert fused * 4 <= scan              # the PR-5 acceptance bound
+    # whole-plane streams everything exactly once and is the floor
+    whole = modeled_hbm_bytes(S, C, E, u_max, off_max, None, None, None)
+    assert whole < fused < scan
+
+
+@pytest.mark.parametrize("block_e", [1, 3, 14, 32])
+@pytest.mark.parametrize("tile", ["tight", "padded", "full_c", "single_s"])
+def test_budgeted_dp_fused_grid_matches_ref(tile, block_e):
+    """The edge-fused pipeline — chunks of block_e consecutive edges per
+    pallas_call, tiles resident across the chunk, halos refreshed from the
+    persistent history scratches — is bit-exact vs the oracle on values AND
+    packed decision words, across every tile geometry of the unfused sweep
+    and block_e ∈ {1 (scan-equivalent), 3 (does not divide E=14 — ragged
+    inert-padded last chunk), 14 (one single chunk), 32 (the in-word
+    packing cap, > E)}."""
+    A, c, ups, sig = _tiling_problem()
+    tables = build_tables(A, c)
+    s_cap = int(ups.sum())
+    S, C = s_cap + 1, tables.n_states
+    feas, offs = prepare_tables(tables)
+    feas, offs = jnp.asarray(feas), jnp.asarray(offs)
+    off_max = int(offs.max())
+    u_max = int(ups.max() + 1)
+    block_s, block_c = {
+        "tight": (u_max, off_max),
+        "padded": (u_max + 2, off_max + 3),
+        "full_c": (u_max + 1, C),
+        "single_s": (None, off_max),
+    }[tile]
+    v0 = jnp.full((S, C), NEG, jnp.float32).at[0, :].set(0.0)
+    V_f, dec_f = dp_forward_pallas(
+        jnp.asarray(ups), jnp.asarray(sig), feas, offs, v0, n_edges=len(ups),
+        u_max=u_max, off_max=off_max, interpret=True,
+        block_c=block_c, block_s=block_s, block_e=block_e)
+    V_r, dec_r = dp_forward_ref(jnp.asarray(ups), jnp.asarray(sig), feas,
+                                offs, v0)
+    np.testing.assert_array_equal(np.asarray(V_f), np.asarray(V_r))
+    np.testing.assert_array_equal(np.asarray(dec_f), np.asarray(dec_r))
+
+
+@pytest.mark.parametrize("E", [33, 40])
+def test_budgeted_dp_fused_chunks_straddle_word_boundary(E):
+    """block_e=5 never divides 32, so with E > 32 some chunk's edges span
+    BOTH int32 decision words — the per-chunk word masks must route each
+    bit into the right packed word (including bit 31 → the sign bit)."""
+    rng = np.random.default_rng(29)
+    K = 2
+    A = rng.integers(1, 3, (K, E))
+    c = rng.integers(1, 3, K)
+    A = np.minimum(A, c[:, None])
+    ups = rng.integers(0, 4, E).astype(np.int32)
+    sig = rng.integers(1, 3000, E).astype(np.int32)
+    tables = build_tables(A, c)
+    s_cap = int(ups.sum())
+    feas, offs = prepare_tables(tables)
+    feas, offs = jnp.asarray(feas), jnp.asarray(offs)
+    off_max = int(offs.max())
+    u_max = int(ups.max() + 1)
+    v0 = jnp.full((s_cap + 1, tables.n_states), NEG,
+                  jnp.float32).at[0, :].set(0.0)
+    V_f, dec_f = dp_forward_pallas(
+        jnp.asarray(ups), jnp.asarray(sig), feas, offs, v0, n_edges=E,
+        u_max=u_max, off_max=off_max, interpret=True,
+        block_c=off_max + 1, block_s=u_max + 2, block_e=5)
+    V_r, dec_r = dp_forward_ref(jnp.asarray(ups), jnp.asarray(sig), feas,
+                                offs, v0)
+    assert dec_f.shape[0] == (E + 31) // 32 >= 2
+    np.testing.assert_array_equal(np.asarray(V_f), np.asarray(V_r))
+    np.testing.assert_array_equal(np.asarray(dec_f), np.asarray(dec_r))
+
+
+def test_budgeted_dp_fused_whole_chunk_masked():
+    """An ``allowed`` mask can zero EVERY edge of a fused chunk: the chunk
+    must be a no-op (the inert-edge argument the ragged pad also relies
+    on) and the solver must still match the reference bit for bit."""
+    A, c, ups, sig = _tiling_problem(seed=31, E=12)
+    allowed = np.ones(12, bool)
+    allowed[4:8] = False                 # chunk [4, 8) fully masked
+    tables = build_tables(A, c)
+    s_cap = int(ups.sum())
+    u_max = int(ups.max() + 1)
+    x1, i1 = solve_budgeted_dp(jnp.asarray(ups), jnp.asarray(sig), tables,
+                               s_cap, jnp.int32(s_cap),
+                               allowed=jnp.asarray(allowed))
+    x2, i2 = solve_budgeted_dp_pallas(
+        ups, sig, tables, s_cap, s_cap, u_max=u_max, allowed=allowed,
+        interpret=True, block_c=int(tables.offsets.max()),
+        block_s=u_max, block_e=4)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+    assert int(i1["s_star"]) == int(i2["s_star"])
+    assert not np.asarray(x2)[4:8].any()
+
+
+def test_budgeted_dp_fused_u_max_halo_tracks_in_chunk_updates():
+    """The up-neighbor halo must be the neighbor's value at each
+    INTERMEDIATE edge of the chunk, not its final value: with every Υ̂ > 0
+    and block_s = u_max every edge's s-shift crosses the tile boundary
+    into rows the upstream tile updated EARLIER IN THE SAME CHUNK, so a
+    stale (initial or final) halo would corrupt values.  Exact-bound
+    u_max (no +1 margin) makes the deepest shift read the first history
+    row."""
+    rng = np.random.default_rng(37)
+    E, K = 10, 2
+    A = rng.integers(1, 3, (K, E))
+    c = rng.integers(2, 4, K)
+    A = np.minimum(A, c[:, None])
+    ups = rng.integers(1, 4, E).astype(np.int32)     # strictly positive
+    sig = rng.integers(1, 3000, E).astype(np.int32)
+    tables = build_tables(A, c)
+    s_cap = int(ups.sum())
+    feas, offs = prepare_tables(tables)
+    feas, offs = jnp.asarray(feas), jnp.asarray(offs)
+    u_max = int(ups.max())               # exact bound, no margin
+    off_max = int(offs.max())
+    v0 = jnp.full((s_cap + 1, tables.n_states), NEG,
+                  jnp.float32).at[0, :].set(0.0)
+    V_f, dec_f = dp_forward_pallas(
+        jnp.asarray(ups), jnp.asarray(sig), feas, offs, v0, n_edges=E,
+        u_max=u_max, off_max=off_max, interpret=True,
+        block_c=off_max, block_s=u_max, block_e=E)   # one chunk, all edges
+    V_r, dec_r = dp_forward_ref(jnp.asarray(ups), jnp.asarray(sig), feas,
+                                offs, v0)
+    np.testing.assert_array_equal(np.asarray(V_f), np.asarray(V_r))
+    np.testing.assert_array_equal(np.asarray(dec_f), np.asarray(dec_r))
+
+
+def test_budgeted_dp_fused_contract_errors():
+    """block_e outside [1, 32] and block_e without a concrete block_c are
+    usage errors — never a silent wrong answer."""
+    A, c, ups, sig = _tiling_problem(seed=23)
+    tables = build_tables(A, c)
+    s_cap = int(ups.sum())
+    feas, offs = prepare_tables(tables)
+    feas, offs = jnp.asarray(feas), jnp.asarray(offs)
+    off_max = int(offs.max())
+    u_max = int(ups.max() + 1)
+    v0 = jnp.full((s_cap + 1, tables.n_states), NEG,
+                  jnp.float32).at[0, :].set(0.0)
+    kwargs = dict(n_edges=len(ups), u_max=u_max, off_max=off_max,
+                  interpret=True)
+    with pytest.raises(ValueError, match="block_e"):
+        dp_forward_pallas(jnp.asarray(ups), jnp.asarray(sig), feas, offs,
+                          v0, block_c=off_max, block_e=MAX_BLOCK_E + 1,
+                          **kwargs)
+    with pytest.raises(ValueError, match="block_e"):
+        dp_forward_pallas(jnp.asarray(ups), jnp.asarray(sig), feas, offs,
+                          v0, block_c=off_max, block_e=0, **kwargs)
+    with pytest.raises(ValueError, match="block_e"):
+        dp_forward_pallas(jnp.asarray(ups), jnp.asarray(sig), feas, offs,
+                          v0, block_c=None, block_e=4, **kwargs)
+    # a forced block_e must never be silently overwritten by auto tiling
+    with pytest.raises(ValueError, match="auto"):
+        solve_budgeted_dp_pallas(ups, sig, tables, s_cap, s_cap,
+                                 u_max=u_max, interpret=True, block_e=4)
 
 
 def test_budgeted_dp_value_rows_share_feasibility_contract():

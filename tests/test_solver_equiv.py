@@ -253,8 +253,9 @@ if HAS_HYPOTHESIS:
         """The 2-D (S-tile × C-tile) pipeline under RANDOM legal tilings —
         tight (block = halo floor), padded (dividing neither plane
         extent), and everything between, with u_max at or above the exact
-        Υ̂ maximum and optional allowed masks — yields bit-identical
-        x / s* / value_row vs the reference backend."""
+        Υ̂ maximum, optional allowed masks, AND a random edge-fusion chunk
+        block_e ∈ {None (per-edge scan), 1 … 32} (dividing E or not) —
+        yields bit-identical x / s* / value_row vs the reference backend."""
         rng = np.random.default_rng(seed)
         E = int(rng.choice([6, 10]))
         K = int(rng.integers(1, 3))
@@ -271,12 +272,15 @@ if HAS_HYPOTHESIS:
         u_max = max(u_max, 1)
         block_s = int(rng.integers(max(u_max, 2), S + 3))
         block_c = int(rng.integers(max(off_max, 1), C + 3))
+        block_e = (None if rng.integers(0, 4) == 0
+                   else int(rng.integers(1, 33)))
         s_limit = int(rng.integers(0, s_cap + 1))
         got_ref = _solve_with(REF, ups, sig, tables, s_cap, s_limit, allowed)
         x, info = solve_budgeted_dp_pallas(
             ups, sig, tables, s_cap, s_limit, u_max=u_max,
             allowed=None if allowed is None else jnp.asarray(allowed),
-            interpret=True, block_c=block_c, block_s=block_s)
+            interpret=True, block_c=block_c, block_s=block_s,
+            block_e=block_e)
         np.testing.assert_array_equal(got_ref[0], np.asarray(x))
         assert got_ref[1] == int(info["s_star"])
         row_ref = got_ref[2].astype(np.int64)
