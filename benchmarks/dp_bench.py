@@ -42,6 +42,23 @@ auto tiling since PR 5) and a forced per-edge-scan leg
 (``pallas_interpret_scan``, same plane tiling with ``block_e=None``), and
 record ``hbm_reduction_vs_scan`` — the modeled traffic ratio the fusion
 buys (the PR-5 acceptance bound is ≥ 4× on E16_C512_S4096).
+
+Configs with a ``batch`` tuple additionally time the FLEET-BATCHED legs
+at each batch size B (``--smoke`` keeps only B=8): B heterogeneous solves
+(per-instance Υ̂/Σ̂²/allowed/s_limit) against
+``solve_budgeted_dp_batched`` — ONE launch, tables shared — next to two
+single-instance baselines on identical inputs: ``*_vmapped_B{B}``
+(conventional ``jax.vmap`` of the per-instance solve: still one launch,
+but the feasibility plane replicates to (B, E, C)) and
+``*_launch_loop_B{B}`` (``lax.map``: one launch per instance,
+sequential).  Every leg is bit-exact-gated against a per-instance
+reference loop before it is timed, and the batched record carries
+``solves_per_sec``, ``speedup_vs_vmapped`` / ``speedup_vs_launch_loop``
+(wall-clock — NOTE that on interpret-CPU all three lower to the same
+vectorized XLA loops, so wall-clock parity is expected there; the
+launch-grid advantage is the HBM model and launch count, measured on
+real TPUs), and ``hbm_reduction_vs_vmapped`` — the modeled shared-vs-
+replicated traffic ratio (``kernel.batched_modeled_hbm_bytes``).
 """
 from __future__ import annotations
 
@@ -60,9 +77,10 @@ import numpy as np
 from repro.core.dp import build_tables, solve_budgeted_dp
 from repro.core.solvers import get_solver
 from repro.kernels.budgeted_dp.kernel import (
-    NEG, VMEM_BUDGET_BYTES, choose_tiling, dp_forward_pallas,
-    modeled_hbm_bytes, unblocked_vmem_bytes)
-from repro.kernels.budgeted_dp.ops import (prepare_tables,
+    NEG, VMEM_BUDGET_BYTES, batched_modeled_hbm_bytes, choose_tiling,
+    dp_forward_pallas, modeled_hbm_bytes, unblocked_vmem_bytes)
+from repro.kernels.budgeted_dp.ops import (_solve, prepare_tables,
+                                           solve_budgeted_dp_batched,
                                            solve_budgeted_dp_pallas)
 
 # Named configs: explicit capacity vector c (C = Π(c_k+1)) and Υ̂ range.
@@ -77,7 +95,8 @@ CONFIGS = [
     {"name": "E24_C6", "E": 24, "c_rand": (2, 3), "u_hi": 6},
     {"name": "E40_K3", "E": 40, "c_rand": (3, 2), "u_hi": 6},
     {"name": "E64_K3", "E": 64, "c_rand": (3, 3), "u_hi": 8},
-    {"name": "E16_C512", "E": 16, "c": (7, 7, 7), "u_hi": 3},
+    {"name": "E16_C512", "E": 16, "c": (7, 7, 7), "u_hi": 3,
+     "batch": (8, 64)},
     {"name": "E16_C1024", "E": 16, "c": (3, 15, 15), "u_hi": 3},
     {"name": "E16_C4096", "E": 16, "c": (7, 7, 7, 7), "u_hi": 2,
      "block": (8, None, 1024)},  # off_max ≈ 585 (stride of the 4th resource
@@ -209,6 +228,86 @@ def _verify_blocked_bitexact(ups, sig, tables, s_cap, u_max: int,
                                   row_t[row_t >= 0].astype(np.int64))
 
 
+def _bench_batched(point: dict, cfg: dict, tables, s_cap: int, u_max: int,
+                   runs: int, platform: str, B: int) -> None:
+    """The fleet-batched legs for one batch size B: batched megakernel vs
+    conventionally-vmapped vs launch-loop baselines, all on the SAME
+    heterogeneous fleet, all bit-exact-gated before timing."""
+    rng = np.random.default_rng(100 + B)
+    E = cfg["E"]
+    S, C = s_cap + 1, tables.n_states
+    ups = rng.integers(0, cfg["u_hi"] + 1, (B, E)).astype(np.int32)
+    sig = rng.integers(1, 5000, (B, E)).astype(np.int32)
+    alw = rng.integers(0, 2, (B, E)).astype(np.int32)
+    slim = rng.integers(0, s_cap + 1, B).astype(np.int32)
+    interpret = platform != "tpu"
+    tag = "pallas_interpret" if interpret else "pallas"
+    feas, offs = prepare_tables(tables)
+    off_max = int(offs.max())
+    bb, be, bs, bc = choose_tiling(S, C, E, u_max, off_max, batch=B)
+
+    def batched_call(u, s, l, a):
+        x, info = solve_budgeted_dp_batched(u, s, tables, s_cap, l,
+                                            u_max=u_max, allowed=a,
+                                            interpret=interpret)
+        return x, info["s_star"], info["value_row"]
+
+    fn_batched = jax.jit(batched_call)
+    # conventional vmap of the per-instance solve: ONE launch too, but the
+    # eligibility fold materializes B copies of the feasibility plane —
+    # the replicated-operand lowering the custom batching rule replaces
+    single_kw = dict(s_cap=s_cap, u_max=u_max, off_max=off_max,
+                     full_state=tables.full_state, interpret=interpret,
+                     block_c=None, block_s=None, block_e=None)
+    feas_j, offs_j = jnp.asarray(feas), jnp.asarray(offs)
+
+    def one(u, s, l, a):
+        return _solve(u, s, feas_j * a.astype(jnp.float32)[:, None],
+                      offs_j, l, **single_kw)
+
+    fn_vmapped = jax.jit(jax.vmap(one))
+    fn_loop = jax.jit(lambda U, Sg, L, Al: jax.lax.map(
+        lambda t: one(*t), (U, Sg, L, Al)))
+
+    args = (jnp.asarray(ups), jnp.asarray(sig), jnp.asarray(slim),
+            jnp.asarray(alw))
+    # bit-exact gate: every leg vs a per-instance reference loop
+    got = {"batched": fn_batched(*args), "vmapped": fn_vmapped(*args),
+           "launch_loop": fn_loop(*args)}
+    for b in range(B):
+        x_ref, info_ref = solve_budgeted_dp(
+            jnp.asarray(ups[b]), jnp.asarray(sig[b]), tables, s_cap,
+            int(slim[b]), allowed=jnp.asarray(alw[b]))
+        for leg, (x, s_star, _) in got.items():
+            np.testing.assert_array_equal(
+                np.asarray(x[b]), np.asarray(x_ref),
+                err_msg=f"{leg} B={B} instance {b}")
+            assert int(s_star[b]) == int(info_ref["s_star"]), (leg, B, b)
+
+    one_hbm = modeled_hbm_bytes(S, C, E, u_max, off_max, None, None, None)
+    batched_hbm = batched_modeled_hbm_bytes(S, C, E, u_max, off_max, B,
+                                            be, bs, bc)
+    recs = {}
+    for leg, fn in (("batched", fn_batched), ("vmapped", fn_vmapped),
+                    ("launch_loop", fn_loop)):
+        rec = _timed(lambda fn=fn: jax.block_until_ready(fn(*args)), runs)
+        rec["batch"] = B
+        rec["solves_per_sec"] = B / (rec["mean_ms"] / 1e3)
+        rec["hbm_bytes_streamed"] = (batched_hbm if leg == "batched"
+                                     else B * one_hbm)
+        recs[leg] = rec
+    recs["batched"]["bitexact_vs_reference"] = True
+    recs["batched"]["tiling"] = {"block_b": bb, "block_e": be,
+                                 "block_s": bs, "block_c": bc}
+    recs["batched"]["speedup_vs_vmapped"] = (
+        recs["vmapped"]["mean_ms"] / recs["batched"]["mean_ms"])
+    recs["batched"]["speedup_vs_launch_loop"] = (
+        recs["launch_loop"]["mean_ms"] / recs["batched"]["mean_ms"])
+    recs["batched"]["hbm_reduction_vs_vmapped"] = B * one_hbm / batched_hbm
+    for leg, rec in recs.items():
+        point["backends"][f"{tag}_{leg}_B{B}"] = rec
+
+
 def bench(configs, runs: int) -> dict:
     platform = jax.default_backend()
     backends = ["reference", "pallas_interpret", "pallas"]
@@ -318,6 +417,9 @@ def bench(configs, runs: int) -> dict:
                 "block_e": fbe,
                 "hbm_bytes_streamed": _hbm_model(tables, s_cap, cfg["E"],
                                                  u_max, fbe, fbs, fbc)}
+        for B in cfg.get("batch", ()):
+            _bench_batched(point, cfg, tables, s_cap, u_max, runs,
+                           platform, B)
         records.append(point)
         print(f"{cfg['name']}: E={cfg['E']} C={C} "
               f"S={S}: " + "  ".join(
@@ -407,6 +509,9 @@ def main() -> None:
     args = ap.parse_args()
     configs = ([c for c in CONFIGS if c["name"] in SMOKE_NAMES]
                if args.smoke else CONFIGS)
+    if args.smoke:       # CI sizes: keep only the B=8 fleet leg
+        configs = [dict(c, batch=tuple(b for b in c["batch"] if b == 8))
+                   if "batch" in c else c for c in configs]
     # read the baseline up front: --out may legitimately overwrite it
     base = None
     if args.baseline:

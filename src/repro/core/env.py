@@ -284,7 +284,13 @@ def simulate_batch(instance: Instance, policy: Policy, T: int, seeds,
     vectors, oracle values, and regret match bit-for-bit (identical PRNG
     streams per key).  The realized-welfare slot sums Σ_e x_e·z̃_e may differ
     in the last float32 ulp only, because XLA reorders the E-way reduction
-    when it vectorizes over the batch axis."""
+    when it vectorizes over the batch axis.
+
+    With a batch-aware DP backend (``Solver.accepts_batch`` — the Pallas
+    backends), the vmap over seeds triggers the solve core's custom
+    batching rule: each slot issues ONE fleet-batched kernel launch for
+    the whole seed batch, with the DP-table operands shared across seeds
+    rather than replicated per instance."""
     tables, scenario, params = _scenario_args(instance, tables, scenario)
     keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
     sw, sw_star, regret, nd = _run_batch(policy, T, tables, scenario,

@@ -28,8 +28,12 @@ Registry:
                      resolved inside the backend from the VMEM budget
                      (``kernels.budgeted_dp.kernel.choose_tiling``) — it is
                      an execution detail invisible at this contract, and
-                     never changes results.  See ``docs/kernel_pipeline.md``
-                     for the kernel internals.
+                     never changes results.  Batch-aware
+                     (``accepts_batch``): under ``jax.vmap`` the solve
+                     core's custom batching rule runs every mapped
+                     instance in ONE fleet-batched kernel launch with the
+                     DP-table operands shared across the batch.  See
+                     ``docs/kernel_pipeline.md`` for the kernel internals.
   pallas_interpret — the same kernel forced through the interpreter on any
                      backend; what differential tests run on CPU CI.
   auto             — TPU → pallas (compiled), CPU/GPU → reference.
@@ -84,12 +88,20 @@ class Solver:
     name: str                    # concrete backend name
     interpret: bool | None       # kernel mode (None = auto); reference: None
     _fn: Callable = dataclasses.field(repr=False)
+    accepts_batch: bool = False  # vmap → ONE fleet-batched kernel launch
 
     def __call__(self, upsilon, sigma2, tables: DPTables, s_cap: int,
                  s_limit, allowed=None, u_max: int | None = None):
         """``u_max`` is an optional static bound on max Υ̂ (e.g. from
         ``stats.u_max_for_horizon``); the Pallas backends use it to shrink
-        the kernel's shift scratch, the reference backend ignores it."""
+        the kernel's shift scratch, the reference backend ignores it.
+
+        Backends with ``accepts_batch`` carry a custom batching rule on
+        the solve core: ``jax.vmap`` of this call dispatches all mapped
+        instances through ONE batched kernel launch with the DP-table
+        operands shared (never replicated per instance) — results stay
+        bit-exact with a per-instance loop.  Other backends vmap
+        conventionally (per-instance computation, replicated operands)."""
         return self._fn(upsilon, sigma2, tables, s_cap, s_limit, allowed,
                         u_max)
 
@@ -138,6 +150,7 @@ def get_solver(name: "str | Solver | None" = None,
         else:
             interpret = True if concrete == "pallas_interpret" else None
             solver = Solver(name=concrete, interpret=interpret,
-                            _fn=_make_pallas_solve(interpret))
+                            _fn=_make_pallas_solve(interpret),
+                            accepts_batch=True)
         _CACHE[concrete] = solver
     return solver

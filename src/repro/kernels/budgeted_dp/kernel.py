@@ -72,6 +72,29 @@ in-chunk bit positions distinct); the host scan ORs each chunk word into
 the packed (⌈E/32⌉, S, C) decision planes through static per-chunk word
 masks, which also handles chunks straddling a 32-bit word boundary.
 
+``dp_forward_pallas_batched`` runs a FLEET of B independent solves in one
+pallas_call.  The batch rides the grid: ``block_b`` instances advance
+together per grid step, the shared operands (feasibility plane, offsets,
+v0) are loaded through index maps that ignore the batch index — one copy
+in HBM, never replicated B-fold the way folding per-instance eligibility
+into the feasibility plane under ``jax.vmap`` replicates it — and the
+per-instance inputs (Υ̂, Σ̂², ``allowed``) stream as (block_b, E) SMEM
+rows.  Inside a step the edge loop is VECTORIZED across the block's
+instances: the per-instance budget shift V[max(s−Υ̂_e, 0)] becomes
+⌈log₂(u_max+1)⌉ static slice-concat stages selected per instance by the
+bits of Υ̂_e (clamped shifts compose exactly: T_b∘T_a = T_{a+b}), so the
+kernel stays gather-free with a batch-varying shift.  ``block_b = 1``
+degenerates to the single-instance schedule (one dynamic-start read, no
+log-shift stages) — bit-identical either way.  Ragged batches pad with
+inert instances (``allowed ≡ 0`` masks every edge to NEG, so the pads
+compute v0 and zero decisions).  When the per-instance plane outgrows
+VMEM the batch instead becomes the OUTERMOST grid dimension of the
+edge-fused pipeline (block_b pinned to 1): each instance re-initializes
+the halo-history scratches at its own (i=0, j=0) corner, so the fused
+kernel body is reused unchanged.  ``choose_tiling(..., batch=B)``
+resolves the whole (block_b, block_e, block_s, block_c) split, shrinking
+the batch axis BEFORE the plane axes.
+
 Arithmetic is f32 with integer values; exactness holds for values < 2²⁴
 (ops.py enforces the bound — see core/stats.py for why defaults are ≪ 2²⁴).
 
@@ -93,8 +116,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["NEG", "VMEM_BUDGET_BYTES", "MAX_BLOCK_E", "resolve_interpret",
            "packed_words", "unblocked_vmem_bytes", "c_blocked_tile_vmem_bytes",
-           "tiled_vmem_bytes", "fused_tile_vmem_bytes", "modeled_hbm_bytes",
-           "choose_tiling", "dp_forward_pallas"]
+           "tiled_vmem_bytes", "fused_tile_vmem_bytes", "batched_vmem_bytes",
+           "batched_fused_tile_vmem_bytes", "modeled_hbm_bytes",
+           "batched_modeled_hbm_bytes", "choose_tiling", "dp_forward_pallas",
+           "dp_forward_pallas_batched"]
 
 NEG = -float(2 ** 24)
 
@@ -173,6 +198,45 @@ def fused_tile_vmem_bytes(block_e: int, block_s: int, block_c: int,
                 + 4 * block_e)                           # SMEM scalars
 
 
+def batched_vmem_bytes(S: int, C: int, n_edges: int, u_max: int,
+                       off_max: int, block_b: int) -> int:
+    """VMEM footprint of one grid step of the whole-plane BATCHED kernel:
+    the per-instance value plane + packed decision words + shift scratch +
+    the three (E,) operand rows, all charged × ``block_b``, plus the
+    SHARED v0 plane, feasibility plane, and offset vector (loaded once per
+    step regardless of the batch).  ``block_b = 1`` keeps the
+    single-instance clamp-row scratch geometry (u_max extra rows); the
+    vectorized path (block_b > 1) shifts through log₂ stages instead and
+    drops them.  All 4-byte."""
+    W = packed_words(n_edges)
+    pad_rows = u_max if block_b == 1 else 0
+    per = (1 + W) * S * C + (pad_rows + S) * (off_max + C) + 3 * n_edges
+    return 4 * (block_b * per + S * C + n_edges * (C + 1))
+
+
+def batched_fused_tile_vmem_bytes(block_e: int, block_s: int, block_c: int,
+                                  u_max: int, off_max: int, S: int, C: int,
+                                  block_b: int) -> int:
+    """Per-grid-step VMEM of the BATCHED edge-fused pipeline: the shared
+    per-chunk feasibility block and offset/bit-position rows load once;
+    everything per-instance — the plane tile, the shift scratch, both
+    halo-history scratches, and the (1, block_e) Υ̂/Σ̂²/allowed rows —
+    charges × ``block_b``.  The batched driver pins ``block_b = 1`` on
+    this path (one instance per grid step — the per-instance halo
+    histories are what overflowed the budget in the first place), but the
+    model keeps the general form so the batched decision rule charges the
+    batch axis uniformly.  All 4-byte."""
+    Cp = -(-C // block_c) * block_c
+    rowh = 0 if block_s >= S else 2 * block_e * max(u_max, 1) * Cp
+    per = (3 * block_s * block_c
+           + (u_max + block_s) * (off_max + block_c)
+           + rowh
+           + block_e * block_s * max(off_max, 1)
+           + 3 * block_e)                        # Υ̂/Σ̂²/allowed SMEM rows
+    shared = block_e * block_c + 2 * block_e     # feas chunk + offs/bitpos
+    return 4 * (block_b * per + shared)
+
+
 def modeled_hbm_bytes(S: int, C: int, n_edges: int, u_max: int, off_max: int,
                       block_e, block_s, block_c) -> int:
     """Modeled HBM bytes streamed by one DP forward solve under a tiling.
@@ -209,6 +273,30 @@ def modeled_hbm_bytes(S: int, C: int, n_edges: int, u_max: int, off_max: int,
     return n_chunks * per_chunk
 
 
+def batched_modeled_hbm_bytes(S: int, C: int, n_edges: int, u_max: int,
+                              off_max: int, batch: int,
+                              block_e=None, block_s=None,
+                              block_c=None) -> int:
+    """Modeled HBM bytes streamed by ONE batched forward of ``batch``
+    solves: the shared operands stream once, the per-instance flows ×
+    ``batch``.  The vmapped-single-launch alternative replicates the
+    shared operands per instance (vmap folds per-instance eligibility
+    into ``batch`` copies of the feasibility plane), so its model is
+    simply ``batch · modeled_hbm_bytes(...)`` — the ratio of the two is
+    the ``hbm_reduction_vs_vmapped`` figure dp_bench records."""
+    per = modeled_hbm_bytes(S, C, n_edges, u_max, off_max,
+                            block_e, block_s, block_c)
+    if block_c is None:
+        shared = 4 * (S * C + n_edges * C)       # v0 + feasibility plane
+    else:
+        Cp = -(-C // block_c) * block_c
+        if block_e is None:
+            shared = 4 * n_edges * Cp            # feasibility tiles per edge
+        else:
+            shared = 4 * -(-n_edges // block_e) * block_e * Cp
+    return shared + batch * (per - shared)
+
+
 def _tile_candidates(extent: int, unit: int, floor: int) -> list:
     """Descending tile widths for one axis: the full extent plus every
     power-of-two multiple of ``unit`` below it, all ≥ ``floor`` (the halo
@@ -223,8 +311,19 @@ def _tile_candidates(extent: int, unit: int, floor: int) -> list:
 
 
 def choose_tiling(S: int, C: int, n_edges: int, u_max: int, off_max: int,
-                  budget: int = VMEM_BUDGET_BYTES):
+                  budget: int = VMEM_BUDGET_BYTES, batch: int | None = None):
     """Pick ``(block_e, block_s, block_c)`` for :func:`dp_forward_pallas`.
+
+    With ``batch=B`` the return value is instead the 4-tuple ``(block_b,
+    block_e, block_s, block_c)`` for :func:`dp_forward_pallas_batched`,
+    and the BATCH axis shrinks FIRST: the largest ``block_b`` ∈ {B} ∪
+    {powers of two below B} whose batched whole-plane footprint
+    (:func:`batched_vmem_bytes`) fits the budget keeps every instance's
+    full plane VMEM-resident — a smaller fleet per grid step is always
+    cheaper than giving up plane residency.  Only when even ``block_b =
+    1`` overflows does the per-instance plane tile (by the 3-tuple rule
+    below) with ``block_b`` pinned to 1 (the fused pipeline batches as
+    the outermost grid dimension, one instance per step).
 
     Returns ``(None, None, None)`` when the whole-plane kernel fits the
     VMEM budget (edges already run inside one pallas_call there — nothing
@@ -244,6 +343,14 @@ def choose_tiling(S: int, C: int, n_edges: int, u_max: int, off_max: int,
     floors allow; if even the smallest legal pair exceeds the budget it is
     returned anyway — no smaller tiling exists.
     """
+    if batch is not None:
+        if batch < 1:
+            raise ValueError(f"batch={batch} must be >= 1")
+        for bb in _tile_candidates(batch, 1, 1):
+            if batched_vmem_bytes(S, C, n_edges, u_max, off_max,
+                                  bb) <= budget:
+                return bb, None, None, None
+        return (1,) + choose_tiling(S, C, n_edges, u_max, off_max, budget)
     if unblocked_vmem_bytes(S, C, n_edges, u_max, off_max) <= budget:
         return None, None, None
     c_cands = _tile_candidates(C, 128, off_max)
@@ -315,6 +422,87 @@ def _dp_kernel(ups_ref, sig_ref, offs_ref, feas_ref, v0_ref,
         return 0
 
     jax.lax.fori_loop(0, n_edges, edge_step, 0)
+
+
+def _shift_rows_clamped(x, u, u_max: int):
+    """Per-instance clamped budget shift: y[b, s, c] = x[b, max(s − u[b], 0), c].
+
+    Decomposed into ⌈log₂(u_max + 1)⌉ STATIC slice-concat stages, stage k
+    applied only to instances with bit k set in u — legal because clamped
+    shifts compose exactly (T_b ∘ T_a = T_{a+b}: clamping at 0 is
+    idempotent under further down-shifts).  Keeps the batch-varying shift
+    gather-free and lane-contiguous on the VPU."""
+    bb, S, C = x.shape
+    shift = 1
+    while shift <= u_max:
+        if shift < S:
+            rolled = jnp.concatenate(
+                [jnp.broadcast_to(x[:, :1], (bb, shift, C)), x[:, :S - shift]],
+                axis=1)
+        else:
+            rolled = jnp.broadcast_to(x[:, :1], (bb, S, C))
+        x = jnp.where((u & shift).astype(bool)[:, None, None], rolled, x)
+        shift *= 2
+    return x
+
+
+def _dp_kernel_batched(ups_ref, sig_ref, alw_ref, offs_ref, feas_ref, v0_ref,
+                       vout_ref, dec_ref, vpad_ref, *, n_edges: int,
+                       u_max: int, off_max: int):
+    """Whole-plane DP forward over ``block_b`` instances per grid step.
+
+    Per-instance operands arrive as (block_b, E) SMEM rows; the
+    feasibility plane and v0 are the SHARED blocks (their index maps
+    ignore the batch index).  Per-instance eligibility multiplies into
+    the mask HERE (``live = feasible ∧ allowed``) instead of being folded
+    into per-instance feasibility copies on the host.  The edge loop runs
+    per 32-edge word with the decision word accumulated in registers and
+    written back once per word (static-index write).  ``block_b == 1``
+    reduces the budget shift to the single-instance schedule — one
+    dynamic-start read through u_max clamp rows, bit-identical to
+    :func:`_dp_kernel`; ``block_b > 1`` vectorizes it through
+    :func:`_shift_rows_clamped` on a clamp-row-free scratch."""
+    block_b, S, C = vout_ref.shape
+    W = dec_ref.shape[1]
+    vout_ref[:, :, :] = jnp.broadcast_to(v0_ref[:, :][None], (block_b, S, C))
+    if off_max:
+        # pad columns: read only by states with c < offset_e, all
+        # infeasible and masked to NEG below — inert either way
+        vpad_ref[:, :, :off_max] = jnp.full(
+            (block_b, vpad_ref.shape[1], off_max), NEG, jnp.float32)
+
+    for w in range(W - 1, -1, -1):               # edges E-1 … 0, word-major
+        e_lo = w * 32
+        e_hi = min(e_lo + 32, n_edges)
+
+        def edge_step(jj, word, e_hi=e_hi):
+            e = e_hi - 1 - jj
+            u = jnp.minimum(ups_ref[:, pl.ds(e, 1)][:, 0], u_max)
+            off = jnp.minimum(offs_ref[e], off_max)
+            sig = sig_ref[:, pl.ds(e, 1)].astype(jnp.float32)[:, :, None]
+            alw = alw_ref[:, pl.ds(e, 1)][:, :, None]
+            V = vout_ref[:, :, :]
+            if block_b == 1:
+                # single-instance schedule: scalar shift through clamp rows
+                vpad_ref[:, :u_max, off_max:] = jnp.broadcast_to(
+                    V[:, 0:1, :], (1, u_max, C))
+                vpad_ref[:, pl.ds(u_max, S), off_max:] = V
+                take = vpad_ref[:, pl.ds(u_max - u[0], S),
+                                pl.ds(off_max - off, C)]
+            else:
+                vpad_ref[:, :, off_max:] = V
+                shifted = vpad_ref[:, :, pl.ds(off_max - off, C)]
+                take = _shift_rows_clamped(shifted, u, u_max)
+            take = take + sig
+            live = (feas_ref[pl.ds(e, 1), :][None] > 0) & (alw > 0)
+            take = jnp.where(live, take, NEG)
+            dec = (take > V).astype(jnp.int32)
+            vout_ref[:, :, :] = jnp.maximum(V, take)
+            return word | (dec * jnp.left_shift(jnp.int32(1), e % 32))
+
+        word = jax.lax.fori_loop(0, e_hi - e_lo, edge_step,
+                                 jnp.zeros((block_b, S, C), jnp.int32))
+        dec_ref[:, w] = word
 
 
 def _edge_tile_kernel(u_ref, off_ref, sig_ref, feas_ref, vleft_ref, vcur_ref,
@@ -438,7 +626,7 @@ def _edge_call(V, feas_e, u1, off1, sig1, *, u_max: int, block_s,
 def _fused_chunk_kernel(ups_ref, offs_ref, sig_ref, bitpos_ref, feas_ref,
                         vin_ref, vout_ref, bits_ref, vpad_ref, rowh_ref,
                         lefth_ref, *, n_chunk: int, u_max: int, off_max: int,
-                        multi_row: bool):
+                        multi_row: bool, grid_base: int = 0, alw_ref=None):
     """``n_chunk`` consecutive edges on one (block_s, block_c) tile.
 
     The tile lives in the BODY region of ``vpad`` (rows [u_max:], columns
@@ -454,13 +642,22 @@ def _fused_chunk_kernel(ups_ref, offs_ref, sig_ref, bitpos_ref, feas_ref,
     the unfused kernels; C-tile 0's left halo is garbage by construction —
     every read landing there is a state c < offset_e, infeasible, masked
     to NEG.  Decision bits of the whole chunk OR into one int32 word plane
-    at bit ``bitpos[k]`` (global edge id mod 32)."""
+    at bit ``bitpos[k]`` (global edge id mod 32).
+
+    Batched reuse: the batched pipeline prepends the batch as grid axis 0
+    (``grid_base=1`` shifts the (i, j) grid ids right) and passes the
+    per-instance eligibility row as ``alw_ref`` — everything else is
+    byte-identical, because each instance re-initializes the body, bits,
+    and halo state at its own (i=0, j=0) corner: the body reloads from
+    ``vin`` every step, the clamp-row branch covers i=0 without reading
+    ``rowh``, and the j=0 ``lefth`` columns are only ever read by
+    infeasible (masked) states."""
     Bs = vin_ref.shape[0]
     Bc = vin_ref.shape[1]
-    i = pl.program_id(0)
+    i = pl.program_id(grid_base)
     rd = (i + 1) % 2                  # rowh bank written by S-row i-1
     wr = i % 2
-    j = pl.program_id(1)
+    j = pl.program_id(grid_base + 1)
     vpad_ref[pl.ds(u_max, Bs), pl.ds(off_max, Bc)] = vin_ref[:, :]
     bits_ref[:, :] = jnp.zeros((Bs, Bc), jnp.int32)
 
@@ -510,6 +707,8 @@ def _fused_chunk_kernel(ups_ref, offs_ref, sig_ref, bitpos_ref, feas_ref,
         cur = vpad_ref[pl.ds(u_max, Bs), pl.ds(off_max, Bc)]
         take = vpad_ref[pl.ds(u_max - u, Bs), pl.ds(off_max - off, Bc)] + sig
         take = jnp.where(feas_ref[k, :][None, :] > 0, take, NEG)
+        if alw_ref is not None:
+            take = jnp.where(alw_ref[k] > 0, take, NEG)
         dec = (take > cur).astype(jnp.int32)
         bits_ref[:, :] = bits_ref[:, :] | (dec * bit)
         vpad_ref[pl.ds(u_max, Bs), pl.ds(off_max, Bc)] = \
@@ -607,6 +806,133 @@ def _dp_forward_fused(upsilon, sigma2, feasible, offsets, v0,
 
     (V, dec), _ = jax.lax.scan(body, (V0, dec0), xs)
     return V[:S, :C], dec[:, :S, :C]
+
+
+class _Lead0:
+    """Fixed-leading-index view of a batch-blocked ref.
+
+    The batched fused pipeline blocks per-instance operands as (1, …)
+    slabs; this adapter lets the 2-D fused-kernel body run on them
+    unchanged (every read/write gains a leading 0)."""
+
+    def __init__(self, ref):
+        self._ref = ref
+
+    @property
+    def shape(self):
+        return self._ref.shape[1:]
+
+    @staticmethod
+    def _at(idx):
+        return (0,) + (idx if isinstance(idx, tuple) else (idx,))
+
+    def __getitem__(self, idx):
+        return self._ref[self._at(idx)]
+
+    def __setitem__(self, idx, val):
+        self._ref[self._at(idx)] = val
+
+
+def _batched_fused_kernel(ups_ref, offs_ref, sig_ref, bitpos_ref, alw_ref,
+                          feas_ref, vin_ref, vout_ref, bits_ref, vpad_ref,
+                          rowh_ref, lefth_ref, *, n_chunk: int, u_max: int,
+                          off_max: int, multi_row: bool):
+    """Batch-blocked adapter around :func:`_fused_chunk_kernel`: the body
+    runs unchanged on the (1, …) instance blocks through
+    fixed-leading-index views, with the (i, j) grid ids shifted one axis
+    right (batch is the outermost grid dimension) and the per-instance
+    ``allowed`` row masking every edge.  Scratches are per-instance state
+    and stay 2-D."""
+    _fused_chunk_kernel(
+        _Lead0(ups_ref), offs_ref, _Lead0(sig_ref), bitpos_ref, feas_ref,
+        _Lead0(vin_ref), _Lead0(vout_ref), _Lead0(bits_ref), vpad_ref,
+        rowh_ref, lefth_ref, n_chunk=n_chunk, u_max=u_max, off_max=off_max,
+        multi_row=multi_row, grid_base=1, alw_ref=_Lead0(alw_ref))
+
+
+def _dp_forward_fused_batched(upsilon, sigma2, allowed, feasible, offsets,
+                              v0, *, n_edges: int, u_max: int, off_max: int,
+                              block_e: int, block_s, block_c: int,
+                              interpret: bool):
+    if not 1 <= block_e <= MAX_BLOCK_E:
+        raise ValueError(
+            f"block_e={block_e} outside [1, {MAX_BLOCK_E}]: a fused chunk "
+            "packs its decision bits into one int32 word plane, so "
+            "in-chunk bit positions (edge id mod 32) must stay distinct")
+    B = upsilon.shape[0]
+    S, C = v0.shape
+    Cp = -(-C // block_c) * block_c
+    bs = S if block_s is None else block_s
+    Sp = -(-S // bs) * bs
+    V0 = jnp.broadcast_to(
+        jnp.pad(v0, ((0, Sp - S), (0, Cp - C)), constant_values=NEG)[None],
+        (B, Sp, Cp))
+    feas_p = jnp.pad(feasible, ((0, 0), (0, Cp - C)))   # pad states masked
+    W = packed_words(n_edges)
+    dec0 = jnp.zeros((B, W, Sp, Cp), jnp.int32)
+
+    n_chunks = -(-n_edges // block_e)
+    pad_e = n_chunks * block_e - n_edges
+    rev = slice(None, None, -1)
+
+    def _shared_chunks(arr, pad_width):
+        return jnp.pad(arr[rev], pad_width).reshape((n_chunks, block_e)
+                                                    + arr.shape[1:])
+
+    def _inst_chunks(arr):           # (B, E) → (n_chunks, B, block_e)
+        return (jnp.pad(arr[:, rev], ((0, 0), (0, pad_e)))
+                .reshape(B, n_chunks, block_e).transpose(1, 0, 2))
+
+    e_ids = jnp.arange(n_edges - 1, -1, -1, dtype=jnp.int32)
+    xs = (_inst_chunks(upsilon),
+          _shared_chunks(offsets, (0, pad_e)),
+          _inst_chunks(sigma2),
+          jnp.pad(e_ids % 32, (0, pad_e)).reshape(n_chunks, block_e),
+          _inst_chunks(allowed),
+          _shared_chunks(feas_p, ((0, pad_e), (0, 0))),
+          jnp.asarray(_chunk_word_masks(n_edges, block_e)))
+
+    multi_row = Sp // bs > 1
+    kernel = functools.partial(_batched_fused_kernel, n_chunk=block_e,
+                               u_max=u_max, off_max=off_max,
+                               multi_row=multi_row)
+    rowh_shape = (2 * block_e, max(u_max, 1), Cp) if multi_row else (1, 1, 1)
+    inst_row = pl.BlockSpec((1, block_e), lambda b, i, j: (b, 0),
+                            memory_space=pltpu.SMEM)
+    call = pl.pallas_call(
+        kernel,
+        grid=(B, Sp // bs, Cp // block_c),
+        out_shape=(jax.ShapeDtypeStruct((B, Sp, Cp), jnp.float32),
+                   jax.ShapeDtypeStruct((B, Sp, Cp), jnp.int32)),
+        in_specs=[
+            inst_row,                                        # Υ̂ chunk
+            pl.BlockSpec(memory_space=pltpu.SMEM),           # offsets
+            inst_row,                                        # Σ̂² chunk
+            pl.BlockSpec(memory_space=pltpu.SMEM),           # bit positions
+            inst_row,                                        # allowed chunk
+            pl.BlockSpec((block_e, block_c), lambda b, i, j: (0, j)),
+            pl.BlockSpec((1, bs, block_c), lambda b, i, j: (b, i, j)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, bs, block_c), lambda b, i, j: (b, i, j)),
+            pl.BlockSpec((1, bs, block_c), lambda b, i, j: (b, i, j))),
+        scratch_shapes=[
+            pltpu.VMEM((u_max + bs, off_max + block_c), jnp.float32),
+            pltpu.VMEM(rowh_shape, jnp.float32),
+            pltpu.VMEM((block_e, bs, max(off_max, 1)), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+
+    def body(carry, x):
+        V, dec = carry
+        ups_c, offs_c, sig_c, bitpos_c, alw_c, feas_c, mask_c = x
+        Vn, bits = call(ups_c, offs_c, sig_c, bitpos_c, alw_c, feas_c, V)
+        dec = dec | (bits[:, None] & mask_c[None, :, None, None])
+        return (Vn, dec), None
+
+    (V, dec), _ = jax.lax.scan(body, (V0, dec0), xs)
+    return V[:, :S, :C], dec[:, :, :S, :C]
 
 
 def _dp_forward_blocked(upsilon, sigma2, feasible, offsets, v0,
@@ -721,3 +1047,105 @@ def dp_forward_pallas(upsilon, sigma2, feasible, offsets, v0,
         scratch_shapes=[pltpu.VMEM((u_max + S, off_max + C), jnp.float32)],
         interpret=interp,
     )(upsilon, sigma2, offsets, feasible, v0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_edges", "u_max", "off_max",
+                                             "interpret", "block_b",
+                                             "block_c", "block_s",
+                                             "block_e"))
+def dp_forward_pallas_batched(upsilon, sigma2, allowed, feasible, offsets,
+                              v0, *, n_edges: int, u_max: int, off_max: int,
+                              interpret: bool | None = None,
+                              block_b: int | None = None,
+                              block_c: int | None = None,
+                              block_s: int | None = None,
+                              block_e: int | None = None):
+    """B independent DP forwards in ONE pallas_call.
+
+    upsilon/sigma2/allowed: (B, E); ``feasible`` (E, C) and ``offsets``
+    (E,) are SHARED across the batch — per-instance eligibility rides the
+    (B, E) ``allowed`` rows and multiplies into the feasibility mask
+    INSIDE the kernel, so the plane is never replicated per instance.
+    Returns ``(V (B, S, C) f32, decisions (B, ⌈E/32⌉, S, C) i32)``.
+
+    ``block_b`` instances advance per grid step (default: the whole
+    batch in one step); ragged batches (B not a multiple of block_b) pad
+    with inert ``allowed ≡ 0`` instances whose outputs are dropped.  With
+    a plane tiling (``block_c`` + ``block_e``) the batch becomes the
+    outermost grid dimension of the edge-fused pipeline and ``block_b``
+    must be 1.  ``choose_tiling(..., batch=B)`` picks all four."""
+    interp = resolve_interpret(interpret)
+    B = upsilon.shape[0]
+    bb = B if block_b is None else block_b
+    if not 1 <= bb <= B:
+        raise ValueError(
+            f"block_b={bb} outside [1, {B}]: the batch grid advances "
+            "block_b instances per step and cannot exceed the batch")
+    allowed = jnp.asarray(allowed, jnp.int32)
+    if block_s is not None and block_c is None:
+        raise ValueError(
+            "block_s tiles the budget axis of the blocked pipeline and "
+            "needs block_c (pass block_c=C for a single full-width tile)")
+    if block_e is not None and block_c is None:
+        raise ValueError(
+            "block_e fuses edges into the blocked pipeline's grid and "
+            "needs block_c (pass block_c=C for a single full-width tile)")
+    if block_c is not None:
+        if block_e is None:
+            raise ValueError(
+                "batched dispatch supports the whole-plane kernel "
+                "(block_c=None) and the edge-fused pipeline (block_e "
+                "set); the per-edge-scan pipelines re-stream the plane "
+                "once per edge and gain nothing from sharing a launch — "
+                "run those instances sequentially instead")
+        if bb != 1:
+            raise ValueError(
+                f"block_b={bb}: the fused pipeline batches as the "
+                "outermost grid dimension with one instance per grid "
+                "step (block_b=1) — the per-instance halo histories are "
+                "what overflowed the VMEM budget in the first place")
+        if block_c < off_max:
+            raise ValueError(
+                f"block_c={block_c} < off_max={off_max}: the offset "
+                "shift would reach past the left-neighbor halo")
+        if block_s is not None and block_s < u_max:
+            raise ValueError(
+                f"block_s={block_s} < u_max={u_max}: the budget shift "
+                "would reach past the up-neighbor halo")
+        return _dp_forward_fused_batched(
+            upsilon, sigma2, allowed, feasible, offsets, v0,
+            n_edges=n_edges, u_max=u_max, off_max=off_max, block_e=block_e,
+            block_s=block_s, block_c=block_c, interpret=interp)
+    S, C = v0.shape
+    W = packed_words(n_edges)
+    Bp = -(-B // bb) * bb
+    pad = Bp - B
+    upsilon = jnp.pad(upsilon, ((0, pad), (0, 0)))
+    sigma2 = jnp.pad(sigma2, ((0, pad), (0, 0)))
+    allowed = jnp.pad(allowed, ((0, pad), (0, 0)))   # allowed ≡ 0 ⇒ inert
+    scratch = (pltpu.VMEM((1, u_max + S, off_max + C), jnp.float32)
+               if bb == 1
+               else pltpu.VMEM((bb, S, off_max + C), jnp.float32))
+    kernel = functools.partial(_dp_kernel_batched, n_edges=n_edges,
+                               u_max=u_max, off_max=off_max)
+    inst = pl.BlockSpec((bb, n_edges), lambda g: (g, 0),
+                        memory_space=pltpu.SMEM)
+    V, dec = pl.pallas_call(
+        kernel,
+        grid=(Bp // bb,),
+        out_shape=(jax.ShapeDtypeStruct((Bp, S, C), jnp.float32),
+                   jax.ShapeDtypeStruct((Bp, W, S, C), jnp.int32)),
+        in_specs=[
+            inst,                                        # Υ̂ rows
+            inst,                                        # Σ̂² rows
+            inst,                                        # allowed rows
+            pl.BlockSpec(memory_space=pltpu.SMEM),       # shared offsets
+            pl.BlockSpec((n_edges, C), lambda g: (0, 0)),
+            pl.BlockSpec((S, C), lambda g: (0, 0)),
+        ],
+        out_specs=(pl.BlockSpec((bb, S, C), lambda g: (g, 0, 0)),
+                   pl.BlockSpec((bb, W, S, C), lambda g: (g, 0, 0, 0))),
+        scratch_shapes=[scratch],
+        interpret=interp,
+    )(upsilon, sigma2, allowed, offsets, feasible, v0)
+    return V[:B], dec[:B]

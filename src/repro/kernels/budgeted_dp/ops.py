@@ -22,9 +22,18 @@ Operand contract (what makes this usable from the hot path):
     tables object can never carry a stale operand again);
   * operands are prepared with HOST numpy so repeated traces never leak a
     tracer; ``prepare_tables`` is a cheap pure function of the tables;
-  * the whole wrapper is vmap-safe: ``simulate_batch``/``simulate_grid``
-    can map it over seed batches (Pallas batches the call; the operands
-    stay unbatched constants);
+  * the whole wrapper is vmap-safe AND batch-aware: a ``custom_vmap``
+    rule on the solve core dispatches every mapped instance through ONE
+    :func:`repro.kernels.budgeted_dp.kernel.dp_forward_pallas_batched`
+    launch — ``simulate_batch``/``simulate_grid`` mapping it over seed
+    batches get one fleet-batched kernel per slot instead of B replicated
+    launches, the shared (E, C) feasibility plane stays an unbatched
+    constant (per-instance eligibility multiplies into the mask inside
+    the kernel, never folded into B feasibility copies), and
+    ``prepare_tables`` derives the host operands exactly once per tables
+    object (identity-cached).  :func:`solve_budgeted_dp_batched` is the
+    explicit batched entry point for callers that already hold stacked
+    (B, E) statistics;
   * decisions come back packed (⌈E/32⌉, S, C) int32 — 32× less memory than
     the old (E, S, C) f32 tensor — and the backtrack walks them with pure
     offset arithmetic (cs − offsets[e]), per-edge constants streamed as
@@ -46,14 +55,16 @@ import numpy as np
 
 from ...core.dp import DPTables
 from .kernel import (NEG, choose_tiling, dp_forward_pallas,
-                     resolve_interpret)
+                     dp_forward_pallas_batched, resolve_interpret)
 
 __all__ = ["VALUE_BOUND", "prepare_tables", "max_achievable_value",
-           "solve_budgeted_dp_pallas", "resolve_interpret"]
+           "solve_budgeted_dp_pallas", "solve_budgeted_dp_batched",
+           "resolve_interpret"]
 
 VALUE_BOUND = 2 ** 24          # f32-exact integer domain (kernel contract)
 
 
+@functools.lru_cache(maxsize=32)
 def prepare_tables(tables: DPTables):
     """(feasible (E, C) f32, offsets (E,) i32) kernel operands.
 
@@ -62,6 +73,14 @@ def prepare_tables(tables: DPTables):
     never-feasible edges (infeasible even at full capacity) are zeroed:
     they are masked everywhere, and zeroing keeps ``max(offsets)`` — the
     kernel's pad width — tight.
+
+    Memoized by tables IDENTITY (``DPTables`` is frozen with ``eq=False``,
+    so the object itself is the hashable key and the cache holds it
+    alive): every solver call against the same tables — in particular all
+    B instances of a vmapped or batched dispatch — derives the operands
+    exactly ONCE.  A ``dataclasses.replace``d or rebuilt tables object is
+    a different key, so the cache can never serve stale operands; the
+    returned arrays are shared and must be treated as read-only.
     """
     feas = np.asarray(tables.feasible).T.astype(np.float32)        # (E, C)
     usable = np.asarray(tables.feasible)[tables.full_state]        # (E,)
@@ -170,6 +189,131 @@ def _solve(upsilon, sigma2, feasible, offsets, s_limit,
     return x, s_star, v_row
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("s_cap", "u_max", "off_max", "full_state",
+                                    "interpret", "block_b", "block_c",
+                                    "block_s", "block_e"))
+def _solve_batched(upsilon, sigma2, allowed, feasible, offsets, s_limit,
+                   *, s_cap: int, u_max: int, off_max: int, full_state: int,
+                   interpret: bool, block_b: int | None,
+                   block_c: int | None, block_s: int | None,
+                   block_e: int | None):
+    """Batched :func:`_solve`: B solves through ONE kernel launch.
+
+    upsilon/sigma2/allowed are (B, E), ``s_limit`` is (B,); the tables
+    operands stay SHARED (unbatched).  The eq.-17 selection runs across
+    the batch axis, and the backtrack scans all B walks in lockstep —
+    per-edge constants stream once, each step reads one 1-element slice
+    of each instance's packed-decision words."""
+    B, E = upsilon.shape
+    S = s_cap + 1
+    v0 = jnp.full((S, feasible.shape[1]), NEG, jnp.float32).at[0, :].set(0.0)
+
+    V, decisions = dp_forward_pallas_batched(
+        upsilon, sigma2, allowed, feasible, offsets, v0,
+        n_edges=E, u_max=u_max, off_max=off_max, interpret=interpret,
+        block_b=block_b, block_c=block_c, block_s=block_s, block_e=block_e)
+
+    v_row = V[:, :, full_state]                                    # (B, S)
+    s_vals = jnp.arange(S, dtype=jnp.int32)
+    ok = (v_row >= 0) & (s_vals[None, :] <= s_limit[:, None])
+    score = (s_vals[None, :].astype(jnp.float32)
+             + jnp.sqrt(jnp.maximum(v_row, 0.0)))
+    s_star = jnp.argmax(jnp.where(ok, score, -jnp.inf),
+                        axis=1).astype(jnp.int32)
+
+    e_ids = jnp.arange(E, dtype=jnp.int32)
+
+    def back(carry, x):
+        s, cs = carry                                   # (B,) each
+        u, off, w, b = x                                # u (B,); rest scalar
+        word = jax.vmap(
+            lambda d, s_, c_: jax.lax.dynamic_slice(
+                d, (w, s_, c_), (1, 1, 1))[0, 0, 0])(decisions, s, cs)
+        d = (word >> b) & 1
+        taken = d > 0
+        s = jnp.where(taken, jnp.maximum(s - u, 0), s)
+        cs = jnp.where(taken, cs - off, cs)
+        return (s, cs), d
+
+    (_, _), x = jax.lax.scan(
+        back, (s_star, jnp.full((B,), full_state, jnp.int32)),
+        (upsilon.T, offsets, e_ids // 32, e_ids % 32))
+    return x.T, s_star, v_row
+
+
+@functools.lru_cache(maxsize=None)
+def _vmappable_core(s_cap: int, u_max: int, off_max: int, full_state: int,
+                    interpret: bool, block_c, block_s, block_e,
+                    auto_tiling: bool, n_edges: int, n_states: int):
+    """The solve core for one static kernel config, with a custom vmap rule.
+
+    The single-instance path folds ``allowed`` into the feasibility plane
+    and runs :func:`_solve` exactly as before.  Under ``jax.vmap`` the
+    rule fires instead and routes ALL mapped instances through ONE
+    :func:`dp_forward_pallas_batched` launch: the shared (E, C)
+    feasibility plane stays an unbatched constant (vmapping the fold
+    would materialize B per-instance copies of it), per-instance
+    eligibility rides the (B, E) ``allowed`` rows, and when the tiling is
+    auto it re-resolves for the batch via ``choose_tiling(batch=B)``.
+    Cached per static config so repeated solver calls reuse one
+    ``custom_vmap`` object and its jit traces."""
+
+    def plain(upsilon, sigma2, s_limit, allowed, feasible, offsets):
+        feas = feasible * allowed.astype(jnp.float32)[:, None]
+        return _solve(upsilon, sigma2, feas, offsets, s_limit,
+                      s_cap=s_cap, u_max=u_max, off_max=off_max,
+                      full_state=full_state, interpret=interpret,
+                      block_c=block_c, block_s=block_s, block_e=block_e)
+
+    core = jax.custom_batching.custom_vmap(plain)
+
+    @core.def_vmap
+    def _batched_rule(axis_size, in_batched, upsilon, sigma2, s_limit,
+                      allowed, feasible, offsets):
+        up_b, sg_b, sl_b, al_b, fe_b, of_b = in_batched
+        if fe_b or of_b:
+            raise NotImplementedError(
+                "the DP tables are shared across a batch: vmap over "
+                "per-instance feasibility/offset operands is not "
+                "supported — rebuild per-instance tables and solve them "
+                "separately instead")
+        B = axis_size
+
+        def bcast(x, batched):
+            return x if batched else jnp.broadcast_to(x, (B,) + jnp.shape(x))
+
+        ups = bcast(upsilon, up_b)
+        sig = bcast(sigma2, sg_b)
+        sl = bcast(s_limit, sl_b)
+        alw = bcast(allowed, al_b)
+
+        if auto_tiling:
+            bb, be, bs, bc = choose_tiling(
+                s_cap + 1, n_states, n_edges, u_max, off_max, batch=B)
+        else:
+            be, bs, bc = block_e, block_s, block_c
+            if bc is not None and be is None:
+                # a forced per-edge-scan tiling has no batched pipeline
+                # (re-streaming the plane per edge gains nothing from a
+                # shared launch) — run the instances sequentially, one
+                # trace, bit-exact by construction
+                outs = jax.lax.map(
+                    lambda t: plain(t[0], t[1], t[2], t[3], feasible,
+                                    offsets), (ups, sig, sl, alw))
+                return outs, (True, True, True)
+            bb = 1 if bc is not None else choose_tiling(
+                s_cap + 1, n_states, n_edges, u_max, off_max, batch=B)[0]
+        outs = _solve_batched(
+            ups, sig, alw, feasible, offsets, sl,
+            s_cap=s_cap, u_max=u_max, off_max=off_max,
+            full_state=full_state, interpret=interpret, block_b=bb,
+            block_c=bc, block_s=bs, block_e=be)
+        return outs, (True, True, True)
+
+    return core
+
+
 def solve_budgeted_dp_pallas(upsilon, sigma2, tables: DPTables, s_cap: int,
                              s_limit, u_max: int | None = None,
                              allowed=None, interpret: bool | None = None,
@@ -206,17 +350,20 @@ def solve_budgeted_dp_pallas(upsilon, sigma2, tables: DPTables, s_cap: int,
     Returns:
       ``(x, info)`` — the (E,) int32 dispatch vector and ``{"s_star",
       "value_row"}``, bit-exact vs the reference backend for every tiling.
+
+    Under ``jax.vmap`` the solve core's custom batching rule dispatches
+    every mapped instance through ONE batched kernel launch (see
+    :func:`_vmappable_core`) — callers never need to opt in.
     """
     _check_value_bound(sigma2, tables)
     feas, offs = prepare_tables(tables)
-    if allowed is not None:
-        feas = feas * jnp.asarray(allowed, jnp.float32)[:, None]
     if u_max is None:
         u_max = s_cap + 1
     _check_u_max(upsilon, int(u_max))
     E = offs.shape[0]
     off_max = int(offs.max()) if E else 0
-    if block_c == "auto":
+    auto = block_c == "auto"
+    if auto:
         if block_s is not None or block_e is not None:
             forced = "block_s" if block_s is not None else "block_e"
             raise ValueError(
@@ -226,11 +373,85 @@ def solve_budgeted_dp_pallas(upsilon, sigma2, tables: DPTables, s_cap: int,
                 "full-width tile)")
         block_e, block_s, block_c = choose_tiling(
             s_cap + 1, tables.n_states, E, int(u_max), off_max)
-    x, s_star, v_row = _solve(
+    core = _vmappable_core(
+        s_cap, int(u_max), off_max, tables.full_state,
+        resolve_interpret(interpret), block_c, block_s, block_e, auto,
+        E, tables.n_states)
+    alw = (jnp.ones((E,), jnp.int32) if allowed is None
+           else jnp.asarray(allowed, jnp.int32))
+    x, s_star, v_row = core(
         jnp.asarray(upsilon, jnp.int32), jnp.asarray(sigma2, jnp.int32),
-        feas, jnp.asarray(offs), jnp.asarray(s_limit, jnp.int32),
+        jnp.asarray(s_limit, jnp.int32), alw, jnp.asarray(feas),
+        jnp.asarray(offs))
+    return x, {"s_star": s_star, "value_row": v_row}
+
+
+def solve_budgeted_dp_batched(upsilon, sigma2, tables: DPTables, s_cap: int,
+                              s_limit, u_max: int | None = None,
+                              allowed=None, interpret: bool | None = None,
+                              block_b: "int | str" = "auto",
+                              block_c: "int | str | None" = "auto",
+                              block_s: int | None = None,
+                              block_e: int | None = None):
+    """B solves against SHARED tables in ONE kernel launch.
+
+    The explicit batched entry point for callers that already hold
+    stacked statistics (``jax.vmap`` of :func:`solve_budgeted_dp_pallas`
+    reaches the same kernel through the custom batching rule).
+
+    Args:
+      upsilon, sigma2: (B, E) int32 per-instance statistics.
+      s_limit: scalar or (B,) per-instance budget mask.
+      allowed: optional (B, E) per-instance eligibility; the (E, C)
+        feasibility plane itself stays shared — eligibility multiplies
+        into the mask inside the kernel.
+      block_b: instances advanced per grid step.  ``"auto"`` (default)
+        resolves with the tiling; an explicit int outside [1, B] raises,
+        and forcing it while ``block_c="auto"`` raises (the auto tiling
+        would overwrite it).  B need not be a multiple of block_b: ragged
+        batches pad with inert ``allowed ≡ 0`` instances.
+      Everything else matches :func:`solve_budgeted_dp_pallas`.
+
+    Returns:
+      ``(x, info)`` — (B, E) int32 dispatch vectors and ``{"s_star":
+      (B,), "value_row": (B, S)}``, bit-exact vs a per-instance loop
+      over the reference backend.
+    """
+    if not isinstance(sigma2, jax.core.Tracer):
+        # worst case per edge across the batch bounds every instance
+        _check_value_bound(np.max(np.asarray(sigma2), axis=0), tables)
+    feas, offs = prepare_tables(tables)
+    if u_max is None:
+        u_max = s_cap + 1
+    _check_u_max(upsilon, int(u_max))
+    E = offs.shape[0]
+    B = int(np.shape(upsilon)[0])
+    off_max = int(offs.max()) if E else 0
+    if block_c == "auto":
+        forced = next((name for name, val in (("block_b", block_b),
+                                              ("block_s", block_s),
+                                              ("block_e", block_e))
+                       if val is not None and val != "auto"), None)
+        if forced is not None:
+            raise ValueError(
+                f'{forced} was forced but block_c is "auto": the auto '
+                "tiling would overwrite it — pass a concrete block_c "
+                "(e.g. the number of capacity states for a single "
+                "full-width tile)")
+        block_b, block_e, block_s, block_c = choose_tiling(
+            s_cap + 1, tables.n_states, E, int(u_max), off_max, batch=B)
+    elif block_b == "auto":
+        block_b = (1 if block_c is not None else choose_tiling(
+            s_cap + 1, tables.n_states, E, int(u_max), off_max,
+            batch=B)[0])
+    alw = (jnp.ones((B, E), jnp.int32) if allowed is None
+           else jnp.asarray(allowed, jnp.int32))
+    sl = jnp.broadcast_to(jnp.asarray(s_limit, jnp.int32), (B,))
+    x, s_star, v_row = _solve_batched(
+        jnp.asarray(upsilon, jnp.int32), jnp.asarray(sigma2, jnp.int32),
+        alw, jnp.asarray(feas), jnp.asarray(offs), sl,
         s_cap=s_cap, u_max=int(u_max), off_max=off_max,
         full_state=tables.full_state,
-        interpret=resolve_interpret(interpret), block_c=block_c,
-        block_s=block_s, block_e=block_e)
+        interpret=resolve_interpret(interpret), block_b=block_b,
+        block_c=block_c, block_s=block_s, block_e=block_e)
     return x, {"s_star": s_star, "value_row": v_row}

@@ -77,8 +77,14 @@ class ClusterSim:
         self.u_max = stats_mod.u_max_for_horizon(T, self.m)
 
     # ------------------------------------------------------------------
-    def _streams(self):
-        rng = np.random.default_rng(self.seed)
+    def _streams(self, seed: int | None = None):
+        """Arrival/noise streams for one seed (default: the sim's own).
+
+        ``run_batch`` draws one stream per fleet seed through this hook;
+        a given seed yields the identical stream either way, which is
+        what makes ``run_batch([s])`` reproduce ``run()`` of a sim built
+        with ``seed=s``."""
+        rng = np.random.default_rng(self.seed if seed is None else seed)
         inst = self.inst
         rho_t = np.clip(inst.rho[None, :] * self.arr_scale, 0.0, 1.0)
         arrivals = rng.random((self.T, inst.n_ports)) < rho_t
@@ -169,3 +175,104 @@ class ClusterSim:
 
         return SimOutput(sw=sw, regret=regret, dispatch_share=share,
                          asw=float(sw.sum()))
+
+    # ------------------------------------------------------------------
+    def run_batch(self, seeds, policy: str = "esdp",
+                  tiebreak: float = 1e-4) -> "list[SimOutput]":
+        """One paired simulation per seed, fleet-batched per slot.
+
+        Every seed replays the SAME cluster schedule (speed/aliveness
+        callbacks, and a scenario's arrival scaling — unrolled once with
+        the sim's construction seed) against its OWN arrival/noise
+        streams and bandit state, exactly as ``ClusterSim(...,
+        seed=s).run(policy)`` would — ``run_batch([s])`` reproduces that
+        run bit for bit.  The per-slot Algorithm-2 solves of all seeds
+        dispatch as ONE kernel launch per slot: the vmapped solver hits
+        the batch-aware backends' custom batching rule
+        (``Solver.accepts_batch``), which shares the DP-table operands
+        across the fleet instead of replicating the launch per seed.
+
+        Returns one :class:`SimOutput` per seed, in seed order.
+        """
+        inst, tables = self.inst, self.tables
+        E, R = inst.n_edges, inst.n_servers
+        port = inst.port_of_edge
+        server = inst.edges[:, 1]
+        seeds = [int(s) for s in seeds]
+        B = len(seeds)
+        streams = [self._streams(s) for s in seeds]
+        arrivals = np.stack([a for a, _ in streams])       # (B, T, P)
+        noise = np.stack([z for _, z in streams])          # (B, T, E)
+        rngs = [np.random.default_rng(s + 1) for s in seeds]
+        b_ids = np.arange(B)[:, None]
+
+        n = np.zeros((B, E), np.int64)
+        sumz = np.zeros((B, E), np.float64)
+        waiting = np.zeros((B, inst.n_ports), np.int64)
+
+        sw = np.zeros((B, self.T), np.float32)
+        regret = np.zeros((B, self.T), np.float32)
+        share = np.zeros((B, self.T, R), np.float32)
+
+        jit_stats = jax.jit(jax.vmap(
+            lambda v, k, t: stats_mod.scale_statistics(
+                v, k, t, self.m, g_fn=self.g_fn),
+            in_axes=(0, 0, None)))
+        jit_dp = jax.jit(jax.vmap(
+            lambda u, s, lim, al: self.solver(
+                u, s, tables, self.s_cap, lim, allowed=al,
+                u_max=self.u_max)[0]))
+        jit_oracle = jax.jit(jax.vmap(
+            lambda v, al: oracle_knapsack(v, tables, al)[0],
+            in_axes=(None, 0)))
+        jit_greedy = jax.jit(jax.vmap(
+            lambda sc, el: greedy_pack(sc, el, jnp.asarray(inst.A),
+                                       jnp.asarray(inst.c))))
+
+        for t0 in range(self.T):
+            t = t0 + 1                      # 1-based for the bandit schedules
+            alive = self.alive_fn(t0)[server]           # shared schedule
+            arrived = arrivals[:, t0][:, port]          # (B, E)
+            allowed = arrived & alive[None, :]
+            vhat = np.where(n > 0, sumz / np.maximum(n, 1), 0.0).astype(
+                np.float32)
+
+            if policy == "esdp":
+                ups, sig, _, s_lim = jit_stats(
+                    jnp.asarray(vhat), jnp.asarray(n.astype(np.int32)),
+                    jnp.float32(t))
+                x = np.asarray(jit_dp(ups, sig, s_lim,
+                                      jnp.asarray(allowed)))
+            else:
+                tb = np.stack([r.random(E) for r in rngs]).astype(
+                    np.float32) * tiebreak
+                if policy == "hswf":
+                    score = vhat + tb
+                elif policy == "lcf":
+                    score = -inst.cost[None, :] + tb
+                else:   # lwtf
+                    score = waiting[:, port] * 1e3 + vhat + tb
+                x = np.asarray(jit_greedy(jnp.asarray(score),
+                                          jnp.asarray(allowed)))
+
+            x = x * allowed
+            z = self._z(t0, noise[:, t0])               # broadcasts to (B, E)
+            sw[:, t0] = (x * z).sum(axis=1)
+            v_true = self._v_true(t0)
+            x_star = np.asarray(jit_oracle(jnp.asarray(v_true),
+                                           jnp.asarray(allowed)))
+            regret[:, t0] = ((v_true[None, :] * x_star).sum(axis=1)
+                             - (v_true[None, :] * x).sum(axis=1))
+
+            n += x
+            sumz += x * z
+            served = np.zeros((B, inst.n_ports), bool)
+            np.maximum.at(served, (b_ids, port[None, :]), x > 0)
+            waiting = np.where(served, 0, waiting + arrivals[:, t0])
+            tot = x.sum(axis=1)
+            for b in np.flatnonzero(tot > 0):
+                np.add.at(share[b, t0], server, x[b] / tot[b])
+
+        return [SimOutput(sw=sw[b], regret=regret[b],
+                          dispatch_share=share[b],
+                          asw=float(sw[b].sum())) for b in range(B)]

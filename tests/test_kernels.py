@@ -10,10 +10,14 @@ from repro.kernels.ssd.ops import ssd_op
 from repro.kernels.ssd.ref import ssd_ref
 from repro.core.dp import build_tables, solve_budgeted_dp
 from repro.kernels.budgeted_dp.kernel import (
-    MAX_BLOCK_E, NEG, VMEM_BUDGET_BYTES, c_blocked_tile_vmem_bytes,
-    choose_tiling, dp_forward_pallas, fused_tile_vmem_bytes,
-    modeled_hbm_bytes, tiled_vmem_bytes, unblocked_vmem_bytes)
-from repro.kernels.budgeted_dp.ops import prepare_tables, solve_budgeted_dp_pallas
+    MAX_BLOCK_E, NEG, VMEM_BUDGET_BYTES, batched_fused_tile_vmem_bytes,
+    batched_modeled_hbm_bytes, batched_vmem_bytes,
+    c_blocked_tile_vmem_bytes, choose_tiling, dp_forward_pallas,
+    dp_forward_pallas_batched, fused_tile_vmem_bytes, modeled_hbm_bytes,
+    tiled_vmem_bytes, unblocked_vmem_bytes)
+from repro.kernels.budgeted_dp.ops import (prepare_tables,
+                                           solve_budgeted_dp_batched,
+                                           solve_budgeted_dp_pallas)
 from repro.kernels.budgeted_dp.ref import dp_forward_ref
 
 
@@ -486,6 +490,230 @@ def test_budgeted_dp_fused_contract_errors():
     with pytest.raises(ValueError, match="auto"):
         solve_budgeted_dp_pallas(ups, sig, tables, s_cap, s_cap,
                                  u_max=u_max, interpret=True, block_e=4)
+
+
+# ---------------------------------------------------------------------------
+# fleet-batched budgeted_dp (B solves per launch)
+# ---------------------------------------------------------------------------
+
+def _iter_eqns(jaxpr):
+    """Walk every equation of a jaxpr, descending into nested call/scan/
+    cond jaxprs wherever they hide in the params."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for val in eqn.params.values():
+            vals = val if isinstance(val, (tuple, list)) else (val,)
+            for v in vals:
+                if isinstance(v, jax.core.ClosedJaxpr):
+                    yield from _iter_eqns(v.jaxpr)
+                elif isinstance(v, jax.core.Jaxpr):
+                    yield from _iter_eqns(v)
+
+
+def _pallas_calls(jaxpr):
+    return [e for e in _iter_eqns(jaxpr) if e.primitive.name == "pallas_call"]
+
+
+def test_batched_vmap_emits_single_launch_with_shared_tables():
+    """jax.vmap of the pallas solve at B=32 lowers to EXACTLY ONE
+    pallas_call, and that launch's operands carry the (E, C) feasibility
+    plane UNBATCHED — never a replicated (B, E, C) copy.  This is the
+    launch-count contract of the fleet-batched megakernel: sharing the
+    tables, not stacking the launches."""
+    A, c, ups1, sig1 = _tiling_problem()
+    E = len(ups1)
+    tables = build_tables(A, c)
+    C = tables.n_states
+    B, s_cap, u_max = 32, int(ups1.sum()), int(ups1.max() + 1)
+    rng = np.random.default_rng(41)
+    ups = np.broadcast_to(ups1, (B, E)) + 0
+    sig = rng.integers(1, 3000, (B, E)).astype(np.int32)
+    alw = rng.integers(0, 2, (B, E)).astype(np.int32)
+    slim = rng.integers(0, s_cap + 1, B).astype(np.int32)
+
+    def one(u, s, l, a):
+        return solve_budgeted_dp_pallas(u, s, tables, s_cap, l, u_max=u_max,
+                                        allowed=a, interpret=True)[0]
+
+    jaxpr = jax.make_jaxpr(jax.vmap(one))(
+        jnp.asarray(ups), jnp.asarray(sig), jnp.asarray(slim),
+        jnp.asarray(alw))
+    calls = _pallas_calls(jaxpr.jaxpr)
+    assert len(calls) == 1
+    shapes = [tuple(v.aval.shape) for v in calls[0].invars]
+    assert (E, C) in shapes                  # feasibility plane, shared
+    assert (B, E, C) not in shapes           # never replicated per seed
+    assert (B, E) in shapes                  # per-instance statistics
+
+
+def test_simulate_batch_one_launch_per_slot():
+    """The whole batched simulation — vmapped horizon scan over a seed
+    batch — contains exactly ONE pallas_call in its jaxpr: the scan body
+    solves every seed's slot in one fleet-batched launch (a conventional
+    vmap of the kernel would still show one call; a per-seed unroll or a
+    replicated-operand lowering would show more, or batched tables)."""
+    from repro.core import env as env_mod
+    from repro.core import generate_instance, make_esdp_policy
+
+    inst = generate_instance(seed=3, n_ports=4, n_servers=10, edge_prob=0.3)
+    tables = build_tables(inst.A, inst.c)
+    T, B = 12, 32
+    policy = make_esdp_policy(inst, T, tables=tables,
+                              solver="pallas_interpret")
+    tables_, scenario, params = env_mod._scenario_args(inst, tables, None)
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in range(B)])
+    jaxpr = jax.make_jaxpr(
+        lambda arrays, ks, ps: env_mod._run_batch(
+            policy, T, tables_, scenario, inst.n_servers, arrays, ks, ps))(
+        env_mod._instance_arrays(inst), keys, params)
+    calls = _pallas_calls(jaxpr.jaxpr)
+    assert len(calls) == 1
+    E, C = inst.n_edges, tables.n_states
+    shapes = [tuple(v.aval.shape) for v in calls[0].invars]
+    assert (E, C) in shapes and (B, E, C) not in shapes
+
+
+def test_choose_tiling_batched_decision_table():
+    """The 4-tuple chooser: the BATCH axis shrinks before the plane ever
+    tiles — full fleet per step when it fits, the largest power-of-two
+    sub-fleet when it doesn't, and only when even one instance's plane
+    overflows does the tiling fall back to the 3-tuple rule with block_b
+    pinned to 1 (batch as the fused pipeline's outermost grid dim)."""
+    # paper-default sizes: the whole 32-fleet fits in one grid step
+    assert choose_tiling(110, 27, 40, 9, 13, batch=32) == \
+        (32, None, None, None)
+    assert batched_vmem_bytes(110, 27, 40, 9, 13, 32) <= VMEM_BUDGET_BYTES
+    # a degenerate fleet of one stays on the whole-plane kernel
+    assert choose_tiling(110, 27, 40, 9, 13, batch=1) == \
+        (1, None, None, None)
+    # taller planes: the fleet splits (4, then 2, then 1 per step) while
+    # every instance's plane stays whole — batch shrinks FIRST
+    for S, bb_want in ((256, 4), (512, 2), (1024, 1)):
+        bb, be, bs, bc = choose_tiling(S, 512, 16, 4, 73, batch=32)
+        assert (bb, be, bs, bc) == (bb_want, None, None, None)
+        assert batched_vmem_bytes(S, 512, 16, 4, 73, bb) <= \
+            VMEM_BUDGET_BYTES
+        if bb < 32:    # the next-larger fleet is what overflowed
+            assert batched_vmem_bytes(S, 512, 16, 4, 73, 2 * bb) > \
+                VMEM_BUDGET_BYTES
+    # long horizon: even block_b=1 overflows whole-plane → the plane
+    # tiles exactly as the single-instance rule says, block_b pinned to 1
+    S, C, E, u_max, off_max = 4096, 512, 16, 4, 73
+    assert batched_vmem_bytes(S, C, E, u_max, off_max, 1) > \
+        VMEM_BUDGET_BYTES
+    four = choose_tiling(S, C, E, u_max, off_max, batch=32)
+    assert four == (1,) + choose_tiling(S, C, E, u_max, off_max)
+    _, be, bs, bc = four
+    assert batched_fused_tile_vmem_bytes(be, bs, bc, u_max, off_max, S, C,
+                                         1) <= VMEM_BUDGET_BYTES
+    with pytest.raises(ValueError, match="batch"):
+        choose_tiling(110, 27, 40, 9, 13, batch=0)
+
+
+def test_batched_modeled_hbm_shares_tables_once():
+    """The batched traffic model: shared operands stream once, so B
+    batched solves always model strictly under B× the single-solve
+    traffic, and the saving is exactly the (B−1)-fold shared-operand
+    re-stream a vmapped-single-launch lowering would pay."""
+    for (S, C, E, u_max, off_max), (be, bs, bc) in (
+            ((110, 27, 40, 9, 13), (None, None, None)),
+            ((4096, 512, 16, 4, 73), choose_tiling(4096, 512, 16, 4, 73))):
+        one = modeled_hbm_bytes(S, C, E, u_max, off_max, be, bs, bc)
+        for B in (8, 64):
+            batched = batched_modeled_hbm_bytes(S, C, E, u_max, off_max, B,
+                                                be, bs, bc)
+            vmapped = B * one
+            assert batched < vmapped
+            shared = vmapped - batched
+            assert shared % (B - 1) == 0     # (B−1) shared re-streams saved
+        assert batched_modeled_hbm_bytes(S, C, E, u_max, off_max, 1,
+                                         be, bs, bc) == one
+
+
+def test_batched_contract_errors():
+    """Every illegal batched configuration is a loud ValueError — block_b
+    outside [1, B], a forced block under auto tiling, the fused pipeline
+    with block_b ≠ 1, and the per-edge-scan tilings that gain nothing
+    from sharing a launch — never a silent wrong answer."""
+    A, c, ups1, sig1 = _tiling_problem(seed=23)
+    E = len(ups1)
+    tables = build_tables(A, c)
+    s_cap = int(ups1.sum())
+    feas, offs = prepare_tables(tables)
+    feas, offs = jnp.asarray(feas), jnp.asarray(offs)
+    off_max = int(offs.max())
+    u_max = int(ups1.max() + 1)
+    B = 4
+    ups = jnp.broadcast_to(jnp.asarray(ups1), (B, E))
+    sig = jnp.broadcast_to(jnp.asarray(sig1), (B, E))
+    alw = jnp.ones((B, E), jnp.int32)
+    v0 = jnp.full((s_cap + 1, tables.n_states), NEG,
+                  jnp.float32).at[0, :].set(0.0)
+    kwargs = dict(n_edges=E, u_max=u_max, off_max=off_max, interpret=True)
+    for bad_bb in (0, B + 1):
+        with pytest.raises(ValueError, match="block_b"):
+            dp_forward_pallas_batched(ups, sig, alw, feas, offs, v0,
+                                      block_b=bad_bb, **kwargs)
+    # fused pipeline: batch is the outermost grid dim, one instance/step
+    with pytest.raises(ValueError, match="block_b"):
+        dp_forward_pallas_batched(ups, sig, alw, feas, offs, v0, block_b=2,
+                                  block_c=off_max, block_e=4, **kwargs)
+    # per-edge-scan tilings don't share anything worth batching
+    with pytest.raises(ValueError, match="block_e"):
+        dp_forward_pallas_batched(ups, sig, alw, feas, offs, v0,
+                                  block_c=off_max, **kwargs)
+    with pytest.raises(ValueError, match="block_c"):
+        dp_forward_pallas_batched(ups, sig, alw, feas, offs, v0,
+                                  block_s=u_max, **kwargs)
+    # a forced block must never be silently overwritten by auto tiling
+    with pytest.raises(ValueError, match="auto"):
+        solve_budgeted_dp_batched(ups, sig, tables, s_cap, s_cap,
+                                  u_max=u_max, interpret=True, block_b=2)
+    with pytest.raises(ValueError, match="block_b"):
+        solve_budgeted_dp_batched(ups, sig, tables, s_cap, s_cap,
+                                  u_max=u_max, interpret=True,
+                                  block_b=B + 1, block_c=None)
+
+
+def test_batched_ragged_pad_instances_inert():
+    """B=5 under block_b=2 pads the grid to 6 instances: the pad rides
+    ``allowed ≡ 0`` and must be INERT — and the same argument makes a
+    real all-masked instance return the untouched v0 plane and zero
+    decision words, which we check directly."""
+    A, c, ups1, sig1 = _tiling_problem(seed=43, E=10)
+    E = len(ups1)
+    tables = build_tables(A, c)
+    s_cap = int(ups1.sum())
+    S, C = s_cap + 1, tables.n_states
+    u_max = int(ups1.max() + 1)
+    rng = np.random.default_rng(43)
+    B = 5
+    ups = rng.integers(0, u_max, (B, E)).astype(np.int32)
+    sig = rng.integers(1, 3000, (B, E)).astype(np.int32)
+    alw = rng.integers(0, 2, (B, E)).astype(np.int32)
+    alw[3] = 0                               # a real all-masked instance
+    slim = rng.integers(0, s_cap + 1, B).astype(np.int32)
+    x, info = solve_budgeted_dp_batched(ups, sig, tables, s_cap, slim,
+                                        u_max=u_max, allowed=alw,
+                                        interpret=True, block_b=2,
+                                        block_c=None)
+    assert x.shape == (B, E)                 # pad instances dropped
+    for b in range(B):
+        xr, ir = solve_budgeted_dp(
+            jnp.asarray(ups[b]), jnp.asarray(sig[b]), tables, s_cap,
+            int(slim[b]), allowed=jnp.asarray(alw[b]))
+        np.testing.assert_array_equal(np.asarray(x[b]), np.asarray(xr))
+        assert int(info["s_star"][b]) == int(ir["s_star"])
+    assert not np.asarray(x[3]).any()
+    # the all-masked instance's forward plane is v0, untouched
+    feas, offs = prepare_tables(tables)
+    v0 = jnp.full((S, C), NEG, jnp.float32).at[0, :].set(0.0)
+    V, dec = dp_forward_pallas_batched(
+        jnp.asarray(ups), jnp.asarray(sig), jnp.asarray(alw),
+        jnp.asarray(feas), jnp.asarray(offs), v0, n_edges=E, u_max=u_max,
+        off_max=int(offs.max()), interpret=True, block_b=2)
+    np.testing.assert_array_equal(np.asarray(V[3]), np.asarray(v0))
+    assert not np.asarray(dec[3]).any()
 
 
 def test_budgeted_dp_value_rows_share_feasibility_contract():

@@ -8,6 +8,14 @@ tests (hypothesis, optional [test] extra) generate random small instances
 row across backends, random ``allowed`` masks, ``u_max`` edge cases, and
 ``s_limit < s_cap`` — plus end-to-end trace invariance through ``simulate``,
 ``simulate_batch``, and a fig6-style ``SweepSpec``.
+
+The fleet-batched section extends the same contract to B solves per launch:
+``solve_budgeted_dp_batched`` and ``jax.vmap`` of the pallas backend (which
+dispatches through the custom batching rule) must match a per-instance loop
+over the reference backend bit for bit — heterogeneous Υ̂/Σ̂²/allowed/s_limit
+across the fleet, ragged batches, random (block_b, block_e, block_s,
+block_c) tilings, and the degenerate B=1 fleet against the single-instance
+kernel.
 """
 import dataclasses
 import itertools
@@ -21,6 +29,7 @@ try:        # optional [test] extra — property tests skip cleanly without it
 except ImportError:
     HAS_HYPOTHESIS = False
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import (build_tables, generate_instance, make_esdp_policy,
@@ -34,6 +43,7 @@ from repro.experiments import GridPoint, SweepSpec, get_scenario, run_spec
 from repro.kernels.budgeted_dp.kernel import resolve_interpret
 from repro.kernels.budgeted_dp.ops import (VALUE_BOUND, max_achievable_value,
                                            prepare_tables,
+                                           solve_budgeted_dp_batched,
                                            solve_budgeted_dp_pallas)
 
 REF = get_solver("reference")
@@ -365,6 +375,172 @@ def test_u_max_for_horizon_bounds_upsilon():
                 jnp.ones(inst.n_edges, jnp.float32),
                 jnp.ones(inst.n_edges, jnp.int32), jnp.float32(t), m)
             assert int(jnp.max(ups)) < u_max
+
+
+# ---------------------------------------------------------------------------
+# fleet-batched solves: B instances, ONE launch (batched differential
+# harness)
+# ---------------------------------------------------------------------------
+
+def _ref_loop(ups, sig, tables, s_cap, slim, alw):
+    """Per-instance loop over the reference backend — the batched oracle."""
+    return [_solve_with(REF, ups[b], sig[b], tables, s_cap, int(slim[b]),
+                        None if alw is None else alw[b])
+            for b in range(ups.shape[0])]
+
+
+def _assert_batched_matches(x, info, want):
+    for b, (x_r, s_r, row_r) in enumerate(want):
+        np.testing.assert_array_equal(np.asarray(x[b]), x_r)
+        assert int(info["s_star"][b]) == s_r
+        row = np.asarray(info["value_row"][b])
+        np.testing.assert_array_equal(row >= 0, row_r >= 0)
+        np.testing.assert_array_equal(row[row >= 0].astype(np.int64),
+                                      row_r[row_r >= 0].astype(np.int64))
+
+
+def _rand_fleet(rng, B, E, s_cap, u_hi=4, sig_hi=10**4):
+    """Heterogeneous per-instance statistics: every row its own problem."""
+    ups = rng.integers(0, u_hi + 1, (B, E)).astype(np.int32)
+    sig = rng.integers(1, sig_hi + 1, (B, E)).astype(np.int32)
+    alw = rng.integers(0, 2, (B, E)).astype(np.int32)
+    slim = rng.integers(0, s_cap + 1, B).astype(np.int32)
+    return ups, sig, alw, slim
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_batched_solve_bitexact_vs_instance_loop(seed):
+        """Both batched routes — the explicit ``solve_budgeted_dp_batched``
+        entry AND ``jax.vmap`` of the pallas backend (the custom batching
+        rule) — are bit-exact vs a per-instance loop over the reference
+        backend, with heterogeneous Υ̂/Σ̂²/allowed/s_limit across the fleet
+        and B spanning 1 (degenerate), non-dividing (7) and wide (32)."""
+        rng = np.random.default_rng(seed)
+        E = int(rng.choice([6, 10]))
+        K = int(rng.integers(1, 3))
+        B = int(rng.choice([1, 2, 7, 32]))
+        A, c, _, _ = _rand_problem(rng, E, K, c_hi=2)
+        tables = build_tables(A, c)
+        s_cap = 4 * E                        # static per E: few jit keys
+        u_max = 5                            # static bound over u_hi=4
+        ups, sig, alw, slim = _rand_fleet(rng, B, E, s_cap)
+        want = _ref_loop(ups, sig, tables, s_cap, slim, alw)
+
+        xb, info = solve_budgeted_dp_batched(
+            ups, sig, tables, s_cap, slim, u_max=u_max, allowed=alw,
+            interpret=True)
+        _assert_batched_matches(xb, info, want)
+
+        vm = jax.vmap(lambda u, s, l, a: PAL(u, s, tables, s_cap, l,
+                                             allowed=a, u_max=u_max))
+        xv, info_v = vm(jnp.asarray(ups), jnp.asarray(sig),
+                        jnp.asarray(slim), jnp.asarray(alw))
+        _assert_batched_matches(xv, info_v, want)
+        for b, (_, _, row_r) in enumerate(want):
+            # the Solver wrapper restores the exact int32 row incl. NEG
+            np.testing.assert_array_equal(np.asarray(info_v["value_row"][b]),
+                                          row_r)
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_batched_solver_random_tilings_bitexact(seed):
+        """Random legal 4-tuple (block_b, block_e, block_s, block_c)
+        tilings: the whole-plane kernel under every ``block_b`` ∈ [1, B]
+        (ragged batches pad with inert instances), and the edge-fused
+        pipeline with the batch as the outermost grid dimension under
+        random block_e / block_s / block_c — all bit-exact vs the
+        per-instance reference loop."""
+        rng = np.random.default_rng(seed)
+        E = int(rng.choice([6, 10]))
+        K = int(rng.integers(1, 3))
+        B = int(rng.choice([2, 7]))
+        A, c, _, _ = _rand_problem(rng, E, K, c_hi=2)
+        tables = build_tables(A, c)
+        s_cap = 4 * E
+        S, C = s_cap + 1, tables.n_states
+        off_max = int(tables.offsets.max())
+        ups, sig, alw, slim = _rand_fleet(rng, B, E, s_cap)
+        u_max = int(ups.max()) + int(rng.integers(1, 3))
+        if rng.integers(0, 2):          # whole-plane, batch-tiled grid
+            kw = dict(block_b=int(rng.integers(1, B + 1)), block_c=None)
+        else:                           # edge-fused, batch-outermost grid
+            kw = dict(block_c=int(rng.integers(max(off_max, 1), C + 3)),
+                      block_e=int(rng.integers(1, 33)),
+                      block_s=(None if rng.integers(0, 2) else
+                               int(rng.integers(max(u_max, 2), S + 3))))
+        x, info = solve_budgeted_dp_batched(
+            ups, sig, tables, s_cap, slim, u_max=u_max, allowed=alw,
+            interpret=True, **kw)
+        _assert_batched_matches(
+            x, info, _ref_loop(ups, sig, tables, s_cap, slim, alw))
+
+
+def test_batched_b1_degenerates_to_single_instance():
+    """A fleet of one reproduces the single-instance kernel exactly —
+    including the raw f32 value row (same sentinel, same bits) — and a
+    scalar s_limit broadcasts across the batch."""
+    rng = np.random.default_rng(33)
+    A, c, ups, sig = _rand_problem(rng, 10, 2, u_hi=4)
+    alw = rng.integers(0, 2, 10).astype(np.int32)
+    tables = build_tables(A, c)
+    s_cap = int(ups.sum())
+    x1, i1 = solve_budgeted_dp_pallas(ups, sig, tables, s_cap, s_cap // 2,
+                                      u_max=5, allowed=alw, interpret=True)
+    xb, ib = solve_budgeted_dp_batched(ups[None], sig[None], tables, s_cap,
+                                       np.int32(s_cap // 2), u_max=5,
+                                       allowed=alw[None], interpret=True)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(xb[0]))
+    assert int(i1["s_star"]) == int(ib["s_star"][0])
+    np.testing.assert_array_equal(np.asarray(i1["value_row"]),
+                                  np.asarray(ib["value_row"][0]))
+
+
+def test_cluster_run_batch_reproduces_per_seed_runs(small):
+    """``run_batch`` fleet-batches the per-slot solves (ONE launch per
+    slot through the batch-aware backend) yet reproduces per-seed
+    ``run()`` bit for bit — sw, regret, dispatch_share, asw — for both
+    the batch-aware pallas backend and the conventionally-vmapped
+    reference, on a DP policy and a greedy one."""
+    from repro.sched import ClusterSim
+    inst, _ = small
+    T, seeds = 40, [4, 9]
+    for name, policy in (("pallas_interpret", "esdp"),
+                         ("reference", "hswf")):
+        outs = ClusterSim(inst, T, seed=0, solver=name).run_batch(
+            seeds, policy)
+        assert len(outs) == len(seeds)
+        for s, ob in zip(seeds, outs):
+            o1 = ClusterSim(inst, T, seed=s, solver=name).run(policy)
+            np.testing.assert_array_equal(ob.sw, o1.sw)
+            np.testing.assert_array_equal(ob.regret, o1.regret)
+            np.testing.assert_array_equal(ob.dispatch_share,
+                                          o1.dispatch_share)
+            assert ob.asw == o1.asw
+
+
+def test_prepare_tables_cached_per_tables_identity():
+    """The host-side operand derivation runs ONCE per DPTables object —
+    every per-slot solve of a simulation hits the lru_cache — while a
+    ``dataclasses.replace``d tables object is a fresh key (so the cache
+    can never serve stale operands; see
+    test_prepare_tables_offsets_track_tables)."""
+    tables = build_tables(np.array([[1, 1, 2]]), np.array([3]))
+    before = prepare_tables.cache_info()
+    f1, o1 = prepare_tables(tables)
+    mid = prepare_tables.cache_info()
+    assert mid.misses == before.misses + 1
+    f2, o2 = prepare_tables(tables)
+    after = prepare_tables.cache_info()
+    assert after.hits == mid.hits + 1 and after.misses == mid.misses
+    assert f1 is f2 and o1 is o2            # same host arrays, not copies
+    swapped = dataclasses.replace(tables,
+                                  feasible=np.zeros_like(tables.feasible))
+    prepare_tables(swapped)
+    assert prepare_tables.cache_info().misses == after.misses + 1
 
 
 # ---------------------------------------------------------------------------
