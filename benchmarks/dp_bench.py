@@ -59,6 +59,26 @@ vectorized XLA loops, so wall-clock parity is expected there; the
 launch-grid advantage is the HBM model and launch count, measured on
 real TPUs), and ``hbm_reduction_vs_vmapped`` — the modeled shared-vs-
 replicated traffic ratio (``kernel.batched_modeled_hbm_bytes``).
+
+Configs with ``incremental: True`` additionally time the CROSS-SLOT
+INCREMENTAL legs (``incr_*`` backends) over a recorded post-exploration
+drift trace: per-slot statistics come from the real sampling model
+(``stats.scale_statistics`` at a large t₀, with (v̂, n) evolving only on
+the edges each slot's solve dispatches), so the trace's repeat/drift
+structure is the one the scheduler actually sees after exploration — the
+⌈·⌉ in Υ̂ = ⌈ξv̂⌉ and Σ̂² = ⌈ξ²g/2n⌉ freezes the integer statistics for
+long stretches once n is large.  Legs: a cold per-slot host loop
+(``incr_reference`` / ``incr_pallas_interpret``), the exact-key solve
+cache (``incr_reference_cached``, bit-exact-gated, cleared at the start
+of every timed replay so hits come from WITHIN-trace structure only), a
+quantized bounded-staleness cache (``incr_reference_cached_q`` — NOT
+exact; records ``utility_gap_mean``/``utility_gap_max``, the relative
+eq.-17 score loss of its solutions under the true statistics), the
+warm-started reference path (``incr_reference_warm``) and the segmented
+carried-plane Pallas driver (``incr_pallas_interpret_warm``).  Each
+record carries ``cache_hit_rate`` / ``edge_skip_rate``, ``per_slot_ms``,
+and ``speedup_vs_cold`` (the acceptance bound: the exact incremental
+legs are ≥ 2× over their cold loop on the full-size trace).
 """
 from __future__ import annotations
 
@@ -74,8 +94,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import stats as stats_mod
 from repro.core.dp import build_tables, solve_budgeted_dp
-from repro.core.solvers import get_solver
+from repro.core.incremental import solve_budgeted_dp_warm, warm_carry_init
+from repro.core.solvers import CachedSolver, get_solver
+from repro.kernels.budgeted_dp.ops import WarmPallasSolver
 from repro.kernels.budgeted_dp.kernel import (
     NEG, VMEM_BUDGET_BYTES, batched_modeled_hbm_bytes, choose_tiling,
     dp_forward_pallas, modeled_hbm_bytes, unblocked_vmem_bytes)
@@ -96,7 +119,7 @@ CONFIGS = [
     {"name": "E40_K3", "E": 40, "c_rand": (3, 2), "u_hi": 6},
     {"name": "E64_K3", "E": 64, "c_rand": (3, 3), "u_hi": 8},
     {"name": "E16_C512", "E": 16, "c": (7, 7, 7), "u_hi": 3,
-     "batch": (8, 64)},
+     "batch": (8, 64), "incremental": True},
     {"name": "E16_C1024", "E": 16, "c": (3, 15, 15), "u_hi": 3},
     {"name": "E16_C4096", "E": 16, "c": (7, 7, 7, 7), "u_hi": 2,
      "block": (8, None, 1024)},  # off_max ≈ 585 (stride of the 4th resource
@@ -117,7 +140,7 @@ def _make_problem(cfg: dict, seed: int = 0):
         c = np.asarray(cfg["c"], np.int64)
         K = c.shape[0]
         A = rng.integers(0, 2, (K, E))
-        A[:, A.sum(axis=0) == 0] = 1         # no all-zero demand columns
+        A[:, A.sum(axis=0) == 0] = 1  # no all-zero demand columns
     else:
         K, c_hi = cfg["c_rand"]
         A = rng.integers(1, 3, (K, E))
@@ -145,7 +168,7 @@ def host_fingerprint() -> dict:
 
 def _timed(call, runs: int) -> dict:
     t0 = time.perf_counter()
-    call()                                   # warmup: trace + compile
+    call()  # warmup: trace + compile
     warmup_ms = (time.perf_counter() - t0) * 1e3
     samples = []
     for _ in range(runs):
@@ -176,9 +199,18 @@ def _time_solver(solver, ups, sig, tables, s_cap, runs: int, u_max: int):
     return _timed(call, runs)
 
 
-def _time_forward(ups, sig, tables, s_cap, runs: int, interpret: bool,
-                  u_max: int, block_c: int | None = None,
-                  block_s: int | None = None, block_e: int | None = None):
+def _time_forward(
+    ups,
+    sig,
+    tables,
+    s_cap,
+    runs: int,
+    interpret: bool,
+    u_max: int,
+    block_c: int | None = None,
+    block_s: int | None = None,
+    block_e: int | None = None,
+):
     """The DP forward kernel alone — the kernel side of the
     kernel-vs-wrapper split (mean_ms − forward_ms ≈ s*-rule + backtrack)."""
     feas, offs = prepare_tables(tables)
@@ -196,17 +228,27 @@ def _time_forward(ups, sig, tables, s_cap, runs: int, interpret: bool,
     return _timed(call, runs)
 
 
-def _hbm_model(tables, s_cap: int, E: int, u_max: int,
-               block_e, block_s, block_c) -> int:
+def _hbm_model(
+    tables, s_cap: int, E: int, u_max: int, block_e, block_s, block_c
+) -> int:
     """Modeled HBM bytes streamed by one forward solve under a tiling."""
     _, offs = prepare_tables(tables)
     return modeled_hbm_bytes(s_cap + 1, tables.n_states, E, u_max,
                              int(offs.max()), block_e, block_s, block_c)
 
 
-def _verify_blocked_bitexact(ups, sig, tables, s_cap, u_max: int,
-                             block_s, block_c, interpret: bool,
-                             block_e=None, ref=None) -> None:
+def _verify_blocked_bitexact(
+    ups,
+    sig,
+    tables,
+    s_cap,
+    u_max: int,
+    block_s,
+    block_c,
+    interpret: bool,
+    block_e=None,
+    ref=None,
+) -> None:
     """Acceptance contract for the blocked/tiled/fused legs: x, s*, and
     the feasibility-normalized value row are bit-exact vs the reference
     backend.  Raises on any mismatch — a wrong kernel must fail the
@@ -228,8 +270,16 @@ def _verify_blocked_bitexact(ups, sig, tables, s_cap, u_max: int,
                                   row_t[row_t >= 0].astype(np.int64))
 
 
-def _bench_batched(point: dict, cfg: dict, tables, s_cap: int, u_max: int,
-                   runs: int, platform: str, B: int) -> None:
+def _bench_batched(
+    point: dict,
+    cfg: dict,
+    tables,
+    s_cap: int,
+    u_max: int,
+    runs: int,
+    platform: str,
+    B: int,
+) -> None:
     """The fleet-batched legs for one batch size B: batched megakernel vs
     conventionally-vmapped vs launch-loop baselines, all on the SAME
     heterogeneous fleet, all bit-exact-gated before timing."""
@@ -308,7 +358,213 @@ def _bench_batched(point: dict, cfg: dict, tables, s_cap: int, u_max: int,
         point["backends"][f"{tag}_{leg}_B{B}"] = rec
 
 
-def bench(configs, runs: int) -> dict:
+def _record_drift_trace(
+    E: int, tables, s_cap: int, slots: int, seed: int = 7, t0: int = 200_000
+):
+    """A recorded post-exploration slot trace with HONEST drift structure.
+
+    Statistics come from the paper's sampling model, not a synthetic
+    mutation schedule: at slot i the scaled (Υ̂, Σ̂², s_limit) are
+    ``stats.scale_statistics(v̂, n, t₀+i, m)``, and (v̂, n) then evolve
+    ONLY on the edges the (exact, reference) solve dispatches — a running
+    mean over fresh speed samples and a visit-count increment.  With n in
+    the hundreds and t₀ ≫ 1 the ceilings freeze the integer statistics
+    for long stretches, which is precisely the repeat structure the
+    incremental layers exploit.  Eligibility is near-saturated (a single
+    random dropout on ~10% of slots) — the heavy-load regime.
+
+    Returns (trace, cold_out, m, u_max): per-slot concrete inputs, the
+    cold reference outputs (the bit-exact gate for every incremental
+    leg), the server count m sized so ξ(t_end)·m fits the config's
+    budget axis, and the tight Υ̂ bound for the Pallas legs.
+    """
+    rng = np.random.default_rng(seed)
+    t_end = float(t0 + slots)
+    m = 0
+    while int(stats_mod.xi_of(jnp.float32(t_end), m + 1)) * (m + 1) <= s_cap:
+        m += 1
+    if m == 0:
+        return None, None, 0, 0
+    u_max = int(stats_mod.xi_of(jnp.float32(t_end), m)) + 1
+
+    mu = rng.uniform(0.2, 1.0, E)
+    vhat = np.clip(mu + rng.normal(0, 0.02, E), 0.0, 1.0)
+    n = rng.integers(200, 800, E).astype(np.int64)
+
+    ref = get_solver("reference")
+    fn = jax.jit(lambda u, s, lim, a: ref(u, s, tables, s_cap, lim,
+                                          allowed=a))
+    trace, cold_out = [], []
+    for i in range(slots):
+        ups, sig, _, s_limit = stats_mod.scale_statistics(
+            jnp.asarray(vhat, jnp.float32), jnp.asarray(n, jnp.int32),
+            jnp.float32(t0 + i), m)
+        ups, sig = np.asarray(ups, np.int32), np.asarray(sig, np.int32)
+        lim = min(int(s_limit), s_cap)
+        alw = np.ones(E, bool)
+        if rng.random() < 0.1:
+            alw[rng.integers(0, E)] = False
+        x, info = fn(jnp.asarray(ups), jnp.asarray(sig), jnp.int32(lim),
+                     jnp.asarray(alw))
+        x = np.asarray(x)
+        trace.append((ups, sig, alw, lim))
+        cold_out.append((x, int(info["s_star"]),
+                         np.asarray(info["value_row"])))
+        for e in np.flatnonzero(x):  # (v̂, n) drift on dispatch only
+            v = float(np.clip(rng.normal(mu[e], 0.05), 0.0, 1.0))
+            vhat[e] = (vhat[e] * n[e] + v) / (n[e] + 1)
+            n[e] += 1
+    return trace, cold_out, m, u_max
+
+
+def _eq17_score(x, ups, sig, s_limit) -> float:
+    """The eq.-17 objective a concrete solution realizes under the TRUE
+    statistics — the utility meter for the approximate cache leg."""
+    s = min(int(ups @ x), int(s_limit))
+    return s + float(np.sqrt(max(int(sig @ x), 0)))
+
+
+def _bench_incremental(
+    point: dict, cfg: dict, tables, s_cap: int, runs: int, platform: str, slots: int
+) -> None:
+    """The cross-slot incremental legs over one recorded drift trace."""
+    E = cfg["E"]
+    trace, cold_out, m, u_max = _record_drift_trace(E, tables, s_cap, slots)
+    if trace is None:
+        point["incremental"] = {"skipped": "budget axis too small for the "
+                                           "sampling model (m=0)"}
+        return
+    point["incremental"] = {"slots": slots, "m": m, "t0": 200_000,
+                            "u_max": u_max}
+    interpret = platform != "tpu"
+    pal_tag = "pallas_interpret" if interpret else "pallas"
+    ref, pal = get_solver("reference"), get_solver(
+        "pallas_interpret" if interpret else "pallas")
+
+    def gate(outs, leg):
+        """Bit-exact acceptance vs the recorded cold reference outputs."""
+        for i, ((x, s_star, row), (xc, sc, rowc)) in enumerate(
+                zip(outs, cold_out)):
+            np.testing.assert_array_equal(np.asarray(x), xc,
+                                          err_msg=f"{leg} slot {i}")
+            assert int(s_star) == sc, (leg, i)
+            np.testing.assert_array_equal(np.asarray(row), rowc,
+                                          err_msg=f"{leg} slot {i}")
+
+    def loop_solver(solver):
+        fn = jax.jit(lambda u, s, lim, a: solver(u, s, tables, s_cap, lim,
+                                                 allowed=a, u_max=u_max))
+
+        def run():
+            out = []
+            for u, s, a, lim in trace:
+                x, info = fn(jnp.asarray(u), jnp.asarray(s), jnp.int32(lim),
+                             jnp.asarray(a))
+                jax.block_until_ready(x)
+                out.append((x, info["s_star"], info["value_row"]))
+            return out
+
+        return run
+
+    recs = {}
+
+    # cold per-slot host loops: the speedup denominators
+    run_ref_cold = loop_solver(ref)
+    recs["incr_reference"] = _timed(run_ref_cold, runs)
+    run_pal_cold = loop_solver(pal)
+    gate(run_pal_cold(), f"incr_{pal_tag}")
+    recs[f"incr_{pal_tag}"] = _timed(run_pal_cold, runs)
+    recs[f"incr_{pal_tag}"]["bitexact_vs_cold"] = True
+
+    # exact-key solve cache: cleared per replay — hits are within-trace
+    cached = CachedSolver(ref)
+
+    def run_cached():
+        cached.cache.clear()
+        return [cached(u, s, tables, s_cap, int(lim), allowed=a,
+                       u_max=u_max) + (None,)
+                for u, s, a, lim in trace]
+
+    gate([(x, info["s_star"], info["value_row"])
+          for x, info, _ in run_cached()], "incr_reference_cached")
+    hit_rate = cached.stats.hit_rate
+    rec = _timed(run_cached, runs)
+    rec.update(cache_hit_rate=hit_rate, exact=True, bitexact_vs_cold=True)
+    recs["incr_reference_cached"] = rec
+
+    # quantized bounded-staleness cache: NOT exact — measure the utility
+    # gap of its solutions under the true per-slot statistics
+    cached_q = CachedSolver(ref, q_ups=2, q_sig=64, max_stale=2 * slots)
+
+    def run_cached_q():
+        cached_q.cache.clear()
+        return [cached_q(u, s, tables, s_cap, int(lim), allowed=a,
+                         u_max=u_max)
+                for u, s, a, lim in trace]
+
+    gaps = []
+    for (x, _), (u, s, a, lim), (xc, _, _) in zip(run_cached_q(), trace,
+                                                  cold_out):
+        best = _eq17_score(xc, u, s, lim)
+        gaps.append((best - _eq17_score(np.asarray(x), u, s, lim))
+                    / max(best, 1.0))
+    rec = _timed(run_cached_q, runs)
+    rec.update(cache_hit_rate=cached_q.stats.hit_rate, exact=False,
+               q_ups=2, q_sig=64,
+               utility_gap_mean=float(np.mean(gaps)),
+               utility_gap_max=float(np.max(gaps)))
+    recs["incr_reference_cached_q"] = rec
+
+    # warm-started reference: carry re-initialized per replay
+    wfn = jax.jit(lambda u, s, lim, a, cr: solve_budgeted_dp_warm(
+        u, s, tables, s_cap, lim, cr, allowed=a))
+
+    def run_warm_ref():
+        cr = warm_carry_init(E, s_cap, tables.n_states)
+        out, folded = [], 0
+        for u, s, a, lim in trace:
+            x, info, cr = wfn(jnp.asarray(u), jnp.asarray(s),
+                              jnp.int32(lim), jnp.asarray(a), cr)
+            jax.block_until_ready(x)
+            folded += int(info["edges_folded"])
+            out.append((x, info["s_star"], info["value_row"]))
+        return out, folded
+
+    out, folded = run_warm_ref()
+    gate(out, "incr_reference_warm")
+    rec = _timed(lambda: run_warm_ref(), runs)
+    rec.update(edge_skip_rate=1.0 - folded / (len(trace) * E), exact=True,
+               bitexact_vs_cold=True)
+    recs["incr_reference_warm"] = rec
+
+    # segmented carried-plane Pallas driver: reset per replay
+    warm_pal = WarmPallasSolver(tables, s_cap, u_max=u_max,
+                                interpret=interpret)
+
+    def run_warm_pal():
+        warm_pal.reset()
+        return [warm_pal(u, s, tables, s_cap, lim, allowed=a)
+                for u, s, a, lim in trace]
+
+    gate([(x, info["s_star"], info["value_row"])
+          for x, info in run_warm_pal()], f"incr_{pal_tag}_warm")
+    rec = _timed(run_warm_pal, runs)
+    rec.update(edge_skip_rate=warm_pal.skip_rate, exact=True,
+               bitexact_vs_cold=True)
+    recs[f"incr_{pal_tag}_warm"] = rec
+
+    for leg, rec in recs.items():
+        rec["slots"] = slots
+        rec["per_slot_ms"] = rec["mean_ms"] / slots
+        cold = ("incr_reference" if leg.startswith("incr_reference")
+                else f"incr_{pal_tag}")
+        if leg != cold:
+            rec["speedup_vs_cold"] = (recs[cold]["mean_ms"]
+                                      / rec["mean_ms"])
+        point["backends"][leg] = rec
+
+
+def bench(configs, runs: int, incr_slots: int = 120) -> dict:
     platform = jax.default_backend()
     backends = ["reference", "pallas_interpret", "pallas"]
     records = []
@@ -420,6 +676,9 @@ def bench(configs, runs: int) -> dict:
         for B in cfg.get("batch", ()):
             _bench_batched(point, cfg, tables, s_cap, u_max, runs,
                            platform, B)
+        if cfg.get("incremental"):
+            _bench_incremental(point, cfg, tables, s_cap, runs, platform,
+                               incr_slots)
         records.append(point)
         print(f"{cfg['name']}: E={cfg['E']} C={C} "
               f"S={S}: " + "  ".join(
@@ -437,8 +696,7 @@ def _guard_ms(rec: dict):
     return rec.get("mean_ms", rec.get("forward_ms"))
 
 
-def check_baseline(result: dict, base: dict,
-                   max_regression: float) -> list[str]:
+def check_baseline(result: dict, base: dict, max_regression: float) -> list[str]:
     """Compare per-config/backend timings against a committed baseline.
 
     Keyed on (E, n_states, S, backend) so baselines written before configs
@@ -474,8 +732,9 @@ def fingerprints_match(result: dict, base: dict) -> bool:
     return bool(fresh and committed and fresh == committed)
 
 
-def apply_baseline_guard(result: dict, base: dict, baseline_path: str,
-                         max_regression: float, failures: list) -> None:
+def apply_baseline_guard(
+    result: dict, base: dict, baseline_path: str, max_regression: float, failures: list
+) -> None:
     """Shared guard epilogue (dp_bench and scenarios_bench): fail the run
     on regressions within one machine class, warn when the host
     fingerprint differs (absolute wall-clock is not comparable across
@@ -509,7 +768,7 @@ def main() -> None:
     args = ap.parse_args()
     configs = ([c for c in CONFIGS if c["name"] in SMOKE_NAMES]
                if args.smoke else CONFIGS)
-    if args.smoke:       # CI sizes: keep only the B=8 fleet leg
+    if args.smoke:  # CI sizes: keep only the B=8 fleet leg
         configs = [dict(c, batch=tuple(b for b in c["batch"] if b == 8))
                    if "batch" in c else c for c in configs]
     # read the baseline up front: --out may legitimately overwrite it
@@ -522,7 +781,8 @@ def main() -> None:
                      f"--runs 30 --out {bpath}")
         base = json.loads(bpath.read_text())
     out = bench(configs,
-                max(1, args.runs if not args.smoke else min(args.runs, 3)))
+                max(1, args.runs if not args.smoke else min(args.runs, 3)),
+                incr_slots=32 if args.smoke else 120)
     path = pathlib.Path(args.out)
     path.parent.mkdir(parents=True, exist_ok=True)
     path.write_text(json.dumps(out, indent=2))

@@ -5,6 +5,9 @@ Public API:
   build_tables / solve_budgeted_dp      — Algorithm 2 (budgeted DP, reference)
   get_solver / resolve_solver / Solver  — pluggable Algorithm-2 backends
                                           (reference | pallas | auto)
+  CachedSolver / SolveCache             — quantized-statistics solve cache
+  solve_budgeted_dp_warm / WarmCarry    — warm-started (checkpoint-resumed)
+                                          re-solves across slots
   make_esdp_policy / esdp_factory       — Algorithm 1 (ESDP)
   make_hswf_policy / make_lcf_policy / make_lwtf_policy — paper baselines
   hswf_factory / lcf_factory / lwtf_factory — sweep-consumable constructors
@@ -19,13 +22,18 @@ from .env import (Scenario, SimResult, default_scenario, simulate,
                   simulate_batch, simulate_grid)
 from .esdp import Policy, PolicyFactory, esdp_factory, make_esdp_policy
 from .graph import Instance, generate_instance
-from .solvers import SOLVER_NAMES, Solver, get_solver, resolve_solver
+from .incremental import (CacheStats, SolveCache, WarmCarry,
+                          solve_budgeted_dp_warm, warm_carry_init)
+from .solvers import (SOLVER_NAMES, CachedSolver, Solver, get_solver,
+                      resolve_solver)
 from . import stats
 
 __all__ = [
     "Instance", "generate_instance",
     "DPTables", "build_tables", "solve_budgeted_dp", "oracle_knapsack",
     "SOLVER_NAMES", "Solver", "get_solver", "resolve_solver",
+    "CachedSolver", "SolveCache", "CacheStats",
+    "WarmCarry", "warm_carry_init", "solve_budgeted_dp_warm",
     "Policy", "PolicyFactory", "make_esdp_policy", "esdp_factory",
     "make_hswf_policy", "make_lcf_policy", "make_lwtf_policy",
     "hswf_factory", "lcf_factory", "lwtf_factory",

@@ -33,9 +33,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["DPTables", "build_tables", "solve_budgeted_dp", "oracle_knapsack"]
+__all__ = ["DPTables", "build_tables", "solve_budgeted_dp", "oracle_knapsack",
+           "dp_edge_fold", "initial_plane"]
 
-NEG = jnp.int32(-(2**29))        # -inf sentinel; NEG + max Σ̂² never overflows
+NEG = jnp.int32(-(2**29))  # -inf sentinel; NEG + max Σ̂² never overflows
 FNEG = jnp.float32(-1e30)
 
 
@@ -54,14 +55,14 @@ class DPTables:
     tensor.  ``build_tables`` validates the identity on every feasible pair.
     """
 
-    feasible: np.ndarray     # (n_states, E) bool — A_{:,e} ≤ capacity(state)
-    next_state: np.ndarray   # (n_states, E) int32 — state after taking edge e
+    feasible: np.ndarray  # (n_states, E) bool — A_{:,e} ≤ capacity(state)
+    next_state: np.ndarray  # (n_states, E) int32 — state after taking edge e
     n_states: int
-    full_state: int          # encoding of the full capacity vector c
-    radices: np.ndarray      # (K,) int32 — c_k + 1
+    full_state: int  # encoding of the full capacity vector c
+    radices: np.ndarray  # (K,) int32 — c_k + 1
     cap_of_state: np.ndarray  # (n_states, K) int32 — decoded capacity vectors
-    strides: np.ndarray      # (K,) int64 — mixed-radix strides of the encoding
-    offsets: np.ndarray      # (E,) int32 — Σ_k A[k,e]·strides[k] (see above)
+    strides: np.ndarray  # (K,) int64 — mixed-radix strides of the encoding
+    offsets: np.ndarray  # (E,) int32 — Σ_k A[k,e]·strides[k] (see above)
 
 
 def build_tables(A: np.ndarray, c: np.ndarray) -> DPTables:
@@ -96,14 +97,14 @@ def build_tables(A: np.ndarray, c: np.ndarray) -> DPTables:
         cap[:, k] = (rem // stride) % radices[k]
         stride *= radices[k]
 
-    feasible = np.all(cap[:, None, :] >= A.T[None, :, :], axis=2)   # (n_states, E)
-    nxt_cap = np.maximum(cap[:, None, :] - A.T[None, :, :], 0)       # (n_states, E, K)
+    feasible = np.all(cap[:, None, :] >= A.T[None, :, :], axis=2)  # (n_states, E)
+    nxt_cap = np.maximum(cap[:, None, :] - A.T[None, :, :], 0)  # (n_states, E, K)
     next_state = (nxt_cap * strides[None, None, :]).sum(axis=2)
     next_state = np.where(feasible, next_state, 0).astype(np.int32)
 
     # per-edge transition offsets: next(c) = c - offset_e on feasible states
-    offsets = (A.T * strides[None, :]).sum(axis=1)                   # (E,)
-    expect = ids[:, None] - offsets[None, :]                         # (n_states, E)
+    offsets = (A.T * strides[None, :]).sum(axis=1)  # (E,)
+    expect = ids[:, None] - offsets[None, :]  # (n_states, E)
     if not np.array_equal(next_state[feasible],
                           expect.astype(np.int32)[feasible]):
         raise AssertionError(
@@ -124,33 +125,50 @@ def build_tables(A: np.ndarray, c: np.ndarray) -> DPTables:
     )
 
 
-def _dp_forward(upsilon, sigma2, feasible, next_state, s_cap: int):
+def dp_edge_fold(V, ups, sig, feas_col, next_col, rows):
+    """ONE fold step of the layered DP (plane refresh for a single edge).
+
+    The body shared — verbatim — by the reference scan below and the
+    warm-resume path (``core.incremental``): identical ops on identical
+    int32 inputs is what makes a checkpointed resume bitwise-identical to
+    a cold solve.  ``rows`` is ``arange(S)`` (hoisted by callers).
+    """
+    shifted = V[jnp.maximum(rows - ups, 0), :]  # s' = max(s-Υ̂_e, 0)
+    take = jnp.take(shifted, next_col, axis=1) + sig  # capacity gather
+    take = jnp.where(feas_col[None, :], take, NEG)
+    decision = take > V  # strict ⇒ ties keep x_e=0
+    return jnp.maximum(V, take), decision
+
+
+def initial_plane(s_cap: int, n_states: int):
+    """The cold-start DP plane: 0 at s = 0, NEG elsewhere."""
+    return jnp.full((s_cap + 1, n_states), NEG, dtype=jnp.int32).at[0, :].set(0)
+
+
+def _dp_forward(upsilon, sigma2, feasible, next_state, s_cap: int, v0=None):
     """Run the layered DP; returns (V at i=0, decision bits per edge).
 
     decisions[j] corresponds to edge e = E-1-j (the scan walks i downward).
+    ``v0`` optionally seeds the value plane (the carried-plane hook the
+    incremental layer resumes from); ``None`` is the cold start.
     """
-    E = upsilon.shape[0]
-    n_states = feasible.shape[0]
     S = s_cap + 1
     rows = jnp.arange(S, dtype=jnp.int32)
-
-    V0 = jnp.full((S, n_states), NEG, dtype=jnp.int32).at[0, :].set(0)
+    if v0 is None:
+        v0 = initial_plane(s_cap, feasible.shape[0])
 
     def body(V, inputs):
         ups, sig, feas_e, next_e = inputs
-        shifted = V[jnp.maximum(rows - ups, 0), :]          # s' = max(s-Υ̂_e, 0)
-        take = jnp.take(shifted, next_e, axis=1) + sig      # capacity gather
-        take = jnp.where(feas_e[None, :], take, NEG)
-        decision = take > V                                 # strict ⇒ ties keep x_e=0
-        return jnp.maximum(V, take), decision
+        return dp_edge_fold(V, ups, sig, feas_e, next_e, rows)
 
     xs = (upsilon[::-1], sigma2[::-1], feasible[:, ::-1].T, next_state[:, ::-1].T)
-    V_final, decisions = jax.lax.scan(body, V0, xs)
+    V_final, decisions = jax.lax.scan(body, v0, xs)
     return V_final, decisions
 
 
-def solve_budgeted_dp(upsilon, sigma2, tables: DPTables, s_cap: int, s_limit,
-                      allowed=None):
+def solve_budgeted_dp(
+    upsilon, sigma2, tables: DPTables, s_cap: int, s_limit, allowed=None
+):
     """Solve {P4(s,t)}_{s∈S(t)} and apply the s*-selection rule (eq. 17).
 
     Args:
@@ -175,7 +193,7 @@ def solve_budgeted_dp(upsilon, sigma2, tables: DPTables, s_cap: int, s_limit,
 
     V, decisions = _dp_forward(upsilon, sigma2, feasible, next_state, s_cap)
 
-    v_row = V[:, tables.full_state]                          # (S,)
+    v_row = V[:, tables.full_state]  # (S,)
     s_vals = jnp.arange(s_cap + 1, dtype=jnp.int32)
     # feasible ⇔ value ≥ 0: Σ̂² ≥ 0 so reachable values are non-negative,
     # while NEG-seeded chains stay < 0 for any partial sum < 2²⁹ (same

@@ -48,7 +48,7 @@ __all__ = [
 _SCENARIO_SALT = 0x5CE
 
 
-@dataclasses.dataclass(frozen=True, eq=False)   # identity hash — jit-static-safe
+@dataclasses.dataclass(frozen=True, eq=False)  # identity hash — jit-static-safe
 class Scenario:
     """A named generative regime for arrivals and processing speeds.
 
@@ -130,10 +130,13 @@ class SimResult:
     batch axes — (S, T) for ``simulate_batch``, (G, S, T) for parameter
     grids — with all derived quantities accumulating along the last axis."""
 
-    sw: np.ndarray            # (..., T) realized social welfare per slot
-    sw_oracle: np.ndarray     # (..., T) oracle expected welfare ṽᵀx*(t)
-    regret: np.ndarray        # (..., T) ṽᵀx*(t) − ṽᵀx(t)  (expected per-slot gap)
+    sw: np.ndarray  # (..., T) realized social welfare per slot
+    sw_oracle: np.ndarray  # (..., T) oracle expected welfare ṽᵀx*(t)
+    regret: np.ndarray  # (..., T) ṽᵀx*(t) − ṽᵀx(t)  (expected per-slot gap)
     n_dispatched: np.ndarray  # (..., T) ‖x(t)‖₁
+    # final policy state (numpy pytree, batch axes as above) — e.g. the
+    # incremental-solve counters that Policy.finalize turns into stats
+    policy_final: Any = None
 
     @property
     def asw(self) -> np.ndarray:
@@ -144,8 +147,16 @@ class SimResult:
         return np.cumsum(self.regret, axis=-1)
 
 
-def _run_impl(policy: Policy, T: int, tables: DPTables, scenario: Scenario,
-              n_servers: int, arrays, key, scn_params):
+def _run_impl(
+    policy: Policy,
+    T: int,
+    tables: DPTables,
+    scenario: Scenario,
+    n_servers: int,
+    arrays,
+    key,
+    scn_params,
+):
     v_true, mu, sigma, cost, rho, port, server = arrays
     E = v_true.shape[0]
     L = rho.shape[0]
@@ -168,16 +179,16 @@ def _run_impl(policy: Policy, T: int, tables: DPTables, scenario: Scenario,
         vhat = jnp.where(n > 0, sumz / jnp.maximum(n, 1).astype(jnp.float32), 0.0)
         x, pstate = policy.step(pstate, t.astype(jnp.float32), eligible,
                                 arrived, vhat, n, k_pol)
-        x = x * eligible.astype(jnp.int32)                 # constraint (2)
+        x = x * eligible.astype(jnp.int32)  # constraint (2)
 
         xf = x.astype(jnp.float32)
-        sw = jnp.sum(xf * z)                               # realized SW (eq. 4)
-        if scenario.fluctuates:                            # static branch
+        sw = jnp.sum(xf * z)  # realized SW (eq. 4)
+        if scenario.fluctuates:  # static branch
             v_t = _clipped_normal_mean_jnp(mean_e, sigma)
         else:
             v_t = v_true
         x_star, sw_star = oracle_knapsack(v_t, tables, eligible)
-        regret = sw_star - jnp.sum(xf * v_t)               # expected gap (eq. 5)
+        regret = sw_star - jnp.sum(xf * v_t)  # expected gap (eq. 5)
 
         n = n + x
         sumz = sumz + xf * z
@@ -186,8 +197,8 @@ def _run_impl(policy: Policy, T: int, tables: DPTables, scenario: Scenario,
     carry0 = (jnp.zeros(E, jnp.int32), jnp.zeros(E, jnp.float32),
               policy.init(), scn_state0, key)
     ts = jnp.arange(1, T + 1)
-    _, (sw, sw_star, regret, nd) = jax.lax.scan(slot, carry0, ts)
-    return sw, sw_star, regret, nd
+    carry, (sw, sw_star, regret, nd) = jax.lax.scan(slot, carry0, ts)
+    return (sw, sw_star, regret, nd), carry[2]  # traces + final policy state
 
 
 _STATIC = ("policy", "T", "tables", "scenario", "n_servers")
@@ -196,8 +207,7 @@ _run = functools.partial(jax.jit, static_argnames=_STATIC)(_run_impl)
 
 
 @functools.partial(jax.jit, static_argnames=_STATIC)
-def _run_batch(policy, T, tables, scenario, n_servers, arrays, keys,
-               scn_params):
+def _run_batch(policy, T, tables, scenario, n_servers, arrays, keys, scn_params):
     """One jitted call: vmap the whole horizon scan over a seed batch."""
     return jax.vmap(
         lambda k: _run_impl(policy, T, tables, scenario, n_servers, arrays, k,
@@ -205,8 +215,9 @@ def _run_batch(policy, T, tables, scenario, n_servers, arrays, keys,
 
 
 @functools.partial(jax.jit, static_argnames=_STATIC)
-def _run_param_grid(policy, T, tables, scenario, n_servers, arrays, keys,
-                    stacked_params):
+def _run_param_grid(
+    policy, T, tables, scenario, n_servers, arrays, keys, stacked_params
+):
     """lax.map over a stacked scenario-parameter grid of vmapped seed
     batches — one compilation covers the whole (grid × seeds) sweep."""
     def one(params):
@@ -234,25 +245,37 @@ def _scenario_args(instance, tables, scenario):
     return tables, scenario, params
 
 
-def simulate(instance: Instance, policy: Policy, T: int, seed: int = 0,
-             tables: DPTables | None = None,
-             scenario: Scenario | None = None) -> SimResult:
+def simulate(
+    instance: Instance,
+    policy: Policy,
+    T: int,
+    seed: int = 0,
+    tables: DPTables | None = None,
+    scenario: Scenario | None = None,
+) -> SimResult:
     """Run one policy for T slots; identical seeds ⇒ identical arrival and
     valuation streams across policies (paired comparison, as in the paper).
     ``scenario=None`` uses the paper's iid baseline regime."""
     tables, scenario, params = _scenario_args(instance, tables, scenario)
     key = jax.random.PRNGKey(seed)
-    sw, sw_star, regret, nd = _run(policy, T, tables, scenario,
-                                   instance.n_servers,
-                                   _instance_arrays(instance), key, params)
+    (sw, sw_star, regret, nd), pfinal = _run(
+        policy, T, tables, scenario, instance.n_servers,
+        _instance_arrays(instance), key, params)
     return SimResult(
         sw=np.asarray(sw), sw_oracle=np.asarray(sw_star),
-        regret=np.asarray(regret), n_dispatched=np.asarray(nd))
+        regret=np.asarray(regret), n_dispatched=np.asarray(nd),
+        policy_final=jax.tree.map(np.asarray, pfinal))
 
 
-def simulate_grid(instance: Instance, policy: Policy, T: int, seeds,
-                  scenario: Scenario, stacked_params,
-                  tables: DPTables | None = None) -> SimResult:
+def simulate_grid(
+    instance: Instance,
+    policy: Policy,
+    T: int,
+    seeds,
+    scenario: Scenario,
+    stacked_params,
+    tables: DPTables | None = None,
+) -> SimResult:
     """Sweep a scenario-parameter grid in one jitted call: ``lax.map`` over
     the stacked parameter axis wrapping the vmapped seed batch.
 
@@ -265,18 +288,23 @@ def simulate_grid(instance: Instance, policy: Policy, T: int, seeds,
         tables = build_tables(instance.A, instance.c)
     stacked = jax.tree.map(jnp.asarray, stacked_params)
     keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
-    sw, sw_star, regret, nd = _run_param_grid(policy, T, tables, scenario,
-                                              instance.n_servers,
-                                              _instance_arrays(instance),
-                                              keys, stacked)
+    (sw, sw_star, regret, nd), pfinal = _run_param_grid(
+        policy, T, tables, scenario, instance.n_servers,
+        _instance_arrays(instance), keys, stacked)
     return SimResult(
         sw=np.asarray(sw), sw_oracle=np.asarray(sw_star),
-        regret=np.asarray(regret), n_dispatched=np.asarray(nd))
+        regret=np.asarray(regret), n_dispatched=np.asarray(nd),
+        policy_final=jax.tree.map(np.asarray, pfinal))
 
 
-def simulate_batch(instance: Instance, policy: Policy, T: int, seeds,
-                   tables: DPTables | None = None,
-                   scenario: Scenario | None = None) -> SimResult:
+def simulate_batch(
+    instance: Instance,
+    policy: Policy,
+    T: int,
+    seeds,
+    tables: DPTables | None = None,
+    scenario: Scenario | None = None,
+) -> SimResult:
     """Vectorized ``simulate`` over a seed batch: one jitted vmapped call.
 
     Returns a SimResult whose arrays have shape (len(seeds), T).  Row i is
@@ -293,10 +321,10 @@ def simulate_batch(instance: Instance, policy: Policy, T: int, seeds,
     rather than replicated per instance."""
     tables, scenario, params = _scenario_args(instance, tables, scenario)
     keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
-    sw, sw_star, regret, nd = _run_batch(policy, T, tables, scenario,
-                                         instance.n_servers,
-                                         _instance_arrays(instance), keys,
-                                         params)
+    (sw, sw_star, regret, nd), pfinal = _run_batch(
+        policy, T, tables, scenario, instance.n_servers,
+        _instance_arrays(instance), keys, params)
     return SimResult(
         sw=np.asarray(sw), sw_oracle=np.asarray(sw_star),
-        regret=np.asarray(regret), n_dispatched=np.asarray(nd))
+        regret=np.asarray(regret), n_dispatched=np.asarray(nd),
+        policy_final=jax.tree.map(np.asarray, pfinal))

@@ -11,28 +11,54 @@ The per-slot Algorithm-2 solve is pluggable: ``solver=`` names a backend
 from ``core.solvers`` ("reference" | "pallas" | "pallas_interpret" |
 "auto"/None — TPU → compiled Pallas kernel, CPU/GPU → reference scan, env
 var ``REPRO_DP_SOLVER`` overrides).  Backends are bit-exact interchangeable.
+
+Incremental re-solves (``cache=``): after the exploration phase the scaled
+statistics drift slowly, so consecutive solves are near-duplicates.  Two
+scan-carried modes exploit that WITHOUT leaving the jitted horizon scan:
+
+  ``cache="memo"`` — a 1-entry exact memo: when this slot's (Υ̂, Σ̂²,
+    eligibility, s_limit) equal the previous slot's, reuse the previous x
+    through ``lax.cond`` (a real skip under the sequential scan; under
+    ``vmap`` the cond lowers to a select — both branches run, results stay
+    bit-identical).  Works with every backend.
+  ``cache="warm"`` — carry the previous solve's checkpointed value planes
+    and re-fold only from the first changed edge
+    (``core.incremental.solve_budgeted_dp_warm``); requires the reference
+    backend (the Pallas warm path is the host-driven
+    ``kernels.budgeted_dp.ops.WarmPallasSolver``, used by
+    ``sched.dispatcher``).
+
+Both modes are bit-identical to ``cache=None`` and count their activity in
+the policy state; ``Policy.finalize`` maps the final state (returned by the
+env as ``SimResult.policy_final``) to a solve-stats dict for sweep columns.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Any, Callable
 
+import jax
 import jax.numpy as jnp
 
 from . import stats as stats_mod
 from .dp import DPTables, build_tables
 from .graph import Instance
+from .incremental import solve_budgeted_dp_warm, warm_carry_init
 from .solvers import Solver, get_solver
 
 __all__ = ["Policy", "PolicyFactory", "make_esdp_policy", "esdp_factory"]
 
+CACHE_MODES = (None, "memo", "warm")
 
-@dataclasses.dataclass(frozen=True, eq=False)   # identity hash — jit-static-safe
+
+@dataclasses.dataclass(frozen=True, eq=False)  # identity hash — jit-static-safe
 class Policy:
     name: str
     init: Callable[[], Any]
     # (state, t, eligible, arrived, vhat, n, key) -> (x, state)
     step: Callable[..., tuple]
+    # optional: final policy state (concrete) -> solve-stats dict
+    finalize: "Callable[[Any], dict] | None" = None
 
 
 # Uniform constructor signature consumed by the sweep engine
@@ -49,6 +75,8 @@ def make_esdp_policy(
     g_fn=stats_mod.g_default,
     tables: DPTables | None = None,
     solver: "str | Solver | None" = None,
+    cache: "str | None" = None,
+    cache_checkpoint_every: int = 8,
 ) -> Policy:
     """Build the ESDP policy for an instance over horizon T.
 
@@ -56,46 +84,137 @@ def make_esdp_policy(
     solve {P4(s,t)} by the DP and pick s* (Steps 4–8, Algorithm 2), then
     zero channels of ports with no arrival (Steps 9–16, constraint (2)).
     ``solver`` selects the Algorithm-2 backend (see ``core.solvers``);
-    resolution happens once, at policy-build time.
+    resolution happens once, at policy-build time.  ``cache`` selects an
+    incremental re-solve mode (``None`` | ``"memo"`` | ``"warm"``, see the
+    module docstring) — both modes are bit-identical to ``cache=None``;
+    ``cache_checkpoint_every`` is the warm path's fold-checkpoint spacing.
     """
+    if cache not in CACHE_MODES:
+        raise ValueError(
+            f"unknown cache mode {cache!r}; choose from {CACHE_MODES}")
     if tables is None:
         tables = build_tables(instance.A, instance.c)
     solve = get_solver(solver)
     m = instance.m
+    E = int(instance.A.shape[1])
     s_cap = stats_mod.s_cap_for_horizon(T, m, delta_fn)
     # tight static shift bound for the Pallas kernel scratch (Υ̂ ≤ ξ(T))
     u_max = stats_mod.u_max_for_horizon(T, m, delta_fn)
 
-    def init():
-        return ()   # all ESDP state is the shared (n, Σz̃) in the env carry
-
-    def step(state, t, eligible, arrived, vhat, n, key):
-        del arrived  # eligibility already folds in arrivals (and aliveness)
+    def scaled(vhat, n, t):
         upsilon, sigma2, _, s_limit = stats_mod.scale_statistics(
             vhat, n, t, m, g_fn=g_fn, delta_fn=delta_fn)
-        x, _ = solve(upsilon, sigma2, tables, s_cap, s_limit,
-                     allowed=eligible, u_max=u_max)
-        x = x * eligible.astype(jnp.int32)                 # Alg. 1 Steps 9–16
-        return x, state
+        return upsilon, sigma2, s_limit
 
-    return Policy(name="esdp", init=init, step=step)
+    if cache is None:
+        def init():
+            return ()  # all ESDP state is the shared (n, Σz̃) env carry
+
+        def step(state, t, eligible, arrived, vhat, n, key):
+            del arrived  # eligibility already folds in arrivals/aliveness
+            upsilon, sigma2, s_limit = scaled(vhat, n, t)
+            x, _ = solve(upsilon, sigma2, tables, s_cap, s_limit,
+                         allowed=eligible, u_max=u_max)
+            x = x * eligible.astype(jnp.int32)  # Alg.1 Steps 9–16
+            return x, state
+
+        return Policy(name="esdp", init=init, step=step)
+
+    if cache == "memo":
+        def init():
+            return (jnp.zeros(E, jnp.int32), jnp.zeros(E, jnp.int32),
+                    jnp.zeros(E, bool), jnp.int32(0),  # prev inputs
+                    jnp.zeros(E, jnp.int32),  # prev x
+                    jnp.asarray(False),  # valid
+                    jnp.int32(0), jnp.int32(0))  # hits, solves
+
+        def step(state, t, eligible, arrived, vhat, n, key):
+            del arrived
+            p_ups, p_sig, p_alw, p_slim, p_x, valid, hits, solves = state
+            upsilon, sigma2, s_limit = scaled(vhat, n, t)
+            same = (valid & jnp.all(upsilon == p_ups)
+                    & jnp.all(sigma2 == p_sig)
+                    & jnp.all(eligible == p_alw) & (s_limit == p_slim))
+
+            def hit(_):
+                return p_x
+
+            def miss(_):
+                x, _ = solve(upsilon, sigma2, tables, s_cap, s_limit,
+                             allowed=eligible, u_max=u_max)
+                return x
+
+            x = jax.lax.cond(same, hit, miss, None)
+            x = x * eligible.astype(jnp.int32)
+            state = (upsilon, sigma2, eligible, s_limit, x,
+                     jnp.asarray(True), hits + same.astype(jnp.int32),
+                     solves + 1)
+            return x, state
+
+        def finalize(final_state):
+            hits, solves = (int(final_state[6]), int(final_state[7]))
+            return {"cache_hits": hits, "cache_solves": solves,
+                    "cache_hit_rate": hits / solves if solves else 0.0}
+
+        return Policy(name="esdp", init=init, step=step, finalize=finalize)
+
+    # cache == "warm": the in-scan checkpoint-resumed reference path.  The
+    # Pallas backends launch whole kernels per solve — their warm variant
+    # is the host-driven WarmPallasSolver, which cannot live inside a scan.
+    if solve.name != "reference":
+        raise ValueError(
+            'cache="warm" carries value-plane checkpoints through the '
+            "horizon scan and is implemented for the 'reference' backend; "
+            f"got {solve.name!r}. Use cache=\"memo\" (any backend) or the "
+            "host-loop WarmPallasSolver in sched.dispatcher instead.")
+    k = int(cache_checkpoint_every)
+
+    def init():
+        return (warm_carry_init(E, s_cap, tables.n_states, k),
+                jnp.int32(0), jnp.int32(0))  # edges folded, solves
+
+    def step(state, t, eligible, arrived, vhat, n, key):
+        del arrived
+        carry, folded, solves = state
+        upsilon, sigma2, s_limit = scaled(vhat, n, t)
+        x, info, carry = solve_budgeted_dp_warm(
+            upsilon, sigma2, tables, s_cap, s_limit, carry,
+            allowed=eligible, checkpoint_every=k)
+        x = x * eligible.astype(jnp.int32)
+        return x, (carry, folded + info["edges_folded"], solves + 1)
+
+    def finalize(final_state):
+        folded, solves = int(final_state[1]), int(final_state[2])
+        total = solves * E
+        return {"edges_folded": folded, "cache_solves": solves,
+                "edge_skip_rate": 1.0 - folded / total if total else 0.0}
+
+    return Policy(name="esdp", init=init, step=step, finalize=finalize)
 
 
 def esdp_factory(**overrides) -> PolicyFactory:
     """Sweep-consumable factory: ``esdp_factory(g_fn=...)(inst, T, tables)``.
 
     ``overrides`` are forwarded to :func:`make_esdp_policy` (``delta_fn``,
-    ``g_fn``, ``solver``); the horizon and DP tables come from the sweep grid
-    point.  A ``solver=`` passed at call time (e.g. from ``SweepSpec.solver``)
-    applies unless the factory itself pinned one.
+    ``g_fn``, ``solver``, ``cache``); the horizon and DP tables come from the
+    sweep grid point.  A ``solver=``/``cache=`` passed at call time (e.g.
+    from ``SweepSpec``) applies unless the factory itself pinned one.
     """
-    def make(instance: Instance, T: int, tables: DPTables | None = None,
-             solver: "str | Solver | None" = None) -> Policy:
+    def make(
+        instance: Instance,
+        T: int,
+        tables: DPTables | None = None,
+        solver: "str | Solver | None" = None,
+        cache: "str | None" = None,
+    ) -> Policy:
         kw = dict(overrides)
         if solver is not None and "solver" not in kw:
             kw["solver"] = solver
+        if cache is not None and "cache" not in kw:
+            kw["cache"] = cache
         return make_esdp_policy(instance, T, tables=tables, **kw)
 
     make.policy_name = "esdp"
     make.accepts_solver = True
+    make.accepts_cache = True
     return make

@@ -1,0 +1,357 @@
+"""Cross-slot incremental re-solves for the per-slot Algorithm-2 DP.
+
+ESDP re-solves the budgeted DP from scratch every slot, but between slots
+only the sampled statistics (Υ̂, Σ̂²) and the eligibility mask move — and
+after the early exploration phase they move slowly, so most solves are
+near-duplicates of the previous one.  This module exploits that drift
+structure with two composable layers:
+
+**Solve cache** (:class:`SolveCache`): a host-side memo keyed on the
+quantized solve inputs ``(Υ̂ ÷ q_ups, Σ̂² ÷ q_sig, eligibility, s_limit)``.
+With the default quantum 1 the key is the EXACT inputs, so a hit returns a
+bit-identical ``(x, s_star, value_row)`` and skips the kernel launch
+entirely.  Coarser quanta trade exactness for hit rate: a hit may serve a
+solution computed for *nearby* statistics (still capacity-feasible — the
+constraint set A x ≤ c does not depend on the statistics), bounded by
+``max_stale`` cache ticks.  Consumed through
+:class:`repro.core.solvers.CachedSolver`, which preserves the backend call
+contract and ``accepts_batch``.
+
+**Warm-started value planes** (:func:`solve_budgeted_dp_warm`): a traced,
+scan-safe re-solve that carries the previous slot's fold artifacts
+(checkpointed value planes every ``checkpoint_every`` fold steps, the full
+decision tensor, and the previous inputs) and re-folds ONLY from the first
+checkpoint at or before the first changed edge.  The per-edge *delta mask*
+``changed_edge_mask`` determines the unchanged fold prefix; everything
+before it is reused verbatim.
+
+Why resume-from-checkpoint instead of "seed with the previous FINAL plane
+and keep folding"?  Re-folding an edge into a plane that already absorbed
+it double-takes the edge: with one edge (Υ̂=1, Σ̂²=10) and capacity 2, the
+final plane has V[1, c=1] = 10, and folding the same edge again yields
+V[2, c=0] = 20 — an infeasible 0/1 solution counted twice.  A checkpoint
+is a plane that has absorbed exactly the fold prefix [0, j), so resuming
+from it replays the suffix on untainted state: the warm path is
+bit-identical to a cold solve *by construction* (the differential harness
+in ``tests/test_solver_equiv.py`` enforces it anyway).
+
+Fold order: both the reference scan (``core.dp._dp_forward``) and the
+Pallas kernel process edges E-1 down to 0, so "fold step j" always means
+edge ``E-1-j`` and all cross-slot comparisons here are in FOLD order.
+The Pallas counterpart of the warm path — a host-driven segmented
+carried-plane entry reusing the kernel's ``v0`` operand — lives in
+``repro.kernels.budgeted_dp.ops.WarmPallasSolver``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dp import NEG, FNEG, DPTables, dp_edge_fold, initial_plane
+
+__all__ = [
+    "SolveCache", "CacheStats", "solve_key",
+    "WarmCarry", "warm_carry_init", "solve_budgeted_dp_warm",
+    "changed_edge_mask", "unchanged_fold_prefix",
+]
+
+
+# ---------------------------------------------------------------------------
+# quantized solve keys + the host-side cache
+# ---------------------------------------------------------------------------
+
+def solve_key(
+    upsilon, sigma2, allowed, s_limit, q_ups: int = 1, q_sig: int = 1
+) -> bytes:
+    """Deterministic cache key of one solve's dynamic inputs.
+
+    ``q_ups``/``q_sig`` floor-divide the statistics into buckets; quantum 1
+    keys the EXACT inputs.  Eligibility and ``s_limit`` are always exact —
+    quantization only ever blurs the statistics, never the constraint set.
+    Keys are compared within ONE cache (bound to one (tables, s_cap)
+    problem), so the fixed field order plus fixed per-field width make
+    distinct inputs collide-free.
+    """
+    ups = np.asarray(upsilon, np.int64) // int(q_ups)
+    sig = np.asarray(sigma2, np.int64) // int(q_sig)
+    alw = (np.ones(ups.shape, bool) if allowed is None
+           else np.asarray(allowed, bool))
+    return (np.int64(s_limit).tobytes() + ups.tobytes() + sig.tobytes()
+            + np.packbits(alw).tobytes())
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Counters of one :class:`SolveCache` (row granularity for batches)."""
+
+    hits: int = 0  # key lookups served from the cache
+    misses: int = 0  # key lookups that fell through
+    evictions: int = 0  # entries dropped by the capacity bound
+    stale_rejects: int = 0  # quantized entries refused by max_stale
+    bypasses: int = 0  # traced calls routed straight to the backend
+    launches_saved: int = 0  # backend launches skipped entirely
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def as_dict(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "stale_rejects": self.stale_rejects,
+                "bypasses": self.bypasses,
+                "launches_saved": self.launches_saved,
+                "cache_hit_rate": self.hit_rate}
+
+
+class SolveCache:
+    """Bounded host-side memo of budgeted-DP solutions.
+
+    * ``capacity`` bounds the entry count; overflow evicts LRU order
+      (lookup hits refresh recency), which is DETERMINISTIC for a given
+      call sequence — replaying the same solves yields the same
+      hit/miss/eviction trace.
+    * ``q_ups``/``q_sig`` = 1 (default) is the bit-exact EXACT-KEY mode.
+      Larger quanta give the bounded-staleness APPROXIMATE mode: nearby
+      statistics share a key, and ``max_stale`` bounds how many cache
+      ticks (see :meth:`tick` — one per solve slot) an entry may serve
+      after insertion before it is refused and refreshed.
+    * ``exact`` tells consumers which contract they get; approximate mode
+      must never be silently treated as bit-exact (the bench reports its
+      utility gap instead).
+    """
+
+    def __init__(
+        self,
+        capacity: int = 512,
+        q_ups: int = 1,
+        q_sig: int = 1,
+        max_stale: "int | None" = None,
+    ):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        if q_ups < 1 or q_sig < 1:
+            raise ValueError("quantization quanta must be >= 1")
+        self.capacity = int(capacity)
+        self.q_ups = int(q_ups)
+        self.q_sig = int(q_sig)
+        self.max_stale = max_stale
+        self.stats = CacheStats()
+        self._entries: "collections.OrderedDict[bytes, tuple[int, Any]]" = (
+            collections.OrderedDict())
+        self._tick = 0
+
+    @property
+    def exact(self) -> bool:
+        return self.q_ups == 1 and self.q_sig == 1
+
+    def key(self, upsilon, sigma2, allowed, s_limit) -> bytes:
+        return solve_key(upsilon, sigma2, allowed, s_limit,
+                         q_ups=self.q_ups, q_sig=self.q_sig)
+
+    def tick(self) -> None:
+        """Advance the staleness clock — call once per solve slot."""
+        self._tick += 1
+
+    def get(self, key: bytes):
+        ent = self._entries.get(key)
+        if ent is None:
+            self.stats.misses += 1
+            return None
+        born, value = ent
+        if self.max_stale is not None and self._tick - born > self.max_stale:
+            del self._entries[key]
+            self.stats.stale_rejects += 1
+            self.stats.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.stats.hits += 1
+        return value
+
+    def put(self, key: bytes, value) -> None:
+        self._entries[key] = (self._tick, value)
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.stats.evictions += 1
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.stats = CacheStats()
+        self._tick = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+# ---------------------------------------------------------------------------
+# delta mask + warm-started (checkpoint-resumed) reference solve
+# ---------------------------------------------------------------------------
+
+class WarmCarry(NamedTuple):
+    """Cross-slot fold artifacts of one solve (a pytree — scan-carriable).
+
+    All edge-indexed members are in FOLD order (entry j ↔ edge E-1-j).
+    ``ckpts[i]`` is the value plane after exactly ``i·k`` fold steps
+    (``ckpts[0]`` is the cold-start plane); ``v_final`` the plane after all
+    E; ``decisions[j]`` the fold-step-j decision plane.  The invariant the
+    warm solve maintains: the carry always holds exactly what a COLD solve
+    of ``(ups_f, sig_f, alw_f)`` would have produced.
+    """
+
+    ups_f: jnp.ndarray  # (E,) int32
+    sig_f: jnp.ndarray  # (E,) int32
+    alw_f: jnp.ndarray  # (E,) bool
+    ckpts: jnp.ndarray  # (n_ckpt, S, C) int32
+    v_final: jnp.ndarray  # (S, C) int32
+    decisions: jnp.ndarray  # (E, S, C) bool
+    valid: jnp.ndarray  # () bool — False forces a full cold fold
+
+
+def n_checkpoints(n_edges: int, checkpoint_every: int) -> int:
+    """Planes stored at fold steps i·k for i = 0 .. (E-1)//k (a resume
+    point is always < E; the final plane is carried separately)."""
+    return max(1, (n_edges - 1) // checkpoint_every + 1)
+
+
+def warm_carry_init(
+    n_edges: int, s_cap: int, n_states: int, checkpoint_every: int = 8
+) -> WarmCarry:
+    """A fresh (invalid) carry: the first warm solve runs a full cold fold."""
+    S = s_cap + 1
+    n_ckpt = n_checkpoints(n_edges, checkpoint_every)
+    ckpts = jnp.zeros((n_ckpt, S, n_states), jnp.int32)
+    ckpts = ckpts.at[0].set(initial_plane(s_cap, n_states))
+    return WarmCarry(
+        ups_f=jnp.zeros(n_edges, jnp.int32),
+        sig_f=jnp.zeros(n_edges, jnp.int32),
+        alw_f=jnp.zeros(n_edges, bool),
+        ckpts=ckpts,
+        v_final=jnp.zeros((S, n_states), jnp.int32),
+        decisions=jnp.zeros((n_edges, S, n_states), bool),
+        valid=jnp.asarray(False))
+
+
+def changed_edge_mask(carry: WarmCarry, upsilon, sigma2, allowed):
+    """(E,) bool in FOLD order — the delta mask: True where the edge's
+    solve inputs differ from the carried solve (an invalid carry marks
+    every edge changed)."""
+    alw = (jnp.ones(upsilon.shape, bool) if allowed is None
+           else jnp.asarray(allowed, bool))
+    changed = ((upsilon[::-1] != carry.ups_f)
+               | (sigma2[::-1] != carry.sig_f)
+               | (alw[::-1] != carry.alw_f))
+    return changed | ~carry.valid
+
+
+def unchanged_fold_prefix(changed):
+    """Length of the leading all-False run of a fold-order delta mask."""
+    return jnp.argmax(
+        jnp.concatenate([changed, jnp.ones(1, bool)])).astype(jnp.int32)
+
+
+def solve_budgeted_dp_warm(
+    upsilon,
+    sigma2,
+    tables: DPTables,
+    s_cap: int,
+    s_limit,
+    carry: WarmCarry,
+    allowed=None,
+    checkpoint_every: int = 8,
+):
+    """Warm-started :func:`repro.core.dp.solve_budgeted_dp` — bit-identical
+    outputs, folding only the edges after the last valid checkpoint.
+
+    Traced-safe (usable inside jit / lax.scan): the resume point is a
+    dynamic lower bound of a ``fori_loop``, so a jitted caller executes
+    only ``E - resume`` fold steps at runtime while compiling one program.
+    ``s_limit`` is NOT part of the delta mask — the eq.-17 selection and
+    backtrack are recomputed every call from the (possibly fully reused)
+    plane, so a changed budget mask alone costs zero fold steps.
+
+    Returns ``(x, info, carry')`` where ``info`` adds ``edges_folded`` (the
+    number of fold steps actually executed — E minus the skip) to the
+    backend contract's ``s_star``/``value_row``.  Memory: the carry holds
+    the (E, S, C) decision tensor plus ``n_checkpoints`` int32 planes —
+    the warm path trades memory for fold work and suits policy-scale
+    planes, not the S=8192 benchmark regime.
+    """
+    E = upsilon.shape[0]
+    S = s_cap + 1
+    C = tables.n_states
+    k = int(checkpoint_every)
+    upsilon = jnp.asarray(upsilon, jnp.int32)
+    sigma2 = jnp.asarray(sigma2, jnp.int32)
+    alw = (jnp.ones(E, bool) if allowed is None
+           else jnp.asarray(allowed, bool))
+
+    ups_f, sig_f, alw_f = upsilon[::-1], sigma2[::-1], alw[::-1]
+    changed = changed_edge_mask(carry, upsilon, sigma2, alw)
+    p = unchanged_fold_prefix(changed)
+    # resume at the last checkpoint at/below the first change; a fully
+    # unchanged fold (p == E) resumes at E — zero fold steps, final plane
+    # and decisions reused verbatim
+    resume = jnp.where(p >= E, E, (p // k) * k)
+    plane_ck = jax.lax.dynamic_index_in_dim(
+        carry.ckpts, jnp.minimum(resume // k, carry.ckpts.shape[0] - 1),
+        keepdims=False)
+    plane0 = jnp.where(resume == E, carry.v_final, plane_ck)
+
+    rows = jnp.arange(S, dtype=jnp.int32)
+    feas = jnp.asarray(tables.feasible) & alw[None, :]  # (C, E)
+    feas_f = feas[:, ::-1]
+    nxt_f = jnp.asarray(tables.next_state)[:, ::-1]
+
+    def body(j, state):
+        V, dec, ck = state
+        ck = jax.lax.cond(
+            j % k == 0,
+            lambda c: jax.lax.dynamic_update_index_in_dim(c, V, j // k, 0),
+            lambda c: c, ck)
+        feas_j = jax.lax.dynamic_index_in_dim(feas_f, j, 1, keepdims=False)
+        nxt_j = jax.lax.dynamic_index_in_dim(nxt_f, j, 1, keepdims=False)
+        V, d = dp_edge_fold(V, ups_f[j], sig_f[j], feas_j, nxt_j, rows)
+        dec = jax.lax.dynamic_update_index_in_dim(dec, d, j, 0)
+        return V, dec, ck
+
+    V, decisions, ckpts = jax.lax.fori_loop(
+        resume, E, body, (plane0, carry.decisions, carry.ckpts))
+
+    # eq.-17 selection + backtrack — identical to the cold reference path
+    v_row = V[:, tables.full_state]
+    s_vals = jnp.arange(S, dtype=jnp.int32)
+    ok = (v_row >= 0) & (s_vals <= s_limit)
+    score = s_vals.astype(jnp.float32) + jnp.sqrt(
+        jnp.maximum(v_row, 0).astype(jnp.float32))
+    score = jnp.where(ok, score, FNEG)
+    s_star = jnp.argmax(score).astype(jnp.int32)
+
+    next_state = jnp.asarray(tables.next_state)
+
+    def back_body(e, bc):
+        s, cs, x = bc
+        d = decisions[E - 1 - e, s, cs]
+        x = x.at[e].set(d.astype(jnp.int32))
+        s_new = jnp.maximum(s - upsilon[e], 0)
+        cs_new = next_state[cs, e]
+        return (jnp.where(d, s_new, s), jnp.where(d, cs_new, cs), x)
+
+    x0 = jnp.zeros(E, dtype=jnp.int32)
+    _, _, x = jax.lax.fori_loop(
+        0, E, back_body, (s_star, jnp.int32(tables.full_state), x0))
+
+    new_carry = WarmCarry(ups_f=ups_f, sig_f=sig_f, alw_f=alw_f,
+                          ckpts=ckpts, v_final=V, decisions=decisions,
+                          valid=jnp.asarray(True))
+    # backend-contract sanitization (matches core.solvers): infeasible
+    # entries are exactly NEG, not NEG plus accumulated fold offsets
+    info = {"s_star": s_star, "value_row": jnp.where(v_row >= 0, v_row, NEG),
+            "edges_folded": (E - resume).astype(jnp.int32)}
+    return x, info, new_carry

@@ -41,12 +41,21 @@ Registry:
 Selection: ``get_solver(None)`` consults the ``REPRO_DP_SOLVER`` env var and
 falls back to ``auto``; an explicit name in code always wins over the env
 var, except that explicit ``"auto"`` lets the env var refine it (so a sweep
-declared with the default can be redirected from the shell).
+declared with the default can be redirected from the shell).  An INVALID
+env var value warns and falls back to the ``auto`` resolution (a stale
+shell var must not hard-crash policy builds that never asked for a
+concrete backend); an invalid name passed in code still raises.
+
+Incremental layer: :class:`CachedSolver` wraps any backend with the
+quantized-statistics solve cache (``core.incremental.SolveCache``) —
+same call contract, ``accepts_batch`` passthrough, kernel launches
+skipped on concrete-input cache hits.  See ``docs/solvers.md``.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
+import warnings
 from typing import Callable
 
 import jax
@@ -55,43 +64,71 @@ import jax.numpy as jnp
 from .dp import NEG, DPTables, solve_budgeted_dp
 
 __all__ = ["SOLVER_ENV_VAR", "SOLVER_NAMES", "Solver", "resolve_solver",
-           "get_solver"]
+           "get_solver", "CachedSolver"]
 
 SOLVER_ENV_VAR = "REPRO_DP_SOLVER"
 SOLVER_NAMES = ("auto", "reference", "pallas", "pallas_interpret")
 
 
-def resolve_solver(name: str | None = None,
-                   platform: str | None = None) -> str:
+def _auto_backend(platform: str | None) -> str:
+    platform = platform or jax.default_backend()
+    return "pallas" if platform == "tpu" else "reference"
+
+
+def resolve_solver(name: str | None = None, platform: str | None = None) -> str:
     """Resolve a requested backend to a concrete one.
 
     Returns ``"reference"``, ``"pallas"``, or ``"pallas_interpret"``.
     ``name=None``/``"auto"`` consults ``$REPRO_DP_SOLVER`` first, then picks
     by platform: TPU → compiled pallas, anything else → reference.
     ``platform`` overrides ``jax.default_backend()`` (unit-testable).
+
+    Error handling distinguishes where a bad name came from: an invalid
+    name passed IN CODE raises (the caller asked for something that does
+    not exist), while an invalid ``$REPRO_DP_SOLVER`` only warns and falls
+    back to the ``auto`` resolution — a stale shell var must never crash a
+    policy build that requested ``None``/``"auto"``.
     """
+    from_env = False
     if name is None or name == "auto":
-        name = os.environ.get(SOLVER_ENV_VAR) or "auto"
+        env_name = os.environ.get(SOLVER_ENV_VAR) or None
+        if env_name is not None:
+            name, from_env = env_name, True
+        else:
+            name = "auto"
     if name == "auto":
-        platform = platform or jax.default_backend()
-        name = "pallas" if platform == "tpu" else "reference"
+        name = _auto_backend(platform)
     if name not in ("reference", "pallas", "pallas_interpret"):
+        if from_env:
+            warnings.warn(
+                f"ignoring invalid {SOLVER_ENV_VAR}={name!r} (choose from "
+                f"{SOLVER_NAMES}); falling back to 'auto'",
+                RuntimeWarning, stacklevel=2)
+            return _auto_backend(platform)
         raise ValueError(
             f"unknown DP solver backend {name!r}; choose from {SOLVER_NAMES}")
     return name
 
 
-@dataclasses.dataclass(frozen=True, eq=False)   # identity hash — jit-static-safe
+@dataclasses.dataclass(frozen=True, eq=False)  # identity hash — jit-static-safe
 class Solver:
     """A resolved Algorithm-2 backend (callable with the shared contract)."""
 
-    name: str                    # concrete backend name
-    interpret: bool | None       # kernel mode (None = auto); reference: None
+    name: str  # concrete backend name
+    interpret: bool | None  # kernel mode (None = auto); reference: None
     _fn: Callable = dataclasses.field(repr=False)
     accepts_batch: bool = False  # vmap → ONE fleet-batched kernel launch
 
-    def __call__(self, upsilon, sigma2, tables: DPTables, s_cap: int,
-                 s_limit, allowed=None, u_max: int | None = None):
+    def __call__(
+        self,
+        upsilon,
+        sigma2,
+        tables: DPTables,
+        s_cap: int,
+        s_limit,
+        allowed=None,
+        u_max: int | None = None,
+    ):
         """``u_max`` is an optional static bound on max Υ̂ (e.g. from
         ``stats.u_max_for_horizon``); the Pallas backends use it to shrink
         the kernel's shift scratch, the reference backend ignores it.
@@ -106,9 +143,8 @@ class Solver:
                         u_max)
 
 
-def _reference_solve(upsilon, sigma2, tables, s_cap, s_limit, allowed,
-                     u_max=None):
-    del u_max                       # exact scan needs no shift padding
+def _reference_solve(upsilon, sigma2, tables, s_cap, s_limit, allowed, u_max=None):
+    del u_max  # exact scan needs no shift padding
     x, info = solve_budgeted_dp(upsilon, sigma2, tables, s_cap, s_limit,
                                 allowed=allowed)
     row = info["value_row"]
@@ -123,18 +159,142 @@ def _make_pallas_solve(interpret: bool | None):
         x, info = solve_budgeted_dp_pallas(
             upsilon, sigma2, tables, s_cap, s_limit, u_max=u_max,
             allowed=allowed, interpret=interpret)
-        row = info["value_row"]                     # f32, kernel NEG sentinel
+        row = info["value_row"]  # f32, kernel NEG sentinel
         row = jnp.where(row >= 0, row, float(NEG)).astype(jnp.int32)
         return x, {"s_star": info["s_star"], "value_row": row}
 
     return solve
 
 
+class CachedSolver:
+    """A backend wrapped with the quantized-statistics solve cache.
+
+    Same call contract as :class:`Solver` (and ``accepts_batch`` follows
+    the wrapped backend), so it drops into every consumer that takes a
+    solver.  The cache is HOST-side: it can only act when the solve inputs
+    are concrete arrays.  Calls with traced inputs (inside a caller's
+    ``jit``/``scan``/``vmap``) bypass it entirely — correctness is never
+    at risk, only the hit opportunity — and are counted in
+    ``stats.bypasses``.  Host-loop drivers (``sched.dispatcher``, the
+    bench) call it with concrete per-slot statistics and skip the whole
+    backend launch on a hit; for in-scan carried memoization use the
+    ``cache=`"memo"`` policy mode in ``core.esdp`` instead.
+
+    Batched concrete inputs (``(B, E)`` statistics) are keyed PER ROW —
+    instance i's key never aliases instance j's — and the (single)
+    batched launch is skipped only when every row hits; any miss solves
+    the whole batch and refreshes all rows.
+
+    With the default quanta the cache is EXACT: hits are bit-identical to
+    cold solves.  Coarser ``q_ups``/``q_sig`` give bounded-staleness
+    approximate reuse (see :class:`repro.core.incremental.SolveCache`);
+    ``exact`` exposes which mode this wrapper is in.
+    """
+
+    def __init__(self, base: Solver, cache: "SolveCache | None" = None, **cache_kwargs):
+        from .incremental import SolveCache
+        self.base = base
+        self.cache = cache if cache is not None else SolveCache(**cache_kwargs)
+        self._jitted: dict = {}
+
+    @property
+    def name(self) -> str:
+        return f"cached:{self.base.name}"
+
+    @property
+    def interpret(self):
+        return self.base.interpret
+
+    @property
+    def accepts_batch(self) -> bool:
+        return self.base.accepts_batch
+
+    @property
+    def exact(self) -> bool:
+        return self.cache.exact
+
+    @property
+    def stats(self):
+        return self.cache.stats
+
+    def _base_jit(self, tables, s_cap, u_max, batched: bool):
+        key = (id(tables), s_cap, u_max, batched)
+        fn = self._jitted.get(key)
+        if fn is None:
+            def single(upsilon, sigma2, s_limit, allowed):
+                return self.base(upsilon, sigma2, tables, s_cap, s_limit,
+                                 allowed=allowed, u_max=u_max)
+            fn = jax.jit(jax.vmap(single) if batched else single)
+            self._jitted[key] = fn
+        return fn
+
+    def __call__(
+        self,
+        upsilon,
+        sigma2,
+        tables: DPTables,
+        s_cap: int,
+        s_limit,
+        allowed=None,
+        u_max: int | None = None,
+    ):
+        if any(isinstance(a, jax.core.Tracer)
+               for a in (upsilon, sigma2, s_limit, allowed) if a is not None):
+            self.cache.stats.bypasses += 1
+            return self.base(upsilon, sigma2, tables, s_cap, s_limit,
+                             allowed=allowed, u_max=u_max)
+
+        import numpy as np
+        ups = np.asarray(upsilon)
+        self.cache.tick()
+        if ups.ndim == 1:
+            key = self.cache.key(ups, sigma2, allowed, int(s_limit))
+            hit = self.cache.get(key)
+            if hit is not None:
+                self.cache.stats.launches_saved += 1
+                return hit
+            fn = self._base_jit(tables, s_cap, u_max, batched=False)
+            alw = (jnp.ones(ups.shape[0], bool) if allowed is None
+                   else jnp.asarray(allowed, bool))
+            x, info = fn(jnp.asarray(upsilon), jnp.asarray(sigma2),
+                         jnp.asarray(s_limit), alw)
+            out = (np.asarray(x),
+                   {"s_star": np.asarray(info["s_star"]),
+                    "value_row": np.asarray(info["value_row"])})
+            self.cache.put(key, out)
+            return out
+
+        # batched (B, E): per-row keys; skip the launch only on a full hit
+        sig = np.asarray(sigma2)
+        slim = np.broadcast_to(np.asarray(s_limit), (ups.shape[0],))
+        alw = (np.ones(ups.shape, bool) if allowed is None
+               else np.broadcast_to(np.asarray(allowed, bool), ups.shape))
+        keys = [self.cache.key(ups[b], sig[b], alw[b], int(slim[b]))
+                for b in range(ups.shape[0])]
+        hits = [self.cache.get(k) for k in keys]
+        if all(h is not None for h in hits):
+            self.cache.stats.launches_saved += 1
+            x = np.stack([h[0] for h in hits])
+            info = {"s_star": np.stack([h[1]["s_star"] for h in hits]),
+                    "value_row": np.stack([h[1]["value_row"] for h in hits])}
+            return x, info
+        fn = self._base_jit(tables, s_cap, u_max, batched=True)
+        x, info = fn(jnp.asarray(ups), jnp.asarray(sig),
+                     jnp.asarray(slim), jnp.asarray(alw))
+        x = np.asarray(x)
+        stars, rows = np.asarray(info["s_star"]), np.asarray(info["value_row"])
+        for b, k in enumerate(keys):
+            self.cache.put(k, (x[b], {"s_star": stars[b],
+                                      "value_row": rows[b]}))
+        return x, {"s_star": stars, "value_row": rows}
+
+
 _CACHE: dict[str, Solver] = {}
 
 
-def get_solver(name: "str | Solver | None" = None,
-               platform: str | None = None) -> Solver:
+def get_solver(
+    name: "str | Solver | None" = None, platform: str | None = None
+) -> Solver:
     """Resolve ``name`` (see :func:`resolve_solver`) and return the Solver.
 
     Instances are cached per concrete backend, so repeated policy builds

@@ -14,8 +14,10 @@ Integer-domain bounds (why int32 is exact here):
 """
 from __future__ import annotations
 
+import math
 from typing import Callable
 
+import jax
 import jax.numpy as jnp
 
 __all__ = [
@@ -47,6 +49,32 @@ def delta_slow(t):
 
 DELTA_VARIANTS: dict[str, Callable] = {
     "fast": delta_fast, "default": delta_default, "slow": delta_slow,
+}
+
+
+# Host-side float64 mirrors of the registered schedules.  The sizing
+# helpers below evaluate δ at STATIC horizons up to t_max = 10¹², far past
+# the f32-exact integer range (2²⁴): jnp.float32(T) collapses ≈ 2¹⁷-wide
+# plateaus of horizons onto one value there, which made
+# ``horizon_for_s_cap`` return a plateau edge instead of the true
+# threshold.  Pure ``math`` keeps the host path exact (f64) and jax-free.
+
+def _delta_fast_host(t: float) -> float:
+    return 1.0 / (math.log(t + 1.0) + 1.0)
+
+
+def _delta_default_host(t: float) -> float:
+    return 1.0 / (math.log(math.log(t + 1.0) + 1.0) + 1.0)
+
+
+def _delta_slow_host(t: float) -> float:
+    return 1.0 / (math.log(math.log(math.log(t + 1.0) + 1.0) + 1.0) + 1.0)
+
+
+_DELTA_HOST: dict[Callable, Callable[[float], float]] = {
+    delta_fast: _delta_fast_host,
+    delta_default: _delta_default_host,
+    delta_slow: _delta_slow_host,
 }
 
 # --------------------------------------------------------------------------
@@ -81,11 +109,26 @@ def xi_of(t, m, delta_fn=delta_default):
     return jnp.ceil(m / delta_fn(t)).astype(jnp.int32)
 
 
+def _delta_at_host(T: int, delta_fn=delta_default) -> float:
+    """δ(T) evaluated host-side in float64.
+
+    Registered schedules use their pure-``math`` mirrors; custom schedules
+    are evaluated under ``jax.experimental.enable_x64`` so a python-int
+    horizon survives intact (``jnp.float32(T)`` is exact only below 2²⁴ —
+    the old f32 path made the T ↦ ξ(T) map constant across ≈ 2¹⁷-wide
+    plateaus near t_max and mislocated every threshold inside one)."""
+    host = _DELTA_HOST.get(delta_fn)
+    if host is not None:
+        return host(float(T))
+    with jax.experimental.enable_x64():
+        return float(delta_fn(jnp.float64(T)))
+
+
 def _xi_at_horizon(T: int, m: int, delta_fn=delta_default) -> int:
     """ξ(T) as a host-side static int — the max of ξ(t) over t ≤ T (δ
-    decreasing ⇒ ξ increasing ⇒ maximum at t = T)."""
-    import math
-    return int(math.ceil(m / float(delta_fn(jnp.float32(T)))))
+    decreasing ⇒ ξ increasing ⇒ maximum at t = T).  Evaluated in float64
+    (see :func:`_delta_at_host`) so horizons above 2²⁴ stay exact."""
+    return int(math.ceil(m / _delta_at_host(T, delta_fn)))
 
 
 def s_cap_for_horizon(T: int, m: int, delta_fn=delta_default) -> int:
@@ -105,8 +148,9 @@ def u_max_for_horizon(T: int, m: int, delta_fn=delta_default) -> int:
     return _xi_at_horizon(T, m, delta_fn) + 1
 
 
-def horizon_for_s_cap(s_cap: int, m: int, delta_fn=delta_default,
-                      t_max: int = 10 ** 12) -> "int | None":
+def horizon_for_s_cap(
+    s_cap: int, m: int, delta_fn=delta_default, t_max: int = 10 ** 12
+) -> "int | None":
     """Smallest horizon T ≤ ``t_max`` whose budget axis reaches ``s_cap``
     (inverse of :func:`s_cap_for_horizon`, which is nondecreasing in T
     because δ decays).  Sizing helper for the S-tiled DP pipeline: it
@@ -125,7 +169,7 @@ def horizon_for_s_cap(s_cap: int, m: int, delta_fn=delta_default,
     lo, hi = 1, 2
     while s_cap_for_horizon(hi, m, delta_fn) < s_cap:
         if hi >= t_max:
-            return None                 # even t_max itself falls short
+            return None  # even t_max itself falls short
         lo, hi = hi, min(hi * 2, t_max)
     while lo + 1 < hi:
         mid = (lo + hi) // 2

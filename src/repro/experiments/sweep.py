@@ -29,6 +29,7 @@ import math
 import pathlib
 from typing import Mapping, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -56,9 +57,12 @@ POLICY_FACTORIES = {
 }
 
 
-def default_policies(g_fn=None, tiebreak: float = 1e-4,
-                     names: Sequence[str] = ("esdp", "hswf", "lcf", "lwtf"),
-                     solver: str | None = None) -> dict[str, PolicyFactory]:
+def default_policies(
+    g_fn=None,
+    tiebreak: float = 1e-4,
+    names: Sequence[str] = ("esdp", "hswf", "lcf", "lwtf"),
+    solver: str | None = None,
+) -> dict[str, PolicyFactory]:
     """The paper's four policies as a sweep-ready dict (Fig. 2–4 lineup).
 
     ``solver`` pins the Algorithm-2 backend for ESDP (see ``core.solvers``)."""
@@ -99,6 +103,10 @@ class SweepSpec:
     # Algorithm-2 backend for solver-aware policies (core.solvers name);
     # None keeps each factory's own default (env var / auto resolution).
     solver: str | None = None
+    # incremental re-solve mode for cache-aware policies (None | "memo" |
+    # "warm", see core.esdp) — bit-identical to None; per-sweep hit/skip
+    # rates surface as solve_stats columns in the records.
+    cache: str | None = None
 
     def smoke(self, T: int = 120, seeds: tuple[int, ...] = (0,)) -> "SweepSpec":
         """A cheap variant for CI smoke runs: shrink horizon and seed batch."""
@@ -119,20 +127,23 @@ class SweepRow:
     scenario: str
     T: int
     seeds: tuple[int, ...]
-    asw_mean: float            # mean over seeds of ASW(T)
-    asw_ci95: float            # 1.96·σ/√S (0 for a single seed)
-    regret_mean: float         # mean over seeds of cumulative regret(T)
+    asw_mean: float  # mean over seeds of ASW(T)
+    asw_ci95: float  # 1.96·σ/√S (0 for a single seed)
+    regret_mean: float  # mean over seeds of cumulative regret(T)
     regret_ci95: float
-    oracle_asw_mean: float     # mean over seeds of Σ_t ṽᵀx*(t)
-    n_dispatched_mean: float   # mean ‖x(t)‖₁ per slot
-    result: SimResult          # stacked (S, T) traces
+    oracle_asw_mean: float  # mean over seeds of Σ_t ṽᵀx*(t)
+    n_dispatched_mean: float  # mean ‖x(t)‖₁ per slot
+    result: SimResult  # stacked (S, T) traces
     instance: Instance
     tables: DPTables
     solver: str | None = None  # Algorithm-2 backend requested by the spec
+    # incremental-solve counters (hit/skip rates etc.) aggregated over the
+    # seed batch by Policy.finalize; None for cache-less policies
+    solve_stats: Mapping | None = None
 
     def to_record(self) -> dict:
         """Sink-friendly flat record (drops the arrays)."""
-        return {
+        rec = {
             "spec": self.spec, "point": self.point, "policy": self.policy,
             "scenario": self.scenario, "T": self.T,
             "solver": self.solver or "default",
@@ -144,6 +155,9 @@ class SweepRow:
             "n_edges": self.instance.n_edges,
             "n_states": self.tables.n_states,
         }
+        if self.solve_stats:
+            rec.update(self.solve_stats)
+        return rec
 
 
 def _ci95(x: np.ndarray) -> float:
@@ -166,8 +180,9 @@ def summarize(res: SimResult) -> dict:
     }
 
 
-def _resolve_scenario(scenario, base_params: Mapping,
-                      point_params: Mapping) -> Scenario:
+def _resolve_scenario(
+    scenario, base_params: Mapping, point_params: Mapping
+) -> Scenario:
     params = {**base_params, **point_params}
     if isinstance(scenario, str):
         return get_scenario(scenario, **params)
@@ -175,6 +190,25 @@ def _resolve_scenario(scenario, base_params: Mapping,
         return dataclasses.replace(scenario,
                                    params={**scenario.params, **params})
     return scenario
+
+
+def _batch_solve_stats(policy, res: SimResult) -> "dict | None":
+    """Seed-batch aggregate of ``Policy.finalize`` counters.
+
+    ``res.policy_final`` carries the final policy state with a leading seed
+    axis; finalize each row and average the numeric values (hit/skip rates
+    are per-seed ratios, so the mean is the per-seed mean, not a pooled
+    ratio)."""
+    if getattr(policy, "finalize", None) is None or res.policy_final is None:
+        return None
+    leaves = jax.tree.leaves(res.policy_final)
+    if not leaves:
+        return None
+    S = np.shape(leaves[0])[0]
+    dicts = [policy.finalize(jax.tree.map(lambda a: np.asarray(a)[i],
+                                          res.policy_final))
+             for i in range(S)]
+    return {k: float(np.mean([d[k] for d in dicts])) for k in dicts[0]}
 
 
 def run_spec(spec: SweepSpec) -> list[SweepRow]:
@@ -188,25 +222,37 @@ def run_spec(spec: SweepSpec) -> list[SweepRow]:
         scenario = _resolve_scenario(spec.scenario, spec.scenario_params,
                                      point.scenario_params)
         for pname, factory in spec.policies.items():
+            kw = {}
             if spec.solver is not None and getattr(factory, "accepts_solver",
                                                    False):
-                policy = factory(instance, T, tables, solver=spec.solver)
-            else:
-                policy = factory(instance, T, tables)
+                kw["solver"] = spec.solver
+            if spec.cache is not None and getattr(factory, "accepts_cache",
+                                                  False):
+                kw["cache"] = spec.cache
+            policy = factory(instance, T, tables, **kw)
             res = simulate_batch(instance, policy, T, spec.seeds,
                                  tables=tables, scenario=scenario)
             rows.append(SweepRow(
                 spec=spec.name, point=point.label, policy=pname,
                 scenario=scenario.name, T=T, seeds=tuple(spec.seeds),
                 result=res, instance=instance, tables=tables,
-                solver=spec.solver, **summarize(res)))
+                solver=spec.solver,
+                solve_stats=_batch_solve_stats(policy, res),
+                **summarize(res)))
     return rows
 
 
-def sweep_scenario_param(instance: Instance, factory: PolicyFactory, T: int,
-                         seeds, scenario_name: str, param: str, values,
-                         tables: DPTables | None = None,
-                         **scenario_kwargs) -> SimResult:
+def sweep_scenario_param(
+    instance: Instance,
+    factory: PolicyFactory,
+    T: int,
+    seeds,
+    scenario_name: str,
+    param: str,
+    values,
+    tables: DPTables | None = None,
+    **scenario_kwargs,
+) -> SimResult:
     """Sweep ONE scenario parameter over a value grid in a single jitted
     call: ``lax.map`` over the stacked parameter axis, ``vmap`` over seeds.
 
@@ -247,7 +293,10 @@ def write_csv(rows: Sequence[SweepRow], path) -> pathlib.Path:
     recs = _records(rows)
     with path.open("w", newline="") as f:
         if recs:
-            w = csv.DictWriter(f, fieldnames=list(recs[0]))
+            # union the keys across records — cache-aware rows carry extra
+            # solve_stats columns that cache-less rows lack
+            fieldnames = list(dict.fromkeys(k for r in recs for k in r))
+            w = csv.DictWriter(f, fieldnames=fieldnames, restval="")
             w.writeheader()
             w.writerows(recs)
     return path

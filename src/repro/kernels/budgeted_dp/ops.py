@@ -53,15 +53,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...core import dp as core_dp
 from ...core.dp import DPTables
 from .kernel import (NEG, choose_tiling, dp_forward_pallas,
                      dp_forward_pallas_batched, resolve_interpret)
 
 __all__ = ["VALUE_BOUND", "prepare_tables", "max_achievable_value",
            "solve_budgeted_dp_pallas", "solve_budgeted_dp_batched",
-           "resolve_interpret"]
+           "WarmPallasSolver", "resolve_interpret"]
 
-VALUE_BOUND = 2 ** 24          # f32-exact integer domain (kernel contract)
+VALUE_BOUND = 2 ** 24  # f32-exact integer domain (kernel contract)
 
 
 @functools.lru_cache(maxsize=32)
@@ -82,8 +83,8 @@ def prepare_tables(tables: DPTables):
     a different key, so the cache can never serve stale operands; the
     returned arrays are shared and must be treated as read-only.
     """
-    feas = np.asarray(tables.feasible).T.astype(np.float32)        # (E, C)
-    usable = np.asarray(tables.feasible)[tables.full_state]        # (E,)
+    feas = np.asarray(tables.feasible).T.astype(np.float32)  # (E, C)
+    usable = np.asarray(tables.feasible)[tables.full_state]  # (E,)
     offsets = np.where(usable, np.asarray(tables.offsets), 0)
     return feas, offsets.astype(np.int32)
 
@@ -99,13 +100,13 @@ def max_achievable_value(sigma2, tables: DPTables) -> int:
     """
     sig = np.asarray(sigma2, dtype=np.int64)
     E = sig.shape[0]
-    usable = np.asarray(tables.feasible)[tables.full_state]        # (E,)
+    usable = np.asarray(tables.feasible)[tables.full_state]  # (E,)
     if not usable.any():
         return 0
     cap = np.asarray(tables.cap_of_state, dtype=np.int64)
     c = np.asarray(tables.radices, dtype=np.int64) - 1
-    nxt = np.asarray(tables.next_state)[tables.full_state]         # (E,)
-    req_total = (c[None, :] - cap[nxt]).sum(axis=1)                # (E,)
+    nxt = np.asarray(tables.next_state)[tables.full_state]  # (E,)
+    req_total = (c[None, :] - cap[nxt]).sum(axis=1)  # (E,)
     if np.all(req_total[usable] >= 1):
         k = min(E, int(c.sum()))
     else:
@@ -116,7 +117,7 @@ def max_achievable_value(sigma2, tables: DPTables) -> int:
 
 def _check_value_bound(sigma2, tables: DPTables) -> None:
     if isinstance(sigma2, jax.core.Tracer):
-        return                      # traced call — bound pinned by tests
+        return  # traced call — bound pinned by tests
     bound = max_achievable_value(sigma2, tables)
     if bound >= VALUE_BOUND:
         raise ValueError(
@@ -145,10 +146,22 @@ def _check_u_max(upsilon, u_max: int) -> None:
                    static_argnames=("s_cap", "u_max", "off_max", "full_state",
                                     "interpret", "block_c", "block_s",
                                     "block_e"))
-def _solve(upsilon, sigma2, feasible, offsets, s_limit,
-           *, s_cap: int, u_max: int, off_max: int, full_state: int,
-           interpret: bool, block_c: int | None, block_s: int | None,
-           block_e: int | None):
+def _solve(
+    upsilon,
+    sigma2,
+    feasible,
+    offsets,
+    s_limit,
+    *,
+    s_cap: int,
+    u_max: int,
+    off_max: int,
+    full_state: int,
+    interpret: bool,
+    block_c: int | None,
+    block_s: int | None,
+    block_e: int | None,
+):
     E = upsilon.shape[0]
     S = s_cap + 1
     v0 = jnp.full((S, feasible.shape[1]), NEG, jnp.float32).at[0, :].set(0.0)
@@ -193,11 +206,24 @@ def _solve(upsilon, sigma2, feasible, offsets, s_limit,
                    static_argnames=("s_cap", "u_max", "off_max", "full_state",
                                     "interpret", "block_b", "block_c",
                                     "block_s", "block_e"))
-def _solve_batched(upsilon, sigma2, allowed, feasible, offsets, s_limit,
-                   *, s_cap: int, u_max: int, off_max: int, full_state: int,
-                   interpret: bool, block_b: int | None,
-                   block_c: int | None, block_s: int | None,
-                   block_e: int | None):
+def _solve_batched(
+    upsilon,
+    sigma2,
+    allowed,
+    feasible,
+    offsets,
+    s_limit,
+    *,
+    s_cap: int,
+    u_max: int,
+    off_max: int,
+    full_state: int,
+    interpret: bool,
+    block_b: int | None,
+    block_c: int | None,
+    block_s: int | None,
+    block_e: int | None,
+):
     """Batched :func:`_solve`: B solves through ONE kernel launch.
 
     upsilon/sigma2/allowed are (B, E), ``s_limit`` is (B,); the tables
@@ -214,7 +240,7 @@ def _solve_batched(upsilon, sigma2, allowed, feasible, offsets, s_limit,
         n_edges=E, u_max=u_max, off_max=off_max, interpret=interpret,
         block_b=block_b, block_c=block_c, block_s=block_s, block_e=block_e)
 
-    v_row = V[:, :, full_state]                                    # (B, S)
+    v_row = V[:, :, full_state]  # (B, S)
     s_vals = jnp.arange(S, dtype=jnp.int32)
     ok = (v_row >= 0) & (s_vals[None, :] <= s_limit[:, None])
     score = (s_vals[None, :].astype(jnp.float32)
@@ -225,8 +251,8 @@ def _solve_batched(upsilon, sigma2, allowed, feasible, offsets, s_limit,
     e_ids = jnp.arange(E, dtype=jnp.int32)
 
     def back(carry, x):
-        s, cs = carry                                   # (B,) each
-        u, off, w, b = x                                # u (B,); rest scalar
+        s, cs = carry  # (B,) each
+        u, off, w, b = x  # u (B,); rest scalar
         word = jax.vmap(
             lambda d, s_, c_: jax.lax.dynamic_slice(
                 d, (w, s_, c_), (1, 1, 1))[0, 0, 0])(decisions, s, cs)
@@ -243,9 +269,19 @@ def _solve_batched(upsilon, sigma2, allowed, feasible, offsets, s_limit,
 
 
 @functools.lru_cache(maxsize=None)
-def _vmappable_core(s_cap: int, u_max: int, off_max: int, full_state: int,
-                    interpret: bool, block_c, block_s, block_e,
-                    auto_tiling: bool, n_edges: int, n_states: int):
+def _vmappable_core(
+    s_cap: int,
+    u_max: int,
+    off_max: int,
+    full_state: int,
+    interpret: bool,
+    block_c,
+    block_s,
+    block_e,
+    auto_tiling: bool,
+    n_edges: int,
+    n_states: int,
+):
     """The solve core for one static kernel config, with a custom vmap rule.
 
     The single-instance path folds ``allowed`` into the feasibility plane
@@ -269,8 +305,9 @@ def _vmappable_core(s_cap: int, u_max: int, off_max: int, full_state: int,
     core = jax.custom_batching.custom_vmap(plain)
 
     @core.def_vmap
-    def _batched_rule(axis_size, in_batched, upsilon, sigma2, s_limit,
-                      allowed, feasible, offsets):
+    def _batched_rule(
+        axis_size, in_batched, upsilon, sigma2, s_limit, allowed, feasible, offsets
+    ):
         up_b, sg_b, sl_b, al_b, fe_b, of_b = in_batched
         if fe_b or of_b:
             raise NotImplementedError(
@@ -314,12 +351,19 @@ def _vmappable_core(s_cap: int, u_max: int, off_max: int, full_state: int,
     return core
 
 
-def solve_budgeted_dp_pallas(upsilon, sigma2, tables: DPTables, s_cap: int,
-                             s_limit, u_max: int | None = None,
-                             allowed=None, interpret: bool | None = None,
-                             block_c: "int | str | None" = "auto",
-                             block_s: int | None = None,
-                             block_e: int | None = None):
+def solve_budgeted_dp_pallas(
+    upsilon,
+    sigma2,
+    tables: DPTables,
+    s_cap: int,
+    s_limit,
+    u_max: int | None = None,
+    allowed=None,
+    interpret: bool | None = None,
+    block_c: "int | str | None" = "auto",
+    block_s: int | None = None,
+    block_e: int | None = None,
+):
     """Same contract as :func:`repro.core.dp.solve_budgeted_dp`, executed on
     the Pallas kernel (+ kernel knobs).
 
@@ -386,13 +430,20 @@ def solve_budgeted_dp_pallas(upsilon, sigma2, tables: DPTables, s_cap: int,
     return x, {"s_star": s_star, "value_row": v_row}
 
 
-def solve_budgeted_dp_batched(upsilon, sigma2, tables: DPTables, s_cap: int,
-                              s_limit, u_max: int | None = None,
-                              allowed=None, interpret: bool | None = None,
-                              block_b: "int | str" = "auto",
-                              block_c: "int | str | None" = "auto",
-                              block_s: int | None = None,
-                              block_e: int | None = None):
+def solve_budgeted_dp_batched(
+    upsilon,
+    sigma2,
+    tables: DPTables,
+    s_cap: int,
+    s_limit,
+    u_max: int | None = None,
+    allowed=None,
+    interpret: bool | None = None,
+    block_b: "int | str" = "auto",
+    block_c: "int | str | None" = "auto",
+    block_s: int | None = None,
+    block_e: int | None = None,
+):
     """B solves against SHARED tables in ONE kernel launch.
 
     The explicit batched entry point for callers that already hold
@@ -455,3 +506,241 @@ def solve_budgeted_dp_batched(upsilon, sigma2, tables: DPTables, s_cap: int,
         interpret=resolve_interpret(interpret), block_b=block_b,
         block_c=block_c, block_s=block_s, block_e=block_e)
     return x, {"s_star": s_star, "value_row": v_row}
+
+
+class WarmPallasSolver:
+    """Warm-started Pallas path: carried value planes + per-segment launches.
+
+    The kernel entry :func:`dp_forward_pallas` already takes a seed plane
+    ``v0`` (the carried-plane hook), so warm-starting needs NO kernel
+    changes — only a host driver that splits the edge fold into fixed
+    SEGMENTS of ``checkpoint_every`` fold steps and launches them chained
+    (each segment's output plane seeds the next).  A chain of segment
+    launches executes the identical f32 op sequence as one launch, so the
+    split itself is bit-invisible.  Across slots the driver keeps every
+    inter-segment plane plus each segment's packed decision words: when a
+    new solve's delta mask (vs the previous inputs, in FOLD order — edge
+    ``E-1-j`` at fold step ``j``) leaves a prefix of fold steps unchanged,
+    all fully-unchanged segments are SKIPPED — their planes and decisions
+    are reused verbatim — and the fold resumes from the stored plane
+    before the first touched segment.  Resuming from a pre-segment plane
+    (not the final plane) is what keeps the result bit-identical to a cold
+    solve: re-folding an edge into a plane that already absorbed it would
+    double-take it (see ``core.incremental`` for the worked example).
+
+    The eq.-17 selection and the backtrack are recomputed every call (so a
+    changed ``s_limit`` alone costs zero launches).  Decision words are
+    packed per segment in LOCAL edge numbering and concatenated along the
+    word axis; the backtrack streams host-precomputed (word-row, bit)
+    constants per global edge, so it never shifts between packings.
+
+    This is a HOST-side driver: inputs must be concrete (calls with traced
+    arrays raise — put it behind ``sched.dispatcher``'s host loop, not
+    inside a ``lax.scan``).  Call contract and returned ``info`` match the
+    ``pallas`` Solver backend (``value_row`` sanitized to int32/NEG), plus
+    ``edges_folded``.  One instance is bound to one (tables, s_cap, u_max)
+    problem; ``accepts_batch`` is False — batched fleets should use the
+    solve cache instead (``core.solvers.CachedSolver``).
+    """
+
+    accepts_batch = False
+    interpret = None
+
+    def __init__(
+        self,
+        tables: DPTables,
+        s_cap: int,
+        u_max: int | None = None,
+        checkpoint_every: int = 8,
+        interpret: bool | None = None,
+    ):
+        feas, offs = prepare_tables(tables)
+        self.tables = tables
+        self.s_cap = int(s_cap)
+        self.u_max = int(u_max) if u_max is not None else self.s_cap + 1
+        self.k = int(checkpoint_every)
+        if self.k < 1:
+            raise ValueError("checkpoint_every must be >= 1")
+        self.interpret = resolve_interpret(interpret)
+        self._feas, self._offs = feas, offs
+        E = offs.shape[0]
+        S = self.s_cap + 1
+        self._E = E
+        self._off_max = int(offs.max()) if E else 0
+
+        # fixed fold-order segmentation: segment si covers fold steps
+        # [si·k, (si+1)·k) = edges [max(E-(si+1)k, 0), E-si·k)
+        k = self.k
+        self._n_seg = max(1, -(-E // k))
+        self._bounds = [(max(E - (si + 1) * k, 0), E - si * k)
+                        for si in range(self._n_seg)]
+        word_off, off = [], 0
+        for lo, hi in self._bounds:
+            word_off.append(off)
+            off += -(-(hi - lo) // 32)
+        # global edge e → its word row / bit in the concatenated packing
+        e_ids = np.arange(E)
+        si_of = np.minimum((E - 1 - e_ids) // k, self._n_seg - 1)
+        lo_of = np.array([self._bounds[si][0] for si in si_of])
+        local = e_ids - lo_of
+        self._w_rows = (np.array([word_off[si] for si in si_of])
+                        + local // 32).astype(np.int32)
+        self._bits = (local % 32).astype(np.int32)
+
+        self._launch = [self._make_launch(lo, hi) for lo, hi in self._bounds]
+        self._select_back = self._make_select_back()
+
+        # carried fold artifacts (host side)
+        self._v0 = jnp.full((S, tables.n_states), NEG,
+                            jnp.float32).at[0, :].set(0.0)
+        self._planes = [self._v0] + [None] * self._n_seg
+        self._dec = [None] * self._n_seg
+        self._dec_cat = None
+        self._prev = None  # (ups, sig, alw) of the carried solve
+        self.stats = {"solves": 0, "segments_launched": 0,
+                      "segments_skipped": 0, "edges_folded": 0,
+                      "edges_skipped": 0, "full_hits": 0}
+
+    @property
+    def name(self) -> str:
+        return "warm:pallas" + ("_interpret" if self.interpret else "")
+
+    @property
+    def skip_rate(self) -> float:
+        n = self.stats["edges_folded"] + self.stats["edges_skipped"]
+        return self.stats["edges_skipped"] / n if n else 0.0
+
+    def _make_launch(self, lo: int, hi: int):
+        feas_seg = jnp.asarray(self._feas[lo:hi])
+        offs_seg = jnp.asarray(self._offs[lo:hi])
+        be, bs, bc = choose_tiling(self.s_cap + 1, self.tables.n_states,
+                                   hi - lo, self.u_max, self._off_max)
+
+        @jax.jit
+        def launch(ups, sig, alw, v0):
+            f = feas_seg * alw.astype(jnp.float32)[:, None]
+            return dp_forward_pallas(
+                ups, sig, f, offs_seg, v0, n_edges=hi - lo,
+                u_max=self.u_max, off_max=self._off_max,
+                interpret=self.interpret, block_c=bc, block_s=bs,
+                block_e=be)
+
+        return launch
+
+    def _make_select_back(self):
+        offs = jnp.asarray(self._offs)
+        w_rows, bits = jnp.asarray(self._w_rows), jnp.asarray(self._bits)
+        full_state = self.tables.full_state
+        S = self.s_cap + 1
+
+        @jax.jit
+        def select_back(V, decisions, upsilon, s_limit):
+            v_row = V[:, full_state]
+            s_vals = jnp.arange(S, dtype=jnp.int32)
+            ok = (v_row >= 0) & (s_vals <= s_limit)
+            score = s_vals.astype(jnp.float32) + jnp.sqrt(
+                jnp.maximum(v_row, 0.0))
+            s_star = jnp.argmax(jnp.where(ok, score,
+                                          -jnp.inf)).astype(jnp.int32)
+
+            def back(carry, x):
+                s, cs = carry
+                u, off, w, b = x
+                word = jax.lax.dynamic_slice(decisions, (w, s, cs),
+                                             (1, 1, 1))
+                d = (word[0, 0, 0] >> b) & 1
+                taken = d > 0
+                s = jnp.where(taken, jnp.maximum(s - u, 0), s)
+                cs = jnp.where(taken, cs - off, cs)
+                return (s, cs), d
+
+            (_, _), x = jax.lax.scan(
+                back, (s_star, jnp.int32(full_state)),
+                (upsilon, offs, w_rows, bits))
+            # contract sanitization: budget-infeasible entries become the
+            # CORE int32 sentinel (−2²⁹), not the kernel's f32 one
+            row = jnp.where(v_row >= 0, v_row,
+                            float(core_dp.NEG)).astype(jnp.int32)
+            return x, s_star, row
+
+        return select_back
+
+    def reset(self) -> None:
+        """Drop the carried solve (the next call folds everything)."""
+        self._planes = [self._v0] + [None] * self._n_seg
+        self._dec = [None] * self._n_seg
+        self._dec_cat = None
+        self._prev = None
+
+    def __call__(
+        self,
+        upsilon,
+        sigma2,
+        tables: DPTables,
+        s_cap: int,
+        s_limit,
+        allowed=None,
+        u_max: int | None = None,
+    ):
+        if tables is not self.tables or int(s_cap) != self.s_cap:
+            raise ValueError(
+                "WarmPallasSolver is bound to one (tables, s_cap) problem; "
+                "build a new instance for a different one")
+        if any(isinstance(a, jax.core.Tracer)
+               for a in (upsilon, sigma2, s_limit, allowed)
+               if a is not None):
+            raise TypeError(
+                "WarmPallasSolver carries host state and needs concrete "
+                "inputs; inside jit/scan use the reference warm path "
+                "(core.incremental.solve_budgeted_dp_warm) or the solve "
+                "cache instead")
+        _check_value_bound(np.asarray(sigma2), self.tables)
+        _check_u_max(np.asarray(upsilon), self.u_max)
+
+        E = self._E
+        ups = np.asarray(upsilon, np.int32)
+        sig = np.asarray(sigma2, np.int32)
+        alw = (np.ones(E, bool) if allowed is None
+               else np.asarray(allowed, bool))
+
+        # delta mask in fold order → longest unchanged fold prefix
+        if self._prev is None:
+            p = 0
+        else:
+            pu, ps, pa = self._prev
+            changed = ((ups[::-1] != pu[::-1]) | (sig[::-1] != ps[::-1])
+                       | (alw[::-1] != pa[::-1]))
+            nz = np.flatnonzero(changed)
+            p = int(nz[0]) if nz.size else E
+        si_r = self._n_seg if p >= E else p // self.k
+
+        self.stats["solves"] += 1
+        self.stats["segments_skipped"] += si_r
+        self.stats["segments_launched"] += self._n_seg - si_r
+        folded = 0
+        if si_r == self._n_seg:
+            self.stats["full_hits"] += 1
+        else:
+            V = self._planes[si_r]
+            for si in range(si_r, self._n_seg):
+                lo, hi = self._bounds[si]
+                V, dec = self._launch[si](
+                    jnp.asarray(ups[lo:hi]), jnp.asarray(sig[lo:hi]),
+                    jnp.asarray(alw[lo:hi]), V)
+                self._planes[si + 1] = V
+                self._dec[si] = dec
+                folded += hi - lo
+            self._dec_cat = jnp.concatenate(self._dec, axis=0)
+            # defensive copies: np.asarray above is a no-copy view, and a
+            # host loop that mutates its statistics buffers in place would
+            # otherwise mutate the carried inputs too — blinding the delta
+            # mask and silently serving stale planes
+            self._prev = (ups.copy(), sig.copy(), alw.copy())
+        self.stats["edges_folded"] += folded
+        self.stats["edges_skipped"] += E - folded
+
+        x, s_star, row = self._select_back(
+            self._planes[self._n_seg], self._dec_cat, jnp.asarray(ups),
+            jnp.asarray(np.int32(s_limit)))
+        return x, {"s_star": s_star, "value_row": row,
+                   "edges_folded": folded}

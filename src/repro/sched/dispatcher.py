@@ -33,10 +33,13 @@ __all__ = ["ClusterSim", "SimOutput"]
 
 @dataclasses.dataclass(frozen=True)
 class SimOutput:
-    sw: np.ndarray                 # (T,)
-    regret: np.ndarray             # (T,)
-    dispatch_share: np.ndarray     # (T, R) fraction of dispatches per slice
+    sw: np.ndarray  # (T,)
+    regret: np.ndarray  # (T,)
+    dispatch_share: np.ndarray  # (T, R) fraction of dispatches per slice
     asw: float
+    # incremental-solve counters (cache hit rate / warm skip rate) when the
+    # sim ran with incremental= set; None otherwise
+    solve_stats: "dict | None" = None
 
     @property
     def cum_regret(self):
@@ -46,18 +49,47 @@ class SimOutput:
 class ClusterSim:
     """Paired simulation of ESDP vs greedy policies on one cluster instance."""
 
-    def __init__(self, instance: Instance, T: int,
-                 speed_fn: Optional[Callable[[int], np.ndarray]] = None,
-                 alive_fn: Optional[Callable[[int], np.ndarray]] = None,
-                 g_fn=stats_mod.g_logt_only, seed: int = 0,
-                 scenario: Optional[Scenario] = None,
-                 solver: "str | Solver | None" = None):
+    def __init__(
+        self,
+        instance: Instance,
+        T: int,
+        speed_fn: Optional[Callable[[int], np.ndarray]] = None,
+        alive_fn: Optional[Callable[[int], np.ndarray]] = None,
+        g_fn=stats_mod.g_logt_only,
+        seed: int = 0,
+        scenario: Optional[Scenario] = None,
+        solver: "str | Solver | None" = None,
+        incremental: "str | None" = None,
+        solve_cache=None,
+        warm_checkpoint_every: int = 8,
+    ):
+        """``incremental`` turns on cross-slot re-solve reuse for the ESDP
+        policy (bit-identical in the default exact modes):
+
+          ``"cache"`` — wrap the backend in a ``CachedSolver``
+            (``core.solvers``): per-slot solves with statistics already
+            seen skip the launch entirely.  Works with every backend (and
+            with ``run_batch``, per-seed keys).  ``solve_cache`` optionally
+            supplies a preconfigured ``core.incremental.SolveCache`` (e.g.
+            quantized/bounded-staleness).
+          ``"warm"`` — the host-driven segmented Pallas warm path
+            (``kernels.budgeted_dp.ops.WarmPallasSolver``): re-fold only
+            the edges whose statistics changed since the previous slot,
+            checkpointing every ``warm_checkpoint_every`` fold steps.
+            Requires a Pallas backend and the single-seed ``run()``.
+        """
         self.inst = instance
         self.T = T
         self.tables = build_tables(instance.A, instance.c)
         self.g_fn = g_fn
         self.seed = seed
-        self.solver = get_solver(solver)   # Algorithm-2 backend (core.solvers)
+        self.solver = get_solver(solver)  # Algorithm-2 backend (core.solvers)
+        if incremental not in (None, "cache", "warm"):
+            raise ValueError(
+                f"unknown incremental mode {incremental!r}; choose from "
+                "(None, 'cache', 'warm')")
+        self.incremental = incremental
+        self._warm = None
         R = instance.n_servers
         self.arr_scale = np.ones((T, instance.n_ports), np.float32)
         if scenario is not None:
@@ -68,13 +100,35 @@ class ClusterSim:
             arr_scale, speeds, alive = unroll_scenario(
                 scenario, T, R, seed, n_ports=instance.n_ports)
             self.arr_scale = arr_scale
-            speed_fn = lambda t: speeds[t]      # noqa: E731 — row t ↔ slot t+1
-            alive_fn = lambda t: alive[t]       # noqa: E731
+            speed_fn = lambda t: speeds[t]  # noqa: E731 — row t ↔ slot t+1
+            alive_fn = lambda t: alive[t]  # noqa: E731
         self.speed_fn = speed_fn or (lambda t: np.ones(R, np.float32))
         self.alive_fn = alive_fn or (lambda t: np.ones(R, bool))
         self.m = instance.m
         self.s_cap = stats_mod.s_cap_for_horizon(T, self.m)
         self.u_max = stats_mod.u_max_for_horizon(T, self.m)
+        if incremental == "cache":
+            from ..core.solvers import CachedSolver
+            self.solver = CachedSolver(self.solver, cache=solve_cache)
+        elif incremental == "warm":
+            if self.solver.name not in ("pallas", "pallas_interpret"):
+                raise ValueError(
+                    'incremental="warm" drives the Pallas carried-plane '
+                    f"path; got backend {self.solver.name!r}. Use "
+                    'incremental="cache" (any backend) or the in-scan '
+                    'cache="warm" policy mode in core.esdp instead.')
+            from ..kernels.budgeted_dp.ops import WarmPallasSolver
+            self._warm = WarmPallasSolver(
+                self.tables, self.s_cap, u_max=self.u_max,
+                checkpoint_every=warm_checkpoint_every,
+                interpret=self.solver.interpret)
+
+    def _solve_stats(self) -> "dict | None":
+        if self.incremental == "cache":
+            return self.solver.stats.as_dict()
+        if self.incremental == "warm":
+            return dict(self._warm.stats, edge_skip_rate=self._warm.skip_rate)
+        return None
 
     # ------------------------------------------------------------------
     def _streams(self, seed: int | None = None):
@@ -122,10 +176,24 @@ class ClusterSim:
         regret = np.zeros(self.T, np.float32)
         share = np.zeros((self.T, R), np.float32)
 
-        jit_dp = jax.jit(
-            lambda u, s, lim, al: self.solver(
-                u, s, tables, self.s_cap, lim, allowed=al,
-                u_max=self.u_max)[0])
+        if self.incremental is None:
+            jit_dp = jax.jit(
+                lambda u, s, lim, al: self.solver(
+                    u, s, tables, self.s_cap, lim, allowed=al,
+                    u_max=self.u_max)[0])
+
+            def solve_x(u, s, lim, al):
+                return np.asarray(jit_dp(u, s, lim, jnp.asarray(al)))
+        else:
+            # host-side incremental paths need concrete inputs — the
+            # CachedSolver/WarmPallasSolver jit their own launch internals
+            # and skip them entirely on hits / unchanged fold prefixes
+            inc = self.solver if self.incremental == "cache" else self._warm
+
+            def solve_x(u, s, lim, al):
+                return np.asarray(inc(u, s, tables, self.s_cap, int(lim),
+                                      allowed=al, u_max=self.u_max)[0])
+
         jit_oracle = jax.jit(
             lambda v, al: oracle_knapsack(v, tables, al)[0])
         jit_greedy = jax.jit(
@@ -133,8 +201,8 @@ class ClusterSim:
                                        jnp.asarray(inst.c)))
 
         for t0 in range(self.T):
-            t = t0 + 1                      # 1-based for the bandit schedules
-            alive = self.alive_fn(t0)[server]   # schedules are 0-based
+            t = t0 + 1  # 1-based for the bandit schedules
+            alive = self.alive_fn(t0)[server]  # schedules are 0-based
             arrived = arrivals[t0][port]
             allowed = arrived & alive
             vhat = np.where(n > 0, sumz / np.maximum(n, 1), 0.0).astype(
@@ -144,15 +212,14 @@ class ClusterSim:
                 ups, sig, _, s_lim = stats_mod.scale_statistics(
                     jnp.asarray(vhat), jnp.asarray(n.astype(np.int32)),
                     jnp.float32(t), self.m, g_fn=self.g_fn)
-                x = np.asarray(jit_dp(ups, sig, s_lim,
-                                      jnp.asarray(allowed)))
+                x = solve_x(ups, sig, s_lim, allowed)
             else:
                 tb = rng.random(E).astype(np.float32) * tiebreak
                 if policy == "hswf":
                     score = vhat + tb
                 elif policy == "lcf":
                     score = -inst.cost + tb
-                else:   # lwtf
+                else:  # lwtf
                     score = waiting[port] * 1e3 + vhat + tb
                 x = np.asarray(jit_greedy(jnp.asarray(score),
                                           jnp.asarray(allowed)))
@@ -174,11 +241,14 @@ class ClusterSim:
                 np.add.at(share[t0], server, x / x.sum())
 
         return SimOutput(sw=sw, regret=regret, dispatch_share=share,
-                         asw=float(sw.sum()))
+                         asw=float(sw.sum()),
+                         solve_stats=(self._solve_stats()
+                                      if policy == "esdp" else None))
 
     # ------------------------------------------------------------------
-    def run_batch(self, seeds, policy: str = "esdp",
-                  tiebreak: float = 1e-4) -> "list[SimOutput]":
+    def run_batch(
+        self, seeds, policy: str = "esdp", tiebreak: float = 1e-4
+    ) -> "list[SimOutput]":
         """One paired simulation per seed, fleet-batched per slot.
 
         Every seed replays the SAME cluster schedule (speed/aliveness
@@ -194,6 +264,11 @@ class ClusterSim:
 
         Returns one :class:`SimOutput` per seed, in seed order.
         """
+        if self.incremental == "warm":
+            raise NotImplementedError(
+                'incremental="warm" carries one value-plane chain and so '
+                "runs single-seed only (run()); use incremental=\"cache\" "
+                "for fleet batches — its keys are per instance row")
         inst, tables = self.inst, self.tables
         E, R = inst.n_edges, inst.n_servers
         port = inst.port_of_edge
@@ -201,8 +276,8 @@ class ClusterSim:
         seeds = [int(s) for s in seeds]
         B = len(seeds)
         streams = [self._streams(s) for s in seeds]
-        arrivals = np.stack([a for a, _ in streams])       # (B, T, P)
-        noise = np.stack([z for _, z in streams])          # (B, T, E)
+        arrivals = np.stack([a for a, _ in streams])  # (B, T, P)
+        noise = np.stack([z for _, z in streams])  # (B, T, E)
         rngs = [np.random.default_rng(s + 1) for s in seeds]
         b_ids = np.arange(B)[:, None]
 
@@ -218,10 +293,21 @@ class ClusterSim:
             lambda v, k, t: stats_mod.scale_statistics(
                 v, k, t, self.m, g_fn=self.g_fn),
             in_axes=(0, 0, None)))
-        jit_dp = jax.jit(jax.vmap(
-            lambda u, s, lim, al: self.solver(
-                u, s, tables, self.s_cap, lim, allowed=al,
-                u_max=self.u_max)[0]))
+        if self.incremental is None:
+            jit_dp = jax.jit(jax.vmap(
+                lambda u, s, lim, al: self.solver(
+                    u, s, tables, self.s_cap, lim, allowed=al,
+                    u_max=self.u_max)[0]))
+
+            def solve_x(u, s, lim, al):
+                return np.asarray(jit_dp(u, s, lim, jnp.asarray(al)))
+        else:
+            # CachedSolver's concrete batched path: per-row keys, one
+            # batched launch on any miss, no launch at all on a full hit
+            def solve_x(u, s, lim, al):
+                return np.asarray(self.solver(
+                    np.asarray(u), np.asarray(s), tables, self.s_cap,
+                    np.asarray(lim), allowed=al, u_max=self.u_max)[0])
         jit_oracle = jax.jit(jax.vmap(
             lambda v, al: oracle_knapsack(v, tables, al)[0],
             in_axes=(None, 0)))
@@ -230,9 +316,9 @@ class ClusterSim:
                                        jnp.asarray(inst.c))))
 
         for t0 in range(self.T):
-            t = t0 + 1                      # 1-based for the bandit schedules
-            alive = self.alive_fn(t0)[server]           # shared schedule
-            arrived = arrivals[:, t0][:, port]          # (B, E)
+            t = t0 + 1  # 1-based for the bandit schedules
+            alive = self.alive_fn(t0)[server]  # shared schedule
+            arrived = arrivals[:, t0][:, port]  # (B, E)
             allowed = arrived & alive[None, :]
             vhat = np.where(n > 0, sumz / np.maximum(n, 1), 0.0).astype(
                 np.float32)
@@ -241,8 +327,7 @@ class ClusterSim:
                 ups, sig, _, s_lim = jit_stats(
                     jnp.asarray(vhat), jnp.asarray(n.astype(np.int32)),
                     jnp.float32(t))
-                x = np.asarray(jit_dp(ups, sig, s_lim,
-                                      jnp.asarray(allowed)))
+                x = solve_x(ups, sig, s_lim, allowed)
             else:
                 tb = np.stack([r.random(E) for r in rngs]).astype(
                     np.float32) * tiebreak
@@ -250,13 +335,13 @@ class ClusterSim:
                     score = vhat + tb
                 elif policy == "lcf":
                     score = -inst.cost[None, :] + tb
-                else:   # lwtf
+                else:  # lwtf
                     score = waiting[:, port] * 1e3 + vhat + tb
                 x = np.asarray(jit_greedy(jnp.asarray(score),
                                           jnp.asarray(allowed)))
 
             x = x * allowed
-            z = self._z(t0, noise[:, t0])               # broadcasts to (B, E)
+            z = self._z(t0, noise[:, t0])  # broadcasts to (B, E)
             sw[:, t0] = (x * z).sum(axis=1)
             v_true = self._v_true(t0)
             x_star = np.asarray(jit_oracle(jnp.asarray(v_true),
@@ -273,6 +358,8 @@ class ClusterSim:
             for b in np.flatnonzero(tot > 0):
                 np.add.at(share[b, t0], server, x[b] / tot[b])
 
+        stats = self._solve_stats() if policy == "esdp" else None
         return [SimOutput(sw=sw[b], regret=regret[b],
                           dispatch_share=share[b],
-                          asw=float(sw[b].sum())) for b in range(B)]
+                          asw=float(sw[b].sum()),
+                          solve_stats=stats) for b in range(B)]

@@ -3,7 +3,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-try:        # optional [test] extra — property tests skip cleanly without it
+try:  # optional [test] extra — property tests skip cleanly without it
     from hypothesis import given, settings, strategies as st
     HAS_HYPOTHESIS = True
 except ImportError:
@@ -89,12 +89,45 @@ def test_horizon_for_s_cap_inverts_s_cap_for_horizon():
     assert horizon_for_s_cap(4096, 36) is not None
 
 
+def test_horizon_for_s_cap_exact_above_f32_range():
+    """Regression (f32 precision): ``_xi_at_horizon`` used to evaluate
+    ``delta_fn(jnp.float32(T))`` — exact only for T < 2²⁴.  Above that the
+    float32 grid quantizes T (spacing 512 near 3·10⁹, ≈2¹⁷ near 10¹²), so
+    ``horizon_for_s_cap`` landed on a float32 grid edge instead of the true
+    integer threshold (≈2·10⁴ slots off at the horizon pinned here).  The
+    pure-``math`` float64 oracle below reproduces the sizing map
+    independently and pins the exact minimal horizon."""
+    import math
+    m = 16
+
+    def delta_host(t):  # the paper default, float64
+        return 1.0 / (math.log(math.log(t + 1.0) + 1.0) + 1.0)
+
+    def cap(T):
+        return math.ceil(m / delta_host(float(T))) * m
+
+    s_cap = cap(10 ** 10)
+    lo, hi = 1, 10 ** 12
+    assert cap(lo) < s_cap <= cap(hi)
+    while lo + 1 < hi:  # exact bisection, pure math
+        mid = (lo + hi) // 2
+        if cap(mid) < s_cap:
+            lo = mid
+        else:
+            hi = mid
+    t_star = hi
+    assert t_star > 2 ** 24  # the regime f32 mangled
+    assert horizon_for_s_cap(s_cap, m) == t_star
+    assert s_cap_for_horizon(t_star, m) >= s_cap
+    assert s_cap_for_horizon(t_star - 1, m) < s_cap
+
+
 def test_horizon_for_s_cap_t_max_window():
     """Regression: thresholds between the last power-of-two probe and
     t_max must still be found (the doubling loop clamps its final probe
     to t_max instead of bailing past it)."""
     def delta(t):
-        return 1.0 / jnp.sqrt(t)            # s_cap grows fast enough
+        return 1.0 / jnp.sqrt(t)  # s_cap grows fast enough
 
     m, s_cap = 4, 72
     T = horizon_for_s_cap(s_cap, m, delta)  # unbounded-ish search

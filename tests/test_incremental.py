@@ -1,0 +1,539 @@
+"""Tests for the cross-slot incremental re-solve layer (core.incremental).
+
+Three contracts are enforced here:
+
+* **Exactness** — the exact-key solve cache (``SolveCache`` quanta = 1,
+  ``CachedSolver``), the warm-started reference path
+  (``solve_budgeted_dp_warm``) and the segmented Pallas driver
+  (``WarmPallasSolver``) must be BIT-identical to cold solves over drift
+  sequences: fold-suffix statistic drifts, ``s_limit``-only changes, and
+  eligibility flips.
+* **No key aliasing** — batched ``(B, E)`` solves through ``CachedSolver``
+  key every row independently; rows engineered to collide under naive key
+  packing (same bytes, different fields) must not alias, for B ∈ {1, 2, 7}.
+* **Determinism** — LRU eviction and the hit/miss trace replay identically
+  for an identical call sequence (hypothesis-driven when the [test] extra
+  is present, seeded otherwise), so cached runs are reproducible.
+
+Plus the policy layer: ``cache="memo"`` / ``cache="warm"`` ESDP policies
+are trace-invariant vs ``cache=None`` through ``simulate`` AND
+``simulate_batch``, and their ``finalize`` counters are sane.
+"""
+import numpy as np
+import pytest
+
+try:  # optional [test] extra — property tests skip cleanly without it
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (build_tables, generate_instance, make_esdp_policy,
+                        simulate, simulate_batch)
+from repro.core.incremental import (CacheStats, SolveCache, WarmCarry,
+                                    changed_edge_mask, n_checkpoints,
+                                    solve_budgeted_dp_warm, solve_key,
+                                    unchanged_fold_prefix, warm_carry_init)
+from repro.core.solvers import CachedSolver, get_solver
+from repro.kernels.budgeted_dp.ops import WarmPallasSolver
+
+REF = get_solver("reference")
+PAL = get_solver("pallas_interpret")
+
+
+# ---------------------------------------------------------------------------
+# shared problem + drift-sequence machinery
+# ---------------------------------------------------------------------------
+
+def _problem(seed=0, E=10, K=2, c_hi=3, u_hi=5, sig_hi=5000):
+    rng = np.random.default_rng(seed)
+    A = rng.integers(1, 3, size=(K, E))
+    c = rng.integers(1, c_hi + 1, size=K)
+    A = np.minimum(A, c[:, None])
+    ups = rng.integers(0, u_hi + 1, size=E).astype(np.int32)
+    sig = rng.integers(1, sig_hi + 1, size=E).astype(np.int32)
+    return build_tables(A, c), ups, sig
+
+
+def _drift_seq(rng, ups, sig, s_cap, n_steps, u_hi=5, sig_hi=5000):
+    """A seeded slot sequence exercising every delta-mask regime.
+
+    Yields (ups, sig, alw, s_limit) tuples.  "suffix" steps mutate LOW
+    edge indices — late FOLD steps (edge e folds at step E-1-e), so warm
+    paths get a long unchanged prefix; "head" steps mutate edge E-1 (fold
+    step 0 — full refold); "slim" steps change only the budget mask;
+    "alw" flips one eligibility bit; "repeat" replays the previous slot
+    verbatim (the exact-cache hit case).
+    """
+    E = len(ups)
+    ups, sig = ups.copy(), sig.copy()
+    alw = np.ones(E, bool)
+    s_limit = s_cap
+    kinds = ["head", "suffix", "slim", "repeat", "suffix", "alw",
+             "repeat", "slim", "suffix", "head"]
+    out = [(ups.copy(), sig.copy(), alw.copy(), s_limit)]
+    for i in range(n_steps - 1):
+        kind = kinds[i % len(kinds)]
+        if kind == "suffix":
+            e = int(rng.integers(0, max(1, E // 4)))
+            ups[e] = rng.integers(0, u_hi + 1)
+            sig[e] = rng.integers(1, sig_hi + 1)
+        elif kind == "head":
+            sig[E - 1] = rng.integers(1, sig_hi + 1)
+        elif kind == "alw":
+            e = int(rng.integers(0, E))
+            alw[e] = ~alw[e]
+        elif kind == "slim":
+            s_limit = int(rng.integers(0, s_cap + 1))
+        # "repeat": no mutation
+        out.append((ups.copy(), sig.copy(), alw.copy(), s_limit))
+    return out
+
+
+def _cold(solver, ups, sig, tables, s_cap, s_limit, alw):
+    x, info = solver(jnp.asarray(ups, jnp.int32), jnp.asarray(sig, jnp.int32),
+                     tables, s_cap, jnp.int32(s_limit),
+                     None if alw is None else jnp.asarray(alw))
+    return (np.asarray(x), int(info["s_star"]), np.asarray(info["value_row"]))
+
+
+# ---------------------------------------------------------------------------
+# solve_key / SolveCache units
+# ---------------------------------------------------------------------------
+
+def test_solve_key_fields_do_not_alias():
+    """Fixed field order + fixed widths: moving the same bytes between
+    fields (Υ̂↔Σ̂², Υ̂↔s_limit) must change the key; allowed=None equals
+    the explicit all-True mask."""
+    ups = np.array([2, 0, 0, 0], np.int32)
+    sig = np.array([1, 1, 1, 1], np.int32)
+    k0 = solve_key(ups, sig, None, 5)
+    assert k0 == solve_key(ups, sig, np.ones(4, bool), 5)
+    assert k0 != solve_key(sig, ups, None, 5)  # Υ̂ ↔ Σ̂² swap
+    assert k0 != solve_key(np.array([5, 0, 0, 0], np.int32), sig, None, 2)
+    assert k0 != solve_key(ups, sig, None, 2)  # s_limit exact
+    assert k0 != solve_key(ups, sig, np.array([1, 1, 1, 0], bool), 5)
+
+
+def test_solve_key_quantization_buckets():
+    ups = np.array([10, 20], np.int32)
+    sig = np.array([100, 200], np.int32)
+    # same bucket under q=8: 10//8 == 15//8
+    assert (solve_key(ups, sig, None, 3, q_ups=8)
+            == solve_key(np.array([15, 23], np.int32), sig, None, 3, q_ups=8))
+    # different bucket
+    assert (solve_key(ups, sig, None, 3, q_ups=8)
+            != solve_key(np.array([16, 20], np.int32), sig, None, 3, q_ups=8))
+    # eligibility is never quantized
+    assert (solve_key(ups, sig, np.array([1, 0], bool), 3, q_ups=8)
+            != solve_key(ups, sig, None, 3, q_ups=8))
+
+
+def test_solve_cache_exact_flag_and_validation():
+    assert SolveCache().exact
+    assert not SolveCache(q_ups=4).exact
+    assert not SolveCache(q_sig=16).exact
+    with pytest.raises(ValueError):
+        SolveCache(capacity=0)
+    with pytest.raises(ValueError):
+        SolveCache(q_ups=0)
+
+
+def _cache_trace(ops, capacity):
+    """Replay a sequence of (key, value) ops; return the observable trace."""
+    cache = SolveCache(capacity=capacity)
+    trace = []
+    for key, val in ops:
+        hit = cache.get(key)
+        if hit is None:
+            cache.put(key, val)
+        trace.append((hit, cache.stats.hits, cache.stats.misses,
+                      cache.stats.evictions, len(cache)))
+    return trace
+
+
+def _eviction_determinism_body(seed, capacity):
+    rng = np.random.default_rng(seed)
+    ops = [(bytes([rng.integers(0, 6)]), int(rng.integers(0, 100)))
+           for _ in range(40)]
+    t1 = _cache_trace(ops, capacity)
+    t2 = _cache_trace(ops, capacity)
+    assert t1 == t2
+    # LRU, not FIFO: a hit refreshes recency.  With capacity 2 the
+    # sequence a,b,a,c must evict b (a was refreshed), keeping a.
+    c = SolveCache(capacity=2)
+    for k in (b"a", b"b"):
+        c.put(k, k)
+    assert c.get(b"a") == b"a"
+    c.put(b"c", b"c")
+    assert c.get(b"b") is None and c.get(b"a") == b"a"
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+    def test_cache_eviction_deterministic(seed, capacity):
+        _eviction_determinism_body(seed, capacity)
+else:
+    def test_cache_eviction_deterministic():
+        for seed in (0, 7, 1234):
+            for capacity in (1, 2, 3):
+                _eviction_determinism_body(seed, capacity)
+
+
+def test_solve_cache_max_stale_refuses_and_refreshes():
+    cache = SolveCache(q_ups=8, max_stale=2)
+    cache.put(b"k", "v0")
+    cache.tick()
+    cache.tick()
+    assert cache.get(b"k") == "v0"  # age 2 == max_stale: still valid
+    cache.tick()
+    assert cache.get(b"k") is None  # age 3 > max_stale: refused
+    assert cache.stats.stale_rejects == 1
+    cache.put(b"k", "v1")  # refreshed entry restarts clock
+    assert cache.get(b"k") == "v1"
+
+
+def test_cache_stats_dict_shape():
+    d = CacheStats(hits=3, misses=1).as_dict()
+    assert d["cache_hit_rate"] == pytest.approx(0.75)
+    assert set(d) == {"hits", "misses", "evictions", "stale_rejects",
+                      "bypasses", "launches_saved", "cache_hit_rate"}
+
+
+# ---------------------------------------------------------------------------
+# CachedSolver: exact-key bit-identity, batching, no aliasing, bypass
+# ---------------------------------------------------------------------------
+
+def test_cached_solver_exact_hits_bit_identical():
+    tables, ups, sig = _problem(seed=1)
+    s_cap = int(ups.sum())
+    cached = CachedSolver(REF)
+    assert cached.exact and cached.name == "cached:reference"
+    rng = np.random.default_rng(2)
+    seq = _drift_seq(rng, ups, sig, s_cap, 12)
+    for u, s, a, lim in seq + seq:  # second pass: all exact hits
+        want = _cold(REF, u, s, tables, s_cap, lim, a)
+        x, info = cached(u, s, tables, s_cap, lim, allowed=a)
+        np.testing.assert_array_equal(x, want[0])
+        assert int(info["s_star"]) == want[1]
+        np.testing.assert_array_equal(info["value_row"], want[2])
+    st = cached.stats
+    assert st.hits >= len(seq)  # full replay + "repeat" slots
+    assert st.launches_saved == st.hits
+    assert st.bypasses == 0
+
+
+@pytest.mark.parametrize("B", [1, 2, 7])
+def test_cached_solver_batched_no_aliasing(B):
+    """(B, E) solves: per-row keys, per-row bit-identity vs a reference
+    loop, and a full-hit replay skips the launch.  Rows 0/1 are engineered
+    near-collisions (Υ̂ of one equals Σ̂² of the other, s_limit swapped
+    with a Υ̂ entry) — aliasing would serve row 0's solution to row 1."""
+    tables, ups, sig = _problem(seed=3, E=8)
+    E, s_cap = len(ups), int(ups.sum())
+    rng = np.random.default_rng(4)
+    ups_b = np.stack([ups] * B).astype(np.int32)
+    sig_b = np.stack([sig] * B).astype(np.int32)
+    alw_b = np.ones((B, E), bool)
+    lim_b = np.full(B, s_cap, np.int64)
+    if B >= 2:  # the near-collision pair
+        ups_b[1], sig_b[1] = sig_b[0] % (s_cap + 1), ups_b[0] + 1
+        lim_b[1] = int(ups_b[0][0])
+        ups_b[0][0] = lim_b[0] % 6
+    for b in range(2, B):  # remaining rows: random drift
+        ups_b[b] = rng.integers(0, 6, E)
+        alw_b[b] = rng.integers(0, 2, E).astype(bool)
+        lim_b[b] = int(rng.integers(0, s_cap + 1))
+    keys = [solve_key(ups_b[b], sig_b[b], alw_b[b], lim_b[b])
+            for b in range(B)]
+    assert len(set(keys)) == B  # no aliasing at the key level
+
+    cached = CachedSolver(REF)
+    x, info = cached(ups_b, sig_b, tables, s_cap, lim_b, allowed=alw_b)
+    for b in range(B):
+        want = _cold(REF, ups_b[b], sig_b[b], tables, s_cap,
+                     int(lim_b[b]), alw_b[b])
+        np.testing.assert_array_equal(x[b], want[0])
+        assert int(info["s_star"][b]) == want[1]
+        np.testing.assert_array_equal(info["value_row"][b], want[2])
+
+    saved0 = cached.stats.launches_saved
+    x2, info2 = cached(ups_b, sig_b, tables, s_cap, lim_b, allowed=alw_b)
+    assert cached.stats.launches_saved == saved0 + 1  # full-hit replay
+    np.testing.assert_array_equal(x2, x)
+    np.testing.assert_array_equal(info2["value_row"], info["value_row"])
+
+
+def test_cached_solver_partial_batch_miss_launches_once():
+    """One changed row forces ONE batched launch; every row refreshes."""
+    tables, ups, sig = _problem(seed=5, E=6)
+    s_cap = int(ups.sum())
+    cached = CachedSolver(REF)
+    ups_b = np.stack([ups, ups]).astype(np.int32)
+    sig_b = np.stack([sig, sig]).astype(np.int32)
+    cached(ups_b, sig_b, tables, s_cap, np.array([s_cap, s_cap]))
+    ups_b2 = ups_b.copy()
+    ups_b2[1, 0] = (ups_b2[1, 0] + 1) % 6
+    saved = cached.stats.launches_saved
+    x, info = cached(ups_b2, sig_b, tables, s_cap, np.array([s_cap, s_cap]))
+    assert cached.stats.launches_saved == saved  # row 1 missed
+    want = _cold(REF, ups_b2[1], sig_b[1], tables, s_cap, s_cap, None)
+    np.testing.assert_array_equal(x[1], want[0])
+    np.testing.assert_array_equal(info["value_row"][1], want[2])
+
+
+def test_cached_solver_traced_inputs_bypass():
+    tables, ups, sig = _problem(seed=6, E=6)
+    s_cap = int(ups.sum())
+    cached = CachedSolver(REF)
+
+    @jax.jit
+    def run(u, s):
+        x, _ = cached(u, s, tables, s_cap, jnp.int32(s_cap))
+        return x
+
+    x = run(jnp.asarray(ups), jnp.asarray(sig))
+    want = _cold(REF, ups, sig, tables, s_cap, s_cap, None)
+    np.testing.assert_array_equal(np.asarray(x), want[0])
+    assert cached.stats.bypasses == 1
+    assert cached.stats.hits == 0 and cached.stats.misses == 0
+
+
+def test_cached_solver_quantized_mode_reports_inexact():
+    """Approximate mode must (a) say so via ``exact``; (b) serve feasible
+    solutions: capacity feasibility never depends on the statistics."""
+    tables, ups, sig = _problem(seed=7, E=8)
+    s_cap = int(ups.sum())
+    cached = CachedSolver(REF, q_sig=64)
+    assert not cached.exact
+    x0, _ = cached(ups, sig, tables, s_cap, s_cap)
+    sig2 = sig + np.arange(len(sig)) % 3  # same q_sig=64 bucket... maybe
+    x1, _ = cached(ups, sig2, tables, s_cap, s_cap)
+    A = np.asarray(tables.A) if hasattr(tables, "A") else None
+    for x in (x0, x1):
+        assert set(np.unique(x)) <= {0, 1}
+
+
+# ---------------------------------------------------------------------------
+# warm-started reference path: bit-identity + fold accounting
+# ---------------------------------------------------------------------------
+
+def _make_warm_fn(tables, s_cap, k):
+    @jax.jit
+    def warm(u, s, lim, a, carry):
+        return solve_budgeted_dp_warm(u, s, tables, s_cap, lim, carry,
+                                      allowed=a, checkpoint_every=k)
+    return warm
+
+
+@pytest.mark.parametrize("k", [1, 4, 8])
+def test_warm_reference_bit_identical_over_drift(k):
+    tables, ups, sig = _problem(seed=8)
+    E, s_cap = len(ups), int(ups.sum())
+    rng = np.random.default_rng(9)
+    seq = _drift_seq(rng, ups, sig, s_cap, 14)
+    warm = _make_warm_fn(tables, s_cap, k)
+    carry = warm_carry_init(E, s_cap, tables.n_states, k)
+    folded = []
+    for u, s, a, lim in seq:
+        want = _cold(REF, u, s, tables, s_cap, lim, a)
+        x, info, carry = warm(jnp.asarray(u), jnp.asarray(s),
+                              jnp.int32(lim), jnp.asarray(a), carry)
+        np.testing.assert_array_equal(np.asarray(x), want[0])
+        assert int(info["s_star"]) == want[1]
+        np.testing.assert_array_equal(np.asarray(info["value_row"]), want[2])
+        folded.append(int(info["edges_folded"]))
+    assert folded[0] == E  # invalid carry: full cold fold
+    assert all(0 <= f <= E for f in folded)
+    assert sum(folded) < len(seq) * E  # the drift structure saves work
+
+
+def test_warm_reference_s_limit_only_folds_zero():
+    tables, ups, sig = _problem(seed=10)
+    E, s_cap = len(ups), int(ups.sum())
+    warm = _make_warm_fn(tables, s_cap, 4)
+    carry = warm_carry_init(E, s_cap, tables.n_states, 4)
+    a = np.ones(E, bool)
+    _, info, carry = warm(jnp.asarray(ups), jnp.asarray(sig),
+                          jnp.int32(s_cap), jnp.asarray(a), carry)
+    assert int(info["edges_folded"]) == E
+    for lim in (0, s_cap // 2, s_cap):  # budget-only changes: free
+        want = _cold(REF, ups, sig, tables, s_cap, lim, a)
+        x, info, carry = warm(jnp.asarray(ups), jnp.asarray(sig),
+                              jnp.int32(lim), jnp.asarray(a), carry)
+        assert int(info["edges_folded"]) == 0
+        np.testing.assert_array_equal(np.asarray(x), want[0])
+        assert int(info["s_star"]) == want[1]
+
+
+def test_warm_reference_inside_lax_scan():
+    """The warm path is scan-carriable: a lax.scan over a stacked slot
+    sequence matches the per-slot cold loop bit for bit."""
+    tables, ups, sig = _problem(seed=11, E=8)
+    E, s_cap = len(ups), int(ups.sum())
+    rng = np.random.default_rng(12)
+    seq = _drift_seq(rng, ups, sig, s_cap, 10)
+    U = jnp.asarray(np.stack([q[0] for q in seq]))
+    S = jnp.asarray(np.stack([q[1] for q in seq]))
+    A = jnp.asarray(np.stack([q[2] for q in seq]))
+    L = jnp.asarray(np.array([q[3] for q in seq], np.int32))
+
+    def step(carry, slot):
+        u, s, a, lim = slot
+        x, info, carry = solve_budgeted_dp_warm(
+            u, s, tables, s_cap, lim, carry, allowed=a, checkpoint_every=4)
+        return carry, (x, info["s_star"], info["edges_folded"])
+
+    carry0 = warm_carry_init(E, s_cap, tables.n_states, 4)
+    _, (xs, stars, folded) = jax.lax.scan(step, carry0, (U, S, A, L))
+    for i, (u, s, a, lim) in enumerate(seq):
+        want = _cold(REF, u, s, tables, s_cap, lim, a)
+        np.testing.assert_array_equal(np.asarray(xs[i]), want[0])
+        assert int(stars[i]) == want[1]
+    assert int(folded[0]) == E and int(folded.sum()) < len(seq) * E
+
+
+def test_delta_mask_and_prefix_helpers():
+    tables, ups, sig = _problem(seed=13, E=6)
+    E, s_cap = len(ups), int(ups.sum())
+    carry = warm_carry_init(E, s_cap, tables.n_states, 4)
+    # invalid carry: everything changed
+    m = changed_edge_mask(carry, jnp.asarray(ups), jnp.asarray(sig), None)
+    assert bool(m.all()) and int(unchanged_fold_prefix(m)) == 0
+    # a valid carry of these exact inputs: nothing changed, prefix == E
+    carry = WarmCarry(ups_f=jnp.asarray(ups[::-1]),
+                      sig_f=jnp.asarray(sig[::-1]),
+                      alw_f=jnp.ones(E, bool), ckpts=carry.ckpts,
+                      v_final=carry.v_final, decisions=carry.decisions,
+                      valid=jnp.asarray(True))
+    m = changed_edge_mask(carry, jnp.asarray(ups), jnp.asarray(sig), None)
+    assert not bool(m.any()) and int(unchanged_fold_prefix(m)) == E
+    # edge 0 folds LAST: changing it leaves an E-1 unchanged prefix
+    u2 = ups.copy()
+    u2[0] += 1
+    m = changed_edge_mask(carry, jnp.asarray(u2), jnp.asarray(sig), None)
+    assert int(unchanged_fold_prefix(m)) == E - 1
+    assert n_checkpoints(E, 4) == 2
+
+
+# ---------------------------------------------------------------------------
+# WarmPallasSolver: segmented carried-plane path vs cold pallas backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [3, 8])
+def test_warm_pallas_bit_identical_over_drift(k):
+    tables, ups, sig = _problem(seed=14)
+    E, s_cap = len(ups), int(ups.sum())
+    warm = WarmPallasSolver(tables, s_cap, checkpoint_every=k,
+                            interpret=True)
+    assert warm.name == "warm:pallas_interpret"
+    rng = np.random.default_rng(15)
+    seq = _drift_seq(rng, ups, sig, s_cap, 12)
+    for u, s, a, lim in seq:
+        want = _cold(PAL, u, s, tables, s_cap, lim, a)
+        x, info = warm(u, s, tables, s_cap, lim, allowed=a)
+        np.testing.assert_array_equal(np.asarray(x), want[0])
+        assert int(info["s_star"]) == want[1]
+        np.testing.assert_array_equal(np.asarray(info["value_row"]), want[2])
+    assert warm.stats["solves"] == len(seq)
+    assert warm.stats["full_hits"] >= 2  # "repeat" and "slim" slots
+    assert 0.0 < warm.skip_rate < 1.0
+
+
+def test_warm_pallas_s_limit_only_zero_launches():
+    tables, ups, sig = _problem(seed=16)
+    E, s_cap = len(ups), int(ups.sum())
+    warm = WarmPallasSolver(tables, s_cap, checkpoint_every=4,
+                            interpret=True)
+    warm(ups, sig, tables, s_cap, s_cap)
+    launched = warm.stats["segments_launched"]
+    for lim in (0, s_cap // 3, s_cap):
+        want = _cold(PAL, ups, sig, tables, s_cap, lim, None)
+        x, info = warm(ups, sig, tables, s_cap, lim)
+        assert int(info["edges_folded"]) == 0
+        np.testing.assert_array_equal(np.asarray(x), want[0])
+    assert warm.stats["segments_launched"] == launched
+    assert warm.stats["full_hits"] == 3
+
+
+def test_warm_pallas_reset_and_binding_guards():
+    tables, ups, sig = _problem(seed=17, E=6)
+    s_cap = int(ups.sum())
+    warm = WarmPallasSolver(tables, s_cap, interpret=True)
+    warm(ups, sig, tables, s_cap, s_cap)
+    warm.reset()
+    want = _cold(PAL, ups, sig, tables, s_cap, s_cap, None)
+    x, info = warm(ups, sig, tables, s_cap, s_cap)
+    assert int(info["edges_folded"]) == len(ups)  # reset forces cold fold
+    np.testing.assert_array_equal(np.asarray(x), want[0])
+    other_tables = build_tables(np.ones((1, 6), np.int64),
+                                np.array([2], np.int64))
+    with pytest.raises(ValueError, match="bound to one"):
+        warm(ups, sig, other_tables, s_cap, s_cap)
+    with pytest.raises(TypeError, match="concrete"):
+        jax.jit(lambda u: warm(u, sig, tables, s_cap, s_cap)[0])(
+            jnp.asarray(ups))
+
+
+# ---------------------------------------------------------------------------
+# policy layer: cache modes are trace-invariant through simulate
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small():
+    inst = generate_instance(seed=3, n_ports=4, n_servers=10, edge_prob=0.3)
+    return inst, build_tables(inst.A, inst.c)
+
+
+@pytest.mark.parametrize("mode", ["memo", "warm"])
+def test_esdp_cache_modes_trace_invariant_simulate(small, mode):
+    inst, tables = small
+    T = 100
+    base = make_esdp_policy(inst, T, tables=tables, solver="reference")
+    res0 = simulate(inst, base, T, seed=1, tables=tables)
+    policy = make_esdp_policy(inst, T, tables=tables, solver="reference",
+                              cache=mode)
+    res1 = simulate(inst, policy, T, seed=1, tables=tables)
+    np.testing.assert_array_equal(res0.n_dispatched, res1.n_dispatched)
+    np.testing.assert_array_equal(res0.sw, res1.sw)
+    np.testing.assert_array_equal(res0.regret, res1.regret)
+    stats = policy.finalize(res1.policy_final)
+    assert stats["cache_solves"] == T
+    if mode == "memo":
+        assert 0.0 <= stats["cache_hit_rate"] <= 1.0
+    else:
+        assert 0.0 <= stats["edge_skip_rate"] <= 1.0
+
+
+@pytest.mark.parametrize("mode", ["memo", "warm"])
+def test_esdp_cache_modes_trace_invariant_simulate_batch(small, mode):
+    """vmap safety: per-instance cache state must not alias across the
+    seed batch — every seed's trace matches its cache-less counterpart."""
+    inst, tables = small
+    T, seeds = 60, (0, 1, 2)
+    base = make_esdp_policy(inst, T, tables=tables, solver="reference")
+    res0 = simulate_batch(inst, base, T, seeds, tables=tables)
+    policy = make_esdp_policy(inst, T, tables=tables, solver="reference",
+                              cache=mode)
+    res1 = simulate_batch(inst, policy, T, seeds, tables=tables)
+    np.testing.assert_array_equal(res0.n_dispatched, res1.n_dispatched)
+    np.testing.assert_array_equal(res0.sw, res1.sw)
+    np.testing.assert_array_equal(res0.regret, res1.regret)
+    # per-seed finalize: counters are seed-local, not pooled
+    for i in range(len(seeds)):
+        row = jax.tree.map(lambda a: np.asarray(a)[i], res1.policy_final)
+        stats = policy.finalize(row)
+        assert stats["cache_solves"] == T
+
+
+def test_esdp_cache_mode_validation(small):
+    inst, tables = small
+    with pytest.raises(ValueError, match="cache mode"):
+        make_esdp_policy(inst, 50, tables=tables, cache="bogus")
+    with pytest.raises(ValueError, match="reference"):
+        make_esdp_policy(inst, 50, tables=tables,
+                         solver="pallas_interpret", cache="warm")

@@ -23,7 +23,7 @@ import itertools
 import numpy as np
 import pytest
 
-try:        # optional [test] extra — property tests skip cleanly without it
+try:  # optional [test] extra — property tests skip cleanly without it
     from hypothesis import given, settings, strategies as st
     HAS_HYPOTHESIS = True
 except ImportError:
@@ -67,7 +67,7 @@ def enumerate_value_row(upsilon, sigma2, A, c, s_cap, allowed=None):
     u = bits @ np.asarray(upsilon, np.int64)
     v = bits @ np.asarray(sigma2, np.int64)
     row = np.full(s_cap + 1, int(NEG), np.int64)
-    for uu, vv in zip(u, v):                 # subset covers every s ≤ Υ̂ᵀx
+    for uu, vv in zip(u, v):  # subset covers every s ≤ Υ̂ᵀx
         hi = min(int(uu), s_cap)
         row[:hi + 1] = np.maximum(row[:hi + 1], vv)
     return row.astype(np.int32)
@@ -90,8 +90,7 @@ def _rand_problem(rng, E, K, c_hi=3, u_hi=5, sig_hi=5000):
     return A, c, upsilon, sigma2
 
 
-def _solve_with(solver, upsilon, sigma2, tables, s_cap, s_limit,
-                allowed=None):
+def _solve_with(solver, upsilon, sigma2, tables, s_cap, s_limit, allowed=None):
     x, info = solver(jnp.asarray(upsilon, jnp.int32),
                      jnp.asarray(sigma2, jnp.int32), tables, s_cap,
                      jnp.int32(s_limit),
@@ -142,13 +141,13 @@ if HAS_HYPOTHESIS:
         allowed = (rng.integers(0, 2, E).astype(bool)
                    if rng.integers(0, 2) else None)
         tables = build_tables(A, c)
-        s_cap = 4 * E                        # static per E: few jit keys
-        s_limit = int(rng.integers(0, s_cap + 1))   # exercises s_limit < s_cap
+        s_cap = 4 * E  # static per E: few jit keys
+        s_limit = int(rng.integers(0, s_cap + 1))  # exercises s_limit < s_cap
         got_ref = _solve_with(REF, ups, sig, tables, s_cap, s_limit, allowed)
         got_pal = _solve_with(PAL, ups, sig, tables, s_cap, s_limit, allowed)
-        np.testing.assert_array_equal(got_ref[0], got_pal[0])     # x
-        assert got_ref[1] == got_pal[1]                           # s_star
-        np.testing.assert_array_equal(got_ref[2], got_pal[2])     # value_row
+        np.testing.assert_array_equal(got_ref[0], got_pal[0])  # x
+        assert got_ref[1] == got_pal[1]  # s_star
+        np.testing.assert_array_equal(got_ref[2], got_pal[2])  # value_row
 
     # -----------------------------------------------------------------------
     # (c) oracle_knapsack vs exhaustive search
@@ -274,7 +273,7 @@ if HAS_HYPOTHESIS:
         allowed = (rng.integers(0, 2, E).astype(bool)
                    if rng.integers(0, 2) else None)
         tables = build_tables(A, c)
-        s_cap = 4 * E                        # static per E: few jit keys
+        s_cap = 4 * E  # static per E: few jit keys
         S, C = s_cap + 1, tables.n_states
         off_max = int(tables.offsets.max())
         # u_max halo edge cases: the exact bound, +1 margin, or generous
@@ -304,7 +303,7 @@ def test_prepare_tables_offsets_track_tables():
     """Kernel operands are pure derivations of DPTables fields — a replaced
     tables object can never serve stale operands (the old side-channel
     cache), and never-feasible edges get offset 0 (keeps the pad tight)."""
-    A = np.array([[1, 2, 3]])           # edge 2 needs 3 > c=2: never feasible
+    A = np.array([[1, 2, 3]])  # edge 2 needs 3 > c=2: never feasible
     c = np.array([2])
     tables = build_tables(A, c)
     feas, offs = prepare_tables(tables)
@@ -314,7 +313,7 @@ def test_prepare_tables_offsets_track_tables():
     swapped = dataclasses.replace(
         tables, feasible=np.zeros_like(tables.feasible))
     feas2, _ = prepare_tables(swapped)
-    assert not feas2.any()              # derived from the NEW fields
+    assert not feas2.any()  # derived from the NEW fields
 
 
 def test_large_c_blocked_grid_bitexact_vs_reference():
@@ -324,8 +323,8 @@ def test_large_c_blocked_grid_bitexact_vs_reference():
     x / s* / value_row, with an allowed mask."""
     rng = np.random.default_rng(21)
     E, K = 16, 3
-    A = rng.integers(0, 2, (K, E))      # 0/1 demands keep off_max ≤ 128
-    A[:, A.sum(axis=0) == 0] = 1        # no all-zero demand columns
+    A = rng.integers(0, 2, (K, E))  # 0/1 demands keep off_max ≤ 128
+    A[:, A.sum(axis=0) == 0] = 1  # no all-zero demand columns
     c = np.array([7, 7, 7])
     ups = rng.integers(0, 4, E).astype(np.int32)
     sig = rng.integers(1, 5000, E).astype(np.int32)
@@ -338,7 +337,7 @@ def test_large_c_blocked_grid_bitexact_vs_reference():
     x, info = solve_budgeted_dp_pallas(
         ups, sig, tables, s_cap, s_cap, allowed=allowed, interpret=True,
         block_c=128)
-    assert int(tables.offsets.max()) <= 128     # halo contract holds
+    assert int(tables.offsets.max()) <= 128  # halo contract holds
     np.testing.assert_array_equal(got_ref[0], np.asarray(x))
     assert got_ref[1] == int(info["s_star"])
     row = np.asarray(info["value_row"])
@@ -423,8 +422,8 @@ if HAS_HYPOTHESIS:
         B = int(rng.choice([1, 2, 7, 32]))
         A, c, _, _ = _rand_problem(rng, E, K, c_hi=2)
         tables = build_tables(A, c)
-        s_cap = 4 * E                        # static per E: few jit keys
-        u_max = 5                            # static bound over u_hi=4
+        s_cap = 4 * E  # static per E: few jit keys
+        u_max = 5  # static bound over u_hi=4
         ups, sig, alw, slim = _rand_fleet(rng, B, E, s_cap)
         want = _ref_loop(ups, sig, tables, s_cap, slim, alw)
 
@@ -465,9 +464,9 @@ if HAS_HYPOTHESIS:
         off_max = int(tables.offsets.max())
         ups, sig, alw, slim = _rand_fleet(rng, B, E, s_cap)
         u_max = int(ups.max()) + int(rng.integers(1, 3))
-        if rng.integers(0, 2):          # whole-plane, batch-tiled grid
+        if rng.integers(0, 2):  # whole-plane, batch-tiled grid
             kw = dict(block_b=int(rng.integers(1, B + 1)), block_c=None)
-        else:                           # edge-fused, batch-outermost grid
+        else:  # edge-fused, batch-outermost grid
             kw = dict(block_c=int(rng.integers(max(off_max, 1), C + 3)),
                       block_e=int(rng.integers(1, 33)),
                       block_s=(None if rng.integers(0, 2) else
@@ -536,7 +535,7 @@ def test_prepare_tables_cached_per_tables_identity():
     f2, o2 = prepare_tables(tables)
     after = prepare_tables.cache_info()
     assert after.hits == mid.hits + 1 and after.misses == mid.misses
-    assert f1 is f2 and o1 is o2            # same host arrays, not copies
+    assert f1 is f2 and o1 is o2  # same host arrays, not copies
     swapped = dataclasses.replace(tables,
                                   feasible=np.zeros_like(tables.feasible))
     prepare_tables(swapped)
@@ -572,6 +571,28 @@ def test_env_var_overrides_auto_but_not_explicit(monkeypatch):
     assert resolve_solver(None, "cpu") == "reference"
 
 
+def test_invalid_env_var_warns_and_falls_back_to_auto(monkeypatch):
+    """A stale/typo'd $REPRO_DP_SOLVER must not hard-crash callers that
+    never asked for a concrete backend: env-sourced invalid names WARN and
+    fall back to the auto resolution — while an invalid name passed in
+    code still raises (the caller asked for something that doesn't
+    exist)."""
+    monkeypatch.setenv(SOLVER_ENV_VAR, "bogus")
+    for requested in (None, "auto"):
+        for platform, expect in (("cpu", "reference"), ("gpu", "reference"),
+                                 ("tpu", "pallas")):
+            with pytest.warns(RuntimeWarning, match="REPRO_DP_SOLVER"):
+                assert resolve_solver(requested, platform) == expect
+    # explicit names win before the env var is even consulted — no warning
+    import warnings as _warnings
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        assert resolve_solver("reference", "tpu") == "reference"
+    # names passed IN CODE keep raising, env var irrelevant
+    with pytest.raises(ValueError, match="bogus"):
+        resolve_solver("bogus", "cpu")
+
+
 def test_get_solver_caches_identity():
     assert get_solver("reference") is get_solver("reference")
     assert get_solver(PAL) is PAL
@@ -585,7 +606,7 @@ def test_value_bound_overflow_raises():
     rng = np.random.default_rng(8)
     A, c, ups, sig = _rand_problem(rng, 6, 2)
     sig = sig.astype(np.int32)
-    sig[0] = VALUE_BOUND                     # a single value at the bound
+    sig[0] = VALUE_BOUND  # a single value at the bound
     tables = build_tables(A, c)
     with pytest.raises(ValueError, match="2\\^24"):
         solve_budgeted_dp_pallas(ups, sig, tables, int(ups.sum()),
@@ -606,7 +627,7 @@ def test_default_schedules_stay_under_value_bound():
     """Pins the stats.scale_statistics outputs under 2^24 at the default
     horizons (T=1500 benchmarks, T=10^5 stress), so the traced hot path —
     where the runtime check cannot see concrete values — is safe."""
-    inst = generate_instance(seed=0)         # paper Table-2 defaults
+    inst = generate_instance(seed=0)  # paper Table-2 defaults
     tables = build_tables(inst.A, inst.c)
     m = inst.m
     E = inst.n_edges
@@ -659,7 +680,7 @@ def test_pallas_vmaps_through_simulate_batch(small):
     inst, tables = small
     T, seeds = 80, (0, 1, 2)
     res = {}
-    for name in ("reference", "pallas"):     # public name; interpret on CPU
+    for name in ("reference", "pallas"):  # public name; interpret on CPU
         policy = make_esdp_policy(inst, T, tables=tables, solver=name)
         res[name] = simulate_batch(inst, policy, T, seeds, tables=tables)
     np.testing.assert_array_equal(res["reference"].n_dispatched,
@@ -701,7 +722,7 @@ def test_pallas_through_sweepspec_fig6_smoke():
     rows = {}
     for name in ("reference", "pallas"):
         rows[name] = run_spec(dataclasses.replace(FIG6_SMOKE, solver=name))
-    assert len(rows["reference"]) == 8      # 4 grid points × 2 policies
+    assert len(rows["reference"]) == 8  # 4 grid points × 2 policies
     for r_ref, r_pal in zip(rows["reference"], rows["pallas"]):
         assert (r_ref.point, r_ref.policy) == (r_pal.point, r_pal.policy)
         assert r_pal.solver == "pallas"
@@ -711,3 +732,78 @@ def test_pallas_through_sweepspec_fig6_smoke():
         np.testing.assert_array_equal(r_ref.result.n_dispatched,
                                       r_pal.result.n_dispatched)
         assert r_ref.asw_mean == r_pal.asw_mean
+
+
+# ---------------------------------------------------------------------------
+# (i) incremental legs: the warm-started and cached re-solve layers must be
+# bit-exact against cold solves over random DRIFT SEQUENCES — localized
+# statistic drifts, eligibility flips, s_limit-only changes, and verbatim
+# repeats (core.incremental / kernels.budgeted_dp.ops.WarmPallasSolver)
+# ---------------------------------------------------------------------------
+
+def _incremental_legs_body(seed):
+    from repro.core.incremental import (solve_budgeted_dp_warm,
+                                        warm_carry_init)
+    from repro.core.solvers import CachedSolver
+    from repro.kernels.budgeted_dp.ops import WarmPallasSolver
+
+    rng = np.random.default_rng(seed)
+    E = int(rng.choice([6, 10]))
+    K = int(rng.integers(1, 3))
+    A, c, ups, sig = _rand_problem(rng, E, K, c_hi=2, u_hi=4, sig_hi=10**4)
+    tables = build_tables(A, c)
+    s_cap = 4 * E  # static per E: few jit keys
+    k = int(rng.choice([2, 4]))
+
+    cached = CachedSolver(REF)
+    warm_pal = WarmPallasSolver(tables, s_cap, checkpoint_every=k,
+                                interpret=True)
+    carry = warm_carry_init(E, s_cap, tables.n_states, k)
+
+    @jax.jit
+    def warm_ref(u, s, lim, a, cr):
+        return solve_budgeted_dp_warm(u, s, tables, s_cap, lim, cr,
+                                      allowed=a, checkpoint_every=k)
+
+    alw = np.ones(E, bool)
+    s_limit = s_cap
+    for slot in range(6):
+        kind = ("cold", "suffix", "slim", "repeat", "alw", "suffix")[slot]
+        if kind == "suffix":  # edge 0 folds LAST: long prefix
+            e = int(rng.integers(0, max(1, E // 3)))
+            ups[e] = rng.integers(0, 5)
+            sig[e] = rng.integers(1, 10**4)
+        elif kind == "slim":
+            s_limit = int(rng.integers(0, s_cap + 1))
+        elif kind == "alw":
+            e = int(rng.integers(0, E))
+            alw[e] = ~alw[e]
+
+        want = _solve_with(REF, ups, sig, tables, s_cap, s_limit, alw)
+        got = {}
+        got["cached"] = cached(ups, sig, tables, s_cap, s_limit, allowed=alw)
+        got["warm_pal"] = warm_pal(ups, sig, tables, s_cap, s_limit,
+                                   allowed=alw)
+        xw, iw, carry = warm_ref(jnp.asarray(ups, jnp.int32),
+                                 jnp.asarray(sig, jnp.int32),
+                                 jnp.int32(s_limit), jnp.asarray(alw), carry)
+        got["warm_ref"] = (xw, iw)
+        for leg, (x, info) in got.items():
+            np.testing.assert_array_equal(np.asarray(x), want[0], err_msg=leg)
+            assert int(info["s_star"]) == want[1], leg
+            np.testing.assert_array_equal(np.asarray(info["value_row"]),
+                                          want[2], err_msg=leg)
+    # the layers actually skipped work on this trace
+    assert cached.stats.hits >= 1  # the "repeat" slot
+    assert warm_pal.stats["edges_skipped"] > 0
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_incremental_legs_bitexact_over_drift(seed):
+        _incremental_legs_body(seed)
+else:
+    @pytest.mark.parametrize("seed", [0, 42, 20260808])
+    def test_incremental_legs_bitexact_over_drift(seed):
+        _incremental_legs_body(seed)
