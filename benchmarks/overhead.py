@@ -23,14 +23,14 @@ def fig5_overhead(rows, smoke=False):
         T = 200
         pol = make_esdp_policy(inst, T, tables=tables)
         t0 = time.time()
-        simulate_batch(inst, pol, T, (0,), tables=tables)   # includes jit
+        simulate_batch(inst, pol, T, (0,), tables=tables)  # includes jit
         compile_and_run = time.time() - t0
         t0 = time.time()
-        simulate_batch(inst, pol, T, (1,), tables=tables)   # cached jit
+        simulate_batch(inst, pol, T, (1,), tables=tables)  # cached jit
         steady = time.time() - t0
         us = steady / T * 1e6
         simulate_batch(inst, pol, T, tuple(range(2, 10)), tables=tables)
-        t0 = time.time()                                    # batch-shape jit cached
+        t0 = time.time()  # batch-shape jit cached
         simulate_batch(inst, pol, T, tuple(range(10, 18)), tables=tables)
         batch_us = (time.time() - t0) / (8 * T) * 1e6
         rows.append((f"fig5/L{L}_R{R}_E{inst.n_edges}", f"{us:.0f}",

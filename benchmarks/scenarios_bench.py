@@ -93,8 +93,7 @@ def bench(smoke: bool) -> dict:
             "host": host_fingerprint(), "smoke": smoke, "grid": records}
 
 
-def check_baseline(result: dict, base: dict,
-                   max_regression: float) -> list[str]:
+def check_baseline(result: dict, base: dict, max_regression: float) -> list[str]:
     """Warm (steady-state) per-scenario wall-clock vs the committed file;
     only (scenario, T, seeds)-matched rows compare."""
     base_s = {(r["scenario"], r["T"], r["seeds"]): r["warm_s"]

@@ -52,7 +52,7 @@ class CheckpointManager:
     def save(self, step: int, state: Any, async_: bool = False):
         """Snapshot is taken synchronously (correctness); serialization and
         fsync+rename run on a thread when async_."""
-        flat = _flatten(state)                       # host copy now
+        flat = _flatten(state)  # host copy now
         treedef = jax.tree_util.tree_structure(state)
         meta = {
             "step": int(step),
@@ -78,7 +78,7 @@ class CheckpointManager:
         (tmp / "metadata.json").write_text(json.dumps(meta))
         if final.exists():
             shutil.rmtree(final)
-        tmp.rename(final)                            # atomic publish
+        tmp.rename(final)  # atomic publish
         self._gc()
 
     def wait(self):
@@ -100,8 +100,9 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, like: Any, step: Optional[int] = None,
-                shardings: Any = None) -> tuple[Any, int]:
+    def restore(
+        self, like: Any, step: Optional[int] = None, shardings: Any = None
+    ) -> tuple[Any, int]:
         """Restore into the structure of ``like``; optionally device_put with
         a (possibly different-mesh) shardings tree — the elastic path."""
         self.wait()

@@ -16,7 +16,7 @@ class ModelConfig:
     """
 
     name: str
-    family: str                    # dense | moe | hybrid | ssm | encdec | vlm
+    family: str  # dense | moe | hybrid | ssm | encdec | vlm
     n_layers: int
     d_model: int
     vocab: int
@@ -26,7 +26,7 @@ class ModelConfig:
     n_kv_heads: int = 0
     head_dim: int = 0
     qkv_bias: bool = False
-    use_rope: bool = True          # whisper uses absolute positions instead
+    use_rope: bool = True  # whisper uses absolute positions instead
     rope_theta: float = 10_000.0
     # sliding-window pattern: every `global_every`-th layer is global, rest
     # local with window `window` (gemma3's 5:1); 0 ⇒ all global.
@@ -45,13 +45,13 @@ class ModelConfig:
 
     # --- MLP ---
     d_ff: int = 0
-    activation: str = "swiglu"     # swiglu | geglu | gelu
+    activation: str = "swiglu"  # swiglu | geglu | gelu
     # --- MoE ---
     n_experts: int = 0
     top_k: int = 0
     n_shared_experts: int = 0
     d_ff_expert: int = 0
-    moe_layer_start: int = 0       # deepseek: first k layers stay dense
+    moe_layer_start: int = 0  # deepseek: first k layers stay dense
     capacity_factor: float = 1.0
     # combine strategy (§Perf P5): "gather" reshards ye to expert-unsharded
     # then scatters locally (wire ≈ k·Tg·d — wins for small E/k, e.g. dbrx);
@@ -70,24 +70,24 @@ class ModelConfig:
 
     # --- enc-dec (whisper) ---
     n_enc_layers: int = 0
-    enc_len: int = 0               # fixed encoder length (1500 = 30s audio)
-    max_positions: int = 0         # learned positional table size (whisper)
+    enc_len: int = 0  # fixed encoder length (1500 = 30s audio)
+    max_positions: int = 0  # learned positional table size (whisper)
 
     # --- blocking knobs (memory/compute trade; §Perf levers) ---
-    attn_chunk: int = 1024         # KV-chunk for online-softmax attention
-    xent_chunk: int = 2048         # seq-chunk for the cross-entropy (0=full)
+    attn_chunk: int = 1024  # KV-chunk for online-softmax attention
+    xent_chunk: int = 2048  # seq-chunk for the cross-entropy (0=full)
     # cost-model support: unroll layer scans so cost_analysis counts every
     # layer (XLA counts while bodies once; see launch/cost_model.py)
     unroll_scans: bool = False
 
     # --- misc ---
     norm_eps: float = 1e-6
-    norm_plus_one: bool = False    # gemma-style (1 + w) RMSNorm
-    embed_scale: bool = False      # gemma-style sqrt(d) embedding scale
+    norm_plus_one: bool = False  # gemma-style (1 + w) RMSNorm
+    embed_scale: bool = False  # gemma-style sqrt(d) embedding scale
     tie_embeddings: bool = False
-    mtp: bool = False              # deepseek multi-token prediction head
-    n_vision_tokens: int = 0       # vlm: leading patch-embedding positions
-    source: str = ""               # provenance tag from the assignment table
+    mtp: bool = False  # deepseek multi-token prediction head
+    n_vision_tokens: int = 0  # vlm: leading patch-embedding positions
+    source: str = ""  # provenance tag from the assignment table
 
     # dtypes (dry-run realism for the giant configs; smoke tests use f32)
     param_dtype: str = "float32"
@@ -119,7 +119,7 @@ class Shape:
     name: str
     seq_len: int
     global_batch: int
-    kind: str                      # train | prefill | decode
+    kind: str  # train | prefill | decode
 
 
 SHAPES: dict[str, Shape] = {

@@ -8,7 +8,7 @@ FULL = ModelConfig(
     vocab=129280, activation="swiglu",
     mla=True, q_lora_rank=1536, kv_lora_rank=512,
     nope_head_dim=128, rope_head_dim=64, v_head_dim=128,
-    d_ff=18432,                       # the 3 leading dense layers
+    d_ff=18432,  # the 3 leading dense layers
     n_experts=256, top_k=8, n_shared_experts=1, d_ff_expert=2048,
     moe_layer_start=3, mtp=True,
     # moe_combine="scatter_ar" measured WORSE (§Perf P5 refuted: GSPMD's

@@ -96,7 +96,7 @@ def make_lwtf_policy(instance: Instance, tiebreak: float = 1e-4) -> Policy:
     E = instance.n_edges
 
     def init():
-        return jnp.zeros(L, dtype=jnp.int32)   # waiting slots per port
+        return jnp.zeros(L, dtype=jnp.int32)  # waiting slots per port
 
     def step(waiting, t, eligible, arrived, vhat, n, key):
         # lexicographic: waiting time dominates, v̂ breaks ties within a port
@@ -112,7 +112,7 @@ def make_lwtf_policy(instance: Instance, tiebreak: float = 1e-4) -> Policy:
 
 def _factory(make, name: str, tiebreak: float) -> PolicyFactory:
     def factory(instance: Instance, T: int, tables=None) -> Policy:
-        del T, tables   # greedy baselines are horizon-free and DP-free
+        del T, tables  # greedy baselines are horizon-free and DP-free
         return make(instance, tiebreak=tiebreak)
 
     factory.policy_name = name

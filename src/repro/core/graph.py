@@ -47,18 +47,18 @@ def clipped_normal_mean(m: float, s: float, lo: float = 0.0, hi: float = 1.0) ->
 class Instance:
     """A generated dispatching problem (paper Table 2 parameterization)."""
 
-    n_ports: int                  # |L|
-    n_servers: int                # |R|
-    edges: np.ndarray             # (E, 2) int32 — (l, r) per channel
-    A: np.ndarray                 # (K, E) int32 — device requirements per channel
-    c: np.ndarray                 # (K,) int32 — cluster-wide capacities
-    cost: np.ndarray              # (E,) float32 — Σ_k f_k(a_k^e), the supply cost
-    mu: np.ndarray                # (E,) float32 — gross valuation means (pre-clip)
-    sigma: np.ndarray             # (E,) float32 — valuation noise std (= mu/2)
-    v: np.ndarray                 # (E,) float32 — TRUE net means
+    n_ports: int  # |L|
+    n_servers: int  # |R|
+    edges: np.ndarray  # (E, 2) int32 — (l, r) per channel
+    A: np.ndarray  # (K, E) int32 — device requirements per channel
+    c: np.ndarray  # (K,) int32 — cluster-wide capacities
+    cost: np.ndarray  # (E,) float32 — Σ_k f_k(a_k^e), the supply cost
+    mu: np.ndarray  # (E,) float32 — gross valuation means (pre-clip)
+    sigma: np.ndarray  # (E,) float32 — valuation noise std (= mu/2)
+    v: np.ndarray  # (E,) float32 — TRUE net means
                                   #   ṽ = E[clip(N(mu-cost, sigma), 0, 1)]
-    rho: np.ndarray               # (L,) float32 — per-port arrival probabilities
-    alpha: float                  # m = ceil(alpha * |E|) (paper's g(t)/ξ(t) scale)
+    rho: np.ndarray  # (L,) float32 — per-port arrival probabilities
+    alpha: float  # m = ceil(alpha * |E|) (paper's g(t)/ξ(t) scale)
 
     @property
     def n_edges(self) -> int:
@@ -107,7 +107,7 @@ def generate_instance(
     K = n_device_types
 
     adj = rng.random((n_ports, n_servers)) < edge_prob
-    for port in range(n_ports):        # every port keeps at least one channel
+    for port in range(n_ports):  # every port keeps at least one channel
         if not adj[port].any():
             adj[port, rng.integers(n_servers)] = True
     ls, rs = np.nonzero(adj)
@@ -116,7 +116,7 @@ def generate_instance(
 
     c = rng.integers(c_lo, c_hi + 1, size=K).astype(np.int32)
     A = rng.integers(a_lo, a_hi + 1, size=(K, E)).astype(np.int32)
-    A = np.minimum(A, c[:, None])      # edge exists ⇒ solely servable (Sec 2.1 cond. 2)
+    A = np.minimum(A, c[:, None])  # edge exists ⇒ solely servable (Sec 2.1 cond. 2)
 
     w = np.abs(rng.normal(0.5, 0.1, size=K)).astype(np.float32)
     raw_cost = (w[:, None] * A).sum(axis=0)

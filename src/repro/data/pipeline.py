@@ -30,10 +30,10 @@ __all__ = ["SyntheticLM", "make_batch_iterator"]
 @dataclasses.dataclass(frozen=True)
 class SyntheticLM:
     vocab: int
-    seq_len: int                 # tokens per example INCLUDING the label shift
+    seq_len: int  # tokens per example INCLUDING the label shift
     global_batch: int
     seed: int = 0
-    structure: int = 97          # period of the learnable component
+    structure: int = 97  # period of the learnable component
 
     def _tokens(self, step: int, rows: np.ndarray) -> np.ndarray:
         """(len(rows), seq_len+1) int32, pure function of (seed, step, row)."""
@@ -47,20 +47,22 @@ class SyntheticLM:
         h = (h ^ (h >> 13)) & 0xFFFFFFFF
         noisy = (h % 5) == 0
         noise_tok = h % max(self.vocab - 3, 1)
-        out = np.where(noisy, noise_tok, walk) + 2    # reserve 0/1
+        out = np.where(noisy, noise_tok, walk) + 2  # reserve 0/1
         return out.astype(np.int32)
 
-    def batch(self, step: int,
-              host_slice: Optional[slice] = None) -> dict:
+    def batch(self, step: int, host_slice: Optional[slice] = None) -> dict:
         rows = np.arange(self.global_batch)
         if host_slice is not None:
             rows = rows[host_slice]
         return {"tokens": self._tokens(step, rows)}
 
 
-def make_batch_iterator(ds: SyntheticLM, start_step: int = 0,
-                        host_slice: Optional[slice] = None,
-                        extras=None) -> Iterator[dict]:
+def make_batch_iterator(
+    ds: SyntheticLM,
+    start_step: int = 0,
+    host_slice: Optional[slice] = None,
+    extras=None,
+) -> Iterator[dict]:
     """extras(step, batch) may attach modality stubs (patch/frame embeds)."""
     step = start_step
     while True:

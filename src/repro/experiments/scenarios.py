@@ -102,8 +102,9 @@ def _dvfs_step(params, state, t, n_servers):
 
 
 @register_scenario("markov_dvfs")
-def markov_dvfs(slow_speed: float = 0.5, p_slow: float = 0.05,
-                p_fast: float = 0.25) -> Scenario:
+def markov_dvfs(
+    slow_speed: float = 0.5, p_slow: float = 0.05, p_fast: float = 0.25
+) -> Scenario:
     """DVFS / co-location throttling: each server's speed follows an
     independent two-state Markov chain {fast=1, slow=slow_speed}."""
     return Scenario(
@@ -121,7 +122,7 @@ def markov_dvfs(slow_speed: float = 0.5, p_slow: float = 0.05,
 # ---------------------------------------------------------------------------
 
 def _mmpp_init(params, key, n_servers):
-    return (jnp.int32(0), key)          # phase 0 = quiet, 1 = burst
+    return (jnp.int32(0), key)  # phase 0 = quiet, 1 = burst
 
 
 def _mmpp_step(params, state, t, n_servers):
@@ -138,8 +139,12 @@ def _mmpp_step(params, state, t, n_servers):
 
 
 @register_scenario("mmpp_arrivals")
-def mmpp_arrivals(quiet_scale: float = 0.4, burst_scale: float = 1.2,
-                  p_burst: float = 0.05, p_quiet: float = 0.1) -> Scenario:
+def mmpp_arrivals(
+    quiet_scale: float = 0.4,
+    burst_scale: float = 1.2,
+    p_burst: float = 0.05,
+    p_quiet: float = 0.1,
+) -> Scenario:
     """Bursty traffic: a cluster-wide two-phase Markov-modulated Bernoulli
     process scales every port's arrival probability (MMPP discretization)."""
     return Scenario(
@@ -148,7 +153,7 @@ def mmpp_arrivals(quiet_scale: float = 0.4, burst_scale: float = 1.2,
         step=_mmpp_step,
         params={"quiet_scale": quiet_scale, "burst_scale": burst_scale,
                 "p_burst": p_burst, "p_quiet": p_quiet},
-        fluctuates=False,       # speeds stay 1 ⇒ true means unchanged
+        fluctuates=False,  # speeds stay 1 ⇒ true means unchanged
         description="global on/off Markov modulation of arrival intensity",
     )
 
@@ -160,7 +165,7 @@ def mmpp_arrivals(quiet_scale: float = 0.4, burst_scale: float = 1.2,
 def _straggler_init(params, key, n_servers):
     perm = jax.random.permutation(key, n_servers)
     n_slow = jnp.ceil(params["frac"] * n_servers).astype(jnp.int32)
-    return perm < n_slow                 # (R,) bool straggler mask
+    return perm < n_slow  # (R,) bool straggler mask
 
 
 def _straggler_step(params, state, t, n_servers):
@@ -170,8 +175,7 @@ def _straggler_step(params, state, t, n_servers):
 
 
 @register_scenario("chronic_straggler")
-def chronic_straggler(frac: float = 0.25,
-                      straggler_speed: float = 0.35) -> Scenario:
+def chronic_straggler(frac: float = 0.25, straggler_speed: float = 0.35) -> Scenario:
     """Chronic stragglers: a seed-dependent ⌈frac·R⌉-subset of servers runs
     at straggler_speed for the whole horizon (bad hosts / slow pods)."""
     return Scenario(
@@ -202,8 +206,9 @@ def _brownout_step(params, state, t, n_servers):
 
 
 @register_scenario("transient_brownout")
-def transient_brownout(t_start: float = 300.0, t_end: float = 600.0,
-                       brownout_speed: float = 0.5) -> Scenario:
+def transient_brownout(
+    t_start: float = 300.0, t_end: float = 600.0, brownout_speed: float = 0.5
+) -> Scenario:
     """Power-oversubscription brownout: every server is throttled to
     brownout_speed during [t_start, t_end) and recovers afterwards."""
     return Scenario(
@@ -224,7 +229,7 @@ def transient_brownout(t_start: float = 300.0, t_end: float = 600.0,
 def _outage_init(params, key, n_servers):
     perm = jax.random.permutation(key, n_servers)
     n_dead = jnp.ceil(params["frac"] * n_servers).astype(jnp.int32)
-    return perm < n_dead                 # (R,) bool outage-candidate mask
+    return perm < n_dead  # (R,) bool outage-candidate mask
 
 
 def _outage_step(params, state, t, n_servers):
@@ -235,8 +240,9 @@ def _outage_step(params, state, t, n_servers):
 
 
 @register_scenario("elastic_outage")
-def elastic_outage(frac: float = 0.25, t_down: float = 200.0,
-                   t_up: float = 400.0) -> Scenario:
+def elastic_outage(
+    frac: float = 0.25, t_down: float = 200.0, t_up: float = 400.0
+) -> Scenario:
     """Elastic scale-down/up: a seed-dependent ⌈frac·R⌉-subset of servers is
     dead during [t_down, t_up) — their channels become infeasible — and
     rejoins afterwards."""
@@ -245,7 +251,7 @@ def elastic_outage(frac: float = 0.25, t_down: float = 200.0,
         init=_outage_init,
         step=_outage_step,
         params={"frac": frac, "t_down": t_down, "t_up": t_up},
-        fluctuates=False,        # live servers run at unit speed
+        fluctuates=False,  # live servers run at unit speed
         description="a random subset of servers is down for a window",
     )
 
@@ -256,8 +262,7 @@ def elastic_outage(frac: float = 0.25, t_down: float = 200.0,
 
 @functools.partial(jax.jit,
                    static_argnames=("scenario", "T", "n_servers", "n_ports"))
-def _unroll(scenario: Scenario, T: int, n_servers: int, n_ports: int, key,
-            params):
+def _unroll(scenario: Scenario, T: int, n_servers: int, n_ports: int, key, params):
     state0 = scenario.init(params, key, n_servers)
 
     def slot(state, t):
@@ -271,8 +276,9 @@ def _unroll(scenario: Scenario, T: int, n_servers: int, n_ports: int, key,
     return arr_scale, speed, alive
 
 
-def unroll_scenario(scenario: Scenario, T: int, n_servers: int,
-                    seed: int = 0, n_ports: int = 1):
+def unroll_scenario(
+    scenario: Scenario, T: int, n_servers: int, seed: int = 0, n_ports: int = 1
+):
     """Materialize a scenario into host arrays (arr_scale (T, n_ports),
     speed (T, R), alive (T, R)), using the same keying as
     ``core.env.simulate`` (the scenario chain is

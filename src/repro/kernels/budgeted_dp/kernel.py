@@ -131,8 +131,9 @@ VMEM_BUDGET_BYTES = 12 * 2 ** 20
 MAX_BLOCK_E = 32
 
 
-def resolve_interpret(interpret: bool | None = None,
-                      platform: str | None = None) -> bool:
+def resolve_interpret(
+    interpret: bool | None = None, platform: str | None = None
+) -> bool:
     """Resolve the kernel execution mode.
 
     ``None`` → auto: compiled (``False``) on TPU, interpreter (``True``)
@@ -150,8 +151,7 @@ def packed_words(n_edges: int) -> int:
     return (n_edges + 31) // 32
 
 
-def unblocked_vmem_bytes(S: int, C: int, n_edges: int, u_max: int,
-                         off_max: int) -> int:
+def unblocked_vmem_bytes(S: int, C: int, n_edges: int, u_max: int, off_max: int) -> int:
     """VMEM footprint of the whole-plane kernel: v0 + V + packed decisions +
     the (u_max+S, off_max+C) shift scratch + the (E, C) feasibility plane +
     the three (E,) operand vectors, all 4-byte."""
@@ -176,8 +176,9 @@ def tiled_vmem_bytes(block_s: int, block_c: int, u_max: int) -> int:
                 + (u_max + block_s) * 2 * block_c + block_c)
 
 
-def fused_tile_vmem_bytes(block_e: int, block_s: int, block_c: int,
-                          u_max: int, off_max: int, S: int, C: int) -> int:
+def fused_tile_vmem_bytes(
+    block_e: int, block_s: int, block_c: int, u_max: int, off_max: int, S: int, C: int
+) -> int:
     """Per-grid-step VMEM of the edge-fused pipeline: one (block_s, block_c)
     input tile + two output tiles (value + chunk bits) + the
     (u_max + block_s, off_max + block_c) shift scratch + the per-chunk
@@ -192,14 +193,15 @@ def fused_tile_vmem_bytes(block_e: int, block_s: int, block_c: int,
     rowh = 0 if block_s >= S else 2 * block_e * max(u_max, 1) * Cp
     return 4 * (3 * block_s * block_c
                 + (u_max + block_s) * (off_max + block_c)
-                + block_e * block_c                      # feasibility chunk
-                + rowh                                   # rowh banks
-                + block_e * block_s * max(off_max, 1)    # lefth
-                + 4 * block_e)                           # SMEM scalars
+                + block_e * block_c  # feasibility chunk
+                + rowh  # rowh banks
+                + block_e * block_s * max(off_max, 1)  # lefth
+                + 4 * block_e)  # SMEM scalars
 
 
-def batched_vmem_bytes(S: int, C: int, n_edges: int, u_max: int,
-                       off_max: int, block_b: int) -> int:
+def batched_vmem_bytes(
+    S: int, C: int, n_edges: int, u_max: int, off_max: int, block_b: int
+) -> int:
     """VMEM footprint of one grid step of the whole-plane BATCHED kernel:
     the per-instance value plane + packed decision words + shift scratch +
     the three (E,) operand rows, all charged × ``block_b``, plus the
@@ -214,9 +216,16 @@ def batched_vmem_bytes(S: int, C: int, n_edges: int, u_max: int,
     return 4 * (block_b * per + S * C + n_edges * (C + 1))
 
 
-def batched_fused_tile_vmem_bytes(block_e: int, block_s: int, block_c: int,
-                                  u_max: int, off_max: int, S: int, C: int,
-                                  block_b: int) -> int:
+def batched_fused_tile_vmem_bytes(
+    block_e: int,
+    block_s: int,
+    block_c: int,
+    u_max: int,
+    off_max: int,
+    S: int,
+    C: int,
+    block_b: int,
+) -> int:
     """Per-grid-step VMEM of the BATCHED edge-fused pipeline: the shared
     per-chunk feasibility block and offset/bit-position rows load once;
     everything per-instance — the plane tile, the shift scratch, both
@@ -232,13 +241,14 @@ def batched_fused_tile_vmem_bytes(block_e: int, block_s: int, block_c: int,
            + (u_max + block_s) * (off_max + block_c)
            + rowh
            + block_e * block_s * max(off_max, 1)
-           + 3 * block_e)                        # Υ̂/Σ̂²/allowed SMEM rows
-    shared = block_e * block_c + 2 * block_e     # feas chunk + offs/bitpos
+           + 3 * block_e)  # Υ̂/Σ̂²/allowed SMEM rows
+    shared = block_e * block_c + 2 * block_e  # feas chunk + offs/bitpos
     return 4 * (block_b * per + shared)
 
 
-def modeled_hbm_bytes(S: int, C: int, n_edges: int, u_max: int, off_max: int,
-                      block_e, block_s, block_c) -> int:
+def modeled_hbm_bytes(
+    S: int, C: int, n_edges: int, u_max: int, off_max: int, block_e, block_s, block_c
+) -> int:
     """Modeled HBM bytes streamed by one DP forward solve under a tiling.
 
     Counts the plane-sized flows only (operand vectors are O(E)): value
@@ -251,11 +261,11 @@ def modeled_hbm_bytes(S: int, C: int, n_edges: int, u_max: int, off_max: int,
     traffic model for the perf trend, not a measurement.
     """
     W = packed_words(n_edges)
-    if block_c is None:                      # whole-plane, VMEM-resident
-        return 4 * (S * C            # v0 in
-                    + n_edges * C    # feasibility plane in
-                    + S * C          # V out
-                    + W * S * C)     # packed decisions out
+    if block_c is None:  # whole-plane, VMEM-resident
+        return 4 * (S * C  # v0 in
+                    + n_edges * C  # feasibility plane in
+                    + S * C  # V out
+                    + W * S * C)  # packed decisions out
     Cp = -(-C // block_c) * block_c
     Sp = S if block_s is None else -(-S // block_s) * block_s
     plane = 4 * Sp * Cp
@@ -273,10 +283,17 @@ def modeled_hbm_bytes(S: int, C: int, n_edges: int, u_max: int, off_max: int,
     return n_chunks * per_chunk
 
 
-def batched_modeled_hbm_bytes(S: int, C: int, n_edges: int, u_max: int,
-                              off_max: int, batch: int,
-                              block_e=None, block_s=None,
-                              block_c=None) -> int:
+def batched_modeled_hbm_bytes(
+    S: int,
+    C: int,
+    n_edges: int,
+    u_max: int,
+    off_max: int,
+    batch: int,
+    block_e=None,
+    block_s=None,
+    block_c=None,
+) -> int:
     """Modeled HBM bytes streamed by ONE batched forward of ``batch``
     solves: the shared operands stream once, the per-instance flows ×
     ``batch``.  The vmapped-single-launch alternative replicates the
@@ -287,11 +304,11 @@ def batched_modeled_hbm_bytes(S: int, C: int, n_edges: int, u_max: int,
     per = modeled_hbm_bytes(S, C, n_edges, u_max, off_max,
                             block_e, block_s, block_c)
     if block_c is None:
-        shared = 4 * (S * C + n_edges * C)       # v0 + feasibility plane
+        shared = 4 * (S * C + n_edges * C)  # v0 + feasibility plane
     else:
         Cp = -(-C // block_c) * block_c
         if block_e is None:
-            shared = 4 * n_edges * Cp            # feasibility tiles per edge
+            shared = 4 * n_edges * Cp  # feasibility tiles per edge
         else:
             shared = 4 * -(-n_edges // block_e) * block_e * Cp
     return shared + batch * (per - shared)
@@ -310,8 +327,15 @@ def _tile_candidates(extent: int, unit: int, floor: int) -> list:
     return sorted(cands, reverse=True)
 
 
-def choose_tiling(S: int, C: int, n_edges: int, u_max: int, off_max: int,
-                  budget: int = VMEM_BUDGET_BYTES, batch: int | None = None):
+def choose_tiling(
+    S: int,
+    C: int,
+    n_edges: int,
+    u_max: int,
+    off_max: int,
+    budget: int = VMEM_BUDGET_BYTES,
+    batch: int | None = None,
+):
     """Pick ``(block_e, block_s, block_c)`` for :func:`dp_forward_pallas`.
 
     With ``batch=B`` the return value is instead the 4-tuple ``(block_b,
@@ -355,7 +379,7 @@ def choose_tiling(S: int, C: int, n_edges: int, u_max: int, off_max: int,
         return None, None, None
     c_cands = _tile_candidates(C, 128, off_max)
     block_s = block_c = None
-    for bc in c_cands:                           # widest full-height first
+    for bc in c_cands:  # widest full-height first
         if c_blocked_tile_vmem_bytes(S, bc, u_max) <= budget:
             block_c = bc
             break
@@ -365,14 +389,14 @@ def choose_tiling(S: int, C: int, n_edges: int, u_max: int, off_max: int,
         for bs in s_cands:
             for bc in c_cands:
                 if bs == S and bc == C:
-                    continue                     # that is the whole plane
+                    continue  # that is the whole plane
                 if tiled_vmem_bytes(bs, bc, u_max) > budget:
                     continue
                 if (best is None or bs * bc > best[0] * best[1]
                         or (bs * bc == best[0] * best[1] and bc > best[1])):
                     best = (bs, bc)
         if best is None:
-            best = (s_cands[-1], c_cands[-1])    # floor pair: best possible
+            best = (s_cands[-1], c_cands[-1])  # floor pair: best possible
         block_s, block_c = best
     bs_eff = S if block_s is None else block_s
     for be in range(min(MAX_BLOCK_E, max(n_edges, 1)), 0, -1):
@@ -382,9 +406,20 @@ def choose_tiling(S: int, C: int, n_edges: int, u_max: int, off_max: int,
     return None, block_s, block_c
 
 
-def _dp_kernel(ups_ref, sig_ref, offs_ref, feas_ref, v0_ref,
-               vout_ref, dec_ref, vpad_ref, *, n_edges: int, u_max: int,
-               off_max: int):
+def _dp_kernel(
+    ups_ref,
+    sig_ref,
+    offs_ref,
+    feas_ref,
+    v0_ref,
+    vout_ref,
+    dec_ref,
+    vpad_ref,
+    *,
+    n_edges: int,
+    u_max: int,
+    off_max: int,
+):
     S, C = v0_ref.shape
     W = dec_ref.shape[0]
     vout_ref[:, :] = v0_ref[:, :]
@@ -397,7 +432,7 @@ def _dp_kernel(ups_ref, sig_ref, offs_ref, feas_ref, v0_ref,
 
     def edge_step(j, _):
         e = n_edges - 1 - j
-        u = jnp.minimum(ups_ref[e], u_max)      # clamp: never read past pad
+        u = jnp.minimum(ups_ref[e], u_max)  # clamp: never read past pad
         off = jnp.minimum(offs_ref[e], off_max)
         sig = sig_ref[e].astype(jnp.float32)
 
@@ -409,7 +444,7 @@ def _dp_kernel(ups_ref, sig_ref, offs_ref, feas_ref, v0_ref,
         # one 2-D shifted read: V[max(s-u, 0), c - off]
         take = vpad_ref[pl.ds(u_max - u, S), pl.ds(off_max - off, C)] + sig
 
-        feas = feas_ref[e, :]                              # (C,) 0/1
+        feas = feas_ref[e, :]  # (C,) 0/1
         take = jnp.where(feas[None, :] > 0, take, NEG)
         dec = (take > V).astype(jnp.int32)
         # OR edge e's decision bit into its int32 word (bit = e mod 32;
@@ -446,9 +481,21 @@ def _shift_rows_clamped(x, u, u_max: int):
     return x
 
 
-def _dp_kernel_batched(ups_ref, sig_ref, alw_ref, offs_ref, feas_ref, v0_ref,
-                       vout_ref, dec_ref, vpad_ref, *, n_edges: int,
-                       u_max: int, off_max: int):
+def _dp_kernel_batched(
+    ups_ref,
+    sig_ref,
+    alw_ref,
+    offs_ref,
+    feas_ref,
+    v0_ref,
+    vout_ref,
+    dec_ref,
+    vpad_ref,
+    *,
+    n_edges: int,
+    u_max: int,
+    off_max: int,
+):
     """Whole-plane DP forward over ``block_b`` instances per grid step.
 
     Per-instance operands arrive as (block_b, E) SMEM rows; the
@@ -471,7 +518,7 @@ def _dp_kernel_batched(ups_ref, sig_ref, alw_ref, offs_ref, feas_ref, v0_ref,
         vpad_ref[:, :, :off_max] = jnp.full(
             (block_b, vpad_ref.shape[1], off_max), NEG, jnp.float32)
 
-    for w in range(W - 1, -1, -1):               # edges E-1 … 0, word-major
+    for w in range(W - 1, -1, -1):  # edges E-1 … 0, word-major
         e_lo = w * 32
         e_hi = min(e_lo + 32, n_edges)
 
@@ -505,8 +552,19 @@ def _dp_kernel_batched(ups_ref, sig_ref, alw_ref, offs_ref, feas_ref, v0_ref,
         dec_ref[:, w] = word
 
 
-def _edge_tile_kernel(u_ref, off_ref, sig_ref, feas_ref, vleft_ref, vcur_ref,
-                      vout_ref, bits_ref, vpad_ref, *, u_max: int):
+def _edge_tile_kernel(
+    u_ref,
+    off_ref,
+    sig_ref,
+    feas_ref,
+    vleft_ref,
+    vcur_ref,
+    vout_ref,
+    bits_ref,
+    vpad_ref,
+    *,
+    u_max: int,
+):
     """One edge update on one (S, B) capacity tile.
 
     ``vleft``/``vcur`` are two views of the SAME value plane: the tile and
@@ -532,9 +590,21 @@ def _edge_tile_kernel(u_ref, off_ref, sig_ref, feas_ref, vleft_ref, vcur_ref,
     vout_ref[:, :] = jnp.maximum(cur, take)
 
 
-def _edge_stile_kernel(u_ref, off_ref, sig_ref, feas_ref, vup_left_ref,
-                       vup_cur_ref, vleft_ref, vcur_ref, vout_ref, bits_ref,
-                       vpad_ref, *, u_max: int):
+def _edge_stile_kernel(
+    u_ref,
+    off_ref,
+    sig_ref,
+    feas_ref,
+    vup_left_ref,
+    vup_cur_ref,
+    vleft_ref,
+    vcur_ref,
+    vout_ref,
+    bits_ref,
+    vpad_ref,
+    *,
+    u_max: int,
+):
     """One edge update on one (block_s, block_c) tile of the 2-D grid.
 
     The four ``v*`` refs are views of the SAME value plane: the tile, its
@@ -571,8 +641,9 @@ def _edge_stile_kernel(u_ref, off_ref, sig_ref, feas_ref, vup_left_ref,
     vout_ref[:, :] = jnp.maximum(cur, take)
 
 
-def _edge_call(V, feas_e, u1, off1, sig1, *, u_max: int, block_s,
-               block_c: int, interpret: bool):
+def _edge_call(
+    V, feas_e, u1, off1, sig1, *, u_max: int, block_s, block_c: int, interpret: bool
+):
     Sp, Cp = V.shape
     scalar_specs = [
         pl.BlockSpec(memory_space=pltpu.SMEM),
@@ -623,10 +694,26 @@ def _edge_call(V, feas_e, u1, off1, sig1, *, u_max: int, block_s,
     )(u1, off1, sig1, feas_e, V, V, V, V)
 
 
-def _fused_chunk_kernel(ups_ref, offs_ref, sig_ref, bitpos_ref, feas_ref,
-                        vin_ref, vout_ref, bits_ref, vpad_ref, rowh_ref,
-                        lefth_ref, *, n_chunk: int, u_max: int, off_max: int,
-                        multi_row: bool, grid_base: int = 0, alw_ref=None):
+def _fused_chunk_kernel(
+    ups_ref,
+    offs_ref,
+    sig_ref,
+    bitpos_ref,
+    feas_ref,
+    vin_ref,
+    vout_ref,
+    bits_ref,
+    vpad_ref,
+    rowh_ref,
+    lefth_ref,
+    *,
+    n_chunk: int,
+    u_max: int,
+    off_max: int,
+    multi_row: bool,
+    grid_base: int = 0,
+    alw_ref=None,
+):
     """``n_chunk`` consecutive edges on one (block_s, block_c) tile.
 
     The tile lives in the BODY region of ``vpad`` (rows [u_max:], columns
@@ -655,7 +742,7 @@ def _fused_chunk_kernel(ups_ref, offs_ref, sig_ref, bitpos_ref, feas_ref,
     Bs = vin_ref.shape[0]
     Bc = vin_ref.shape[1]
     i = pl.program_id(grid_base)
-    rd = (i + 1) % 2                  # rowh bank written by S-row i-1
+    rd = (i + 1) % 2  # rowh bank written by S-row i-1
     wr = i % 2
     j = pl.program_id(grid_base + 1)
     vpad_ref[pl.ds(u_max, Bs), pl.ds(off_max, Bc)] = vin_ref[:, :]
@@ -734,9 +821,21 @@ def _chunk_word_masks(n_edges: int, block_e: int) -> np.ndarray:
     return masks.view(np.int32)
 
 
-def _dp_forward_fused(upsilon, sigma2, feasible, offsets, v0,
-                      *, n_edges: int, u_max: int, off_max: int,
-                      block_e: int, block_s, block_c: int, interpret: bool):
+def _dp_forward_fused(
+    upsilon,
+    sigma2,
+    feasible,
+    offsets,
+    v0,
+    *,
+    n_edges: int,
+    u_max: int,
+    off_max: int,
+    block_e: int,
+    block_s,
+    block_c: int,
+    interpret: bool,
+):
     if not 1 <= block_e <= MAX_BLOCK_E:
         raise ValueError(
             f"block_e={block_e} outside [1, {MAX_BLOCK_E}]: a fused chunk "
@@ -747,7 +846,7 @@ def _dp_forward_fused(upsilon, sigma2, feasible, offsets, v0,
     bs = S if block_s is None else block_s
     Sp = -(-S // bs) * bs
     V0 = jnp.pad(v0, ((0, Sp - S), (0, Cp - C)), constant_values=NEG)
-    feas_p = jnp.pad(feasible, ((0, 0), (0, Cp - C)))   # pad states masked
+    feas_p = jnp.pad(feasible, ((0, 0), (0, Cp - C)))  # pad states masked
     W = packed_words(n_edges)
     dec0 = jnp.zeros((W, Sp, Cp), jnp.int32)
 
@@ -833,10 +932,25 @@ class _Lead0:
         self._ref[self._at(idx)] = val
 
 
-def _batched_fused_kernel(ups_ref, offs_ref, sig_ref, bitpos_ref, alw_ref,
-                          feas_ref, vin_ref, vout_ref, bits_ref, vpad_ref,
-                          rowh_ref, lefth_ref, *, n_chunk: int, u_max: int,
-                          off_max: int, multi_row: bool):
+def _batched_fused_kernel(
+    ups_ref,
+    offs_ref,
+    sig_ref,
+    bitpos_ref,
+    alw_ref,
+    feas_ref,
+    vin_ref,
+    vout_ref,
+    bits_ref,
+    vpad_ref,
+    rowh_ref,
+    lefth_ref,
+    *,
+    n_chunk: int,
+    u_max: int,
+    off_max: int,
+    multi_row: bool,
+):
     """Batch-blocked adapter around :func:`_fused_chunk_kernel`: the body
     runs unchanged on the (1, …) instance blocks through
     fixed-leading-index views, with the (i, j) grid ids shifted one axis
@@ -850,10 +964,22 @@ def _batched_fused_kernel(ups_ref, offs_ref, sig_ref, bitpos_ref, alw_ref,
         multi_row=multi_row, grid_base=1, alw_ref=_Lead0(alw_ref))
 
 
-def _dp_forward_fused_batched(upsilon, sigma2, allowed, feasible, offsets,
-                              v0, *, n_edges: int, u_max: int, off_max: int,
-                              block_e: int, block_s, block_c: int,
-                              interpret: bool):
+def _dp_forward_fused_batched(
+    upsilon,
+    sigma2,
+    allowed,
+    feasible,
+    offsets,
+    v0,
+    *,
+    n_edges: int,
+    u_max: int,
+    off_max: int,
+    block_e: int,
+    block_s,
+    block_c: int,
+    interpret: bool,
+):
     if not 1 <= block_e <= MAX_BLOCK_E:
         raise ValueError(
             f"block_e={block_e} outside [1, {MAX_BLOCK_E}]: a fused chunk "
@@ -867,7 +993,7 @@ def _dp_forward_fused_batched(upsilon, sigma2, allowed, feasible, offsets,
     V0 = jnp.broadcast_to(
         jnp.pad(v0, ((0, Sp - S), (0, Cp - C)), constant_values=NEG)[None],
         (B, Sp, Cp))
-    feas_p = jnp.pad(feasible, ((0, 0), (0, Cp - C)))   # pad states masked
+    feas_p = jnp.pad(feasible, ((0, 0), (0, Cp - C)))  # pad states masked
     W = packed_words(n_edges)
     dec0 = jnp.zeros((B, W, Sp, Cp), jnp.int32)
 
@@ -879,7 +1005,7 @@ def _dp_forward_fused_batched(upsilon, sigma2, allowed, feasible, offsets,
         return jnp.pad(arr[rev], pad_width).reshape((n_chunks, block_e)
                                                     + arr.shape[1:])
 
-    def _inst_chunks(arr):           # (B, E) → (n_chunks, B, block_e)
+    def _inst_chunks(arr):  # (B, E) → (n_chunks, B, block_e)
         return (jnp.pad(arr[:, rev], ((0, 0), (0, pad_e)))
                 .reshape(B, n_chunks, block_e).transpose(1, 0, 2))
 
@@ -905,11 +1031,11 @@ def _dp_forward_fused_batched(upsilon, sigma2, allowed, feasible, offsets,
         out_shape=(jax.ShapeDtypeStruct((B, Sp, Cp), jnp.float32),
                    jax.ShapeDtypeStruct((B, Sp, Cp), jnp.int32)),
         in_specs=[
-            inst_row,                                        # Υ̂ chunk
-            pl.BlockSpec(memory_space=pltpu.SMEM),           # offsets
-            inst_row,                                        # Σ̂² chunk
-            pl.BlockSpec(memory_space=pltpu.SMEM),           # bit positions
-            inst_row,                                        # allowed chunk
+            inst_row,  # Υ̂ chunk
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # offsets
+            inst_row,  # Σ̂² chunk
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # bit positions
+            inst_row,  # allowed chunk
             pl.BlockSpec((block_e, block_c), lambda b, i, j: (0, j)),
             pl.BlockSpec((1, bs, block_c), lambda b, i, j: (b, i, j)),
         ],
@@ -935,9 +1061,20 @@ def _dp_forward_fused_batched(upsilon, sigma2, allowed, feasible, offsets,
     return V[:, :S, :C], dec[:, :, :S, :C]
 
 
-def _dp_forward_blocked(upsilon, sigma2, feasible, offsets, v0,
-                        *, n_edges: int, u_max: int, off_max: int,
-                        block_s, block_c: int, interpret: bool):
+def _dp_forward_blocked(
+    upsilon,
+    sigma2,
+    feasible,
+    offsets,
+    v0,
+    *,
+    n_edges: int,
+    u_max: int,
+    off_max: int,
+    block_s,
+    block_c: int,
+    interpret: bool,
+):
     if block_c < off_max:
         raise ValueError(
             f"block_c={block_c} < off_max={off_max}: the offset shift would "
@@ -953,11 +1090,11 @@ def _dp_forward_blocked(upsilon, sigma2, feasible, offsets, v0,
     # towards SMALLER indices, so real entries never read a pad entry (pad
     # rows/states compute garbage that is sliced away at the end)
     V0 = jnp.pad(v0, ((0, Sp - S), (0, Cp - C)), constant_values=NEG)
-    feas_p = jnp.pad(feasible, ((0, 0), (0, Cp - C)))   # pad states masked
+    feas_p = jnp.pad(feasible, ((0, 0), (0, Cp - C)))  # pad states masked
     W = packed_words(n_edges)
     dec0 = jnp.zeros((W, Sp, Cp), jnp.int32)
 
-    rev = slice(None, None, -1)                          # edges E-1 … 0
+    rev = slice(None, None, -1)  # edges E-1 … 0
     xs = (upsilon[rev], offsets[rev], sigma2[rev], feas_p[rev],
           jnp.arange(n_edges - 1, -1, -1, dtype=jnp.int32))
 
@@ -980,12 +1117,21 @@ def _dp_forward_blocked(upsilon, sigma2, feasible, offsets, v0,
 @functools.partial(jax.jit, static_argnames=("n_edges", "u_max", "off_max",
                                              "interpret", "block_c",
                                              "block_s", "block_e"))
-def dp_forward_pallas(upsilon, sigma2, feasible, offsets, v0,
-                      *, n_edges: int, u_max: int, off_max: int,
-                      interpret: bool | None = None,
-                      block_c: int | None = None,
-                      block_s: int | None = None,
-                      block_e: int | None = None):
+def dp_forward_pallas(
+    upsilon,
+    sigma2,
+    feasible,
+    offsets,
+    v0,
+    *,
+    n_edges: int,
+    u_max: int,
+    off_max: int,
+    interpret: bool | None = None,
+    block_c: int | None = None,
+    block_s: int | None = None,
+    block_e: int | None = None,
+):
     """upsilon/sigma2/offsets: (E,) i32; feasible: (E, C) f32 0/1;
     v0: (S, C) f32.  Returns (V_final (S, C) f32,
     decisions (⌈E/32⌉, S, C) i32 — bit (e%32) of word (e//32) is edge e).
@@ -1053,13 +1199,23 @@ def dp_forward_pallas(upsilon, sigma2, feasible, offsets, v0,
                                              "interpret", "block_b",
                                              "block_c", "block_s",
                                              "block_e"))
-def dp_forward_pallas_batched(upsilon, sigma2, allowed, feasible, offsets,
-                              v0, *, n_edges: int, u_max: int, off_max: int,
-                              interpret: bool | None = None,
-                              block_b: int | None = None,
-                              block_c: int | None = None,
-                              block_s: int | None = None,
-                              block_e: int | None = None):
+def dp_forward_pallas_batched(
+    upsilon,
+    sigma2,
+    allowed,
+    feasible,
+    offsets,
+    v0,
+    *,
+    n_edges: int,
+    u_max: int,
+    off_max: int,
+    interpret: bool | None = None,
+    block_b: int | None = None,
+    block_c: int | None = None,
+    block_s: int | None = None,
+    block_e: int | None = None,
+):
     """B independent DP forwards in ONE pallas_call.
 
     upsilon/sigma2/allowed: (B, E); ``feasible`` (E, C) and ``offsets``
@@ -1122,7 +1278,7 @@ def dp_forward_pallas_batched(upsilon, sigma2, allowed, feasible, offsets,
     pad = Bp - B
     upsilon = jnp.pad(upsilon, ((0, pad), (0, 0)))
     sigma2 = jnp.pad(sigma2, ((0, pad), (0, 0)))
-    allowed = jnp.pad(allowed, ((0, pad), (0, 0)))   # allowed ≡ 0 ⇒ inert
+    allowed = jnp.pad(allowed, ((0, pad), (0, 0)))  # allowed ≡ 0 ⇒ inert
     scratch = (pltpu.VMEM((1, u_max + S, off_max + C), jnp.float32)
                if bb == 1
                else pltpu.VMEM((bb, S, off_max + C), jnp.float32))
@@ -1136,10 +1292,10 @@ def dp_forward_pallas_batched(upsilon, sigma2, allowed, feasible, offsets,
         out_shape=(jax.ShapeDtypeStruct((Bp, S, C), jnp.float32),
                    jax.ShapeDtypeStruct((Bp, W, S, C), jnp.int32)),
         in_specs=[
-            inst,                                        # Υ̂ rows
-            inst,                                        # Σ̂² rows
-            inst,                                        # allowed rows
-            pl.BlockSpec(memory_space=pltpu.SMEM),       # shared offsets
+            inst,  # Υ̂ rows
+            inst,  # Σ̂² rows
+            inst,  # allowed rows
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # shared offsets
             pl.BlockSpec((n_edges, C), lambda g: (0, 0)),
             pl.BlockSpec((S, C), lambda g: (0, 0)),
         ],

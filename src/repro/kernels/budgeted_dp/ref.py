@@ -40,7 +40,7 @@ def dp_forward_ref(upsilon, sigma2, feasible, offsets, v0):
         return jnp.maximum(V, take), dec
 
     V, decs = jax.lax.scan(body, v0, jnp.arange(E))
-    decs = decs[::-1]                                 # index by edge id
+    decs = decs[::-1]  # index by edge id
     # pack edge bits into int32 words: bit (e % 32) of word (e // 32)
     W = packed_words(E)
     pad = W * 32 - E

@@ -21,8 +21,18 @@ from jax.experimental import pallas as pl
 NEG = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
-                  window: int, blk_k: int, sk: int):
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    blk_k: int,
+    sk: int,
+):
     _, _, g, blk_q, hd = q_ref.shape
     qb = pl.program_id(2)
     q = q_ref[0, 0].reshape(g * blk_q, hd).astype(jnp.float32) * scale
@@ -71,9 +81,18 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
 
 @functools.partial(jax.jit, static_argnames=(
     "scale", "causal", "window", "blk_q", "blk_k", "interpret"))
-def flash_attention(q, k, v, *, scale: float, causal: bool = True,
-                    window: int = 0, blk_q: int = 128, blk_k: int = 512,
-                    interpret: bool = True):
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int = 0,
+    blk_q: int = 128,
+    blk_k: int = 512,
+    interpret: bool = True,
+):
     """q: (B, KH, g, Sq, hd); k, v: (B, KH, Sk, hd). Returns like q."""
     B, KH, g, Sq, hd = q.shape
     Sk = k.shape[2]

@@ -11,9 +11,18 @@ from .kernel import flash_attention
 __all__ = ["flash_attention_op"]
 
 
-def flash_attention_op(q, k, v, *, scale: float, causal: bool = True,
-                       window: int = 0, blk_q: int = 128, blk_k: int = 512,
-                       interpret: bool = True):
+def flash_attention_op(
+    q,
+    k,
+    v,
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int = 0,
+    blk_q: int = 128,
+    blk_k: int = 512,
+    interpret: bool = True,
+):
     """q: (B, Sq, H, hd); k, v: (B, Sk, KH, hd) with H = KH·g."""
     B, Sq, H, hd = q.shape
     _, Sk, KH, _ = k.shape

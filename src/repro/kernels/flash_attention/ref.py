@@ -5,8 +5,7 @@ import jax
 import jax.numpy as jnp
 
 
-def attention_ref(q, k, v, *, scale: float, causal: bool = True,
-                  window: int = 0):
+def attention_ref(q, k, v, *, scale: float, causal: bool = True, window: int = 0):
     """q: (B, Sq, H, hd); k/v: (B, Sk, KH, hd). Returns (B, Sq, H, vh)."""
     B, Sq, H, hd = q.shape
     _, Sk, KH, _ = k.shape

@@ -25,19 +25,18 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
-                state_ref):
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref, state_ref):
     ci = pl.program_id(1)
 
     @pl.when(ci == 0)
     def _init():
         state_ref[:, :] = jnp.zeros_like(state_ref)
 
-    x = x_ref[0, 0].astype(jnp.float32)          # (Q, P)
-    dt = dt_ref[0, 0].astype(jnp.float32)        # (Q,)
-    A = a_ref[0]                                  # scalar (per head)
-    Bm = b_ref[0, 0].astype(jnp.float32)         # (Q, N)
-    Cm = c_ref[0, 0].astype(jnp.float32)         # (Q, N)
+    x = x_ref[0, 0].astype(jnp.float32)  # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)  # (Q,)
+    A = a_ref[0]  # scalar (per head)
+    Bm = b_ref[0, 0].astype(jnp.float32)  # (Q, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)  # (Q, N)
     Q = x.shape[0]
 
     dA = dt * A
@@ -48,17 +47,17 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
     decay = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
 
     cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
-                             preferred_element_type=jnp.float32)   # (Q, Q)
+                             preferred_element_type=jnp.float32)  # (Q, Q)
     M = cb * decay * dt[None, :]
     y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
-                            preferred_element_type=jnp.float32)    # (Q, P)
+                            preferred_element_type=jnp.float32)  # (Q, P)
 
-    state = state_ref[:, :]                       # (N, P)
+    state = state_ref[:, :]  # (N, P)
     y += jax.lax.dot_general(Cm, state, (((1,), (0,)), ((), ())),
                              preferred_element_type=jnp.float32) \
         * jnp.exp(cum)[:, None]
 
-    wj = jnp.exp(cum[-1] - cum) * dt              # (Q,)
+    wj = jnp.exp(cum[-1] - cum) * dt  # (Q,)
     upd = jax.lax.dot_general(Bm, x * wj[:, None],
                               (((0,), (0,)), ((), ())),
                               preferred_element_type=jnp.float32)  # (N, P)

@@ -64,10 +64,10 @@ def cost_variants(cfg, seq_len: int, kind: str = "train"):
         tail = cfg.n_layers - G_full * per_full
         ncf = _nc_full(cfg, seq_len)
         half = max(seq_len // 2, 1)
-        A = base.replace(hybrid_every=4, n_layers=2 * 4 + tail)   # G2 P3 nc1
-        B = base.replace(hybrid_every=4, n_layers=3 * 4 + tail)   # G3 P3 nc1
-        C = base.replace(hybrid_every=6, n_layers=2 * 6 + tail)   # G2 P5 nc1
-        D = A.replace(ssm_chunk=half)                             # G2 P3 nc2
+        A = base.replace(hybrid_every=4, n_layers=2 * 4 + tail)  # G2 P3 nc1
+        B = base.replace(hybrid_every=4, n_layers=3 * 4 + tail)  # G3 P3 nc1
+        C = base.replace(hybrid_every=6, n_layers=2 * 6 + tail)  # G2 P5 nc1
+        D = A.replace(ssm_chunk=half)  # G2 P3 nc2
 
         def solve(vals):
             out = {}
@@ -75,9 +75,9 @@ def cost_variants(cfg, seq_len: int, kind: str = "train"):
                 vA, vB, vC, vD = (v[k] for v in vals)
                 # mamba layers in A: 2·3 + tail(3) = 9 ⇒ vA−vD = 9·mq/2
                 mq = 2 * (vA - vD) / (2 * 3 + tail)
-                mbq = (vC - vA) / 4                     # mb + mq (ΔP=2, G2)
+                mbq = (vC - vA) / 4  # mb + mq (ΔP=2, G2)
                 mb = mbq - mq
-                c = (vB - vA) - 3 * mbq                 # ΔG=1 at P3 nc1
+                c = (vB - vA) - 3 * mbq  # ΔG=1 at P3 nc1
                 a_fixed = vA - 2 * (c + 3 * mbq) - tail * mbq
                 per_m = mb + mq / ncf
                 out[k] = (a_fixed + tail * per_m
@@ -86,7 +86,7 @@ def cost_variants(cfg, seq_len: int, kind: str = "train"):
 
         return [A, B, C, D], solve
 
-    if cfg.family == "hybrid":        # decode shapes: no ssd chunk scan
+    if cfg.family == "hybrid":  # decode shapes: no ssd chunk scan
         per_full = cfg.hybrid_every
         G_full = cfg.n_layers // per_full
         P_full = per_full - 1
@@ -111,16 +111,16 @@ def cost_variants(cfg, seq_len: int, kind: str = "train"):
         L_full = cfg.n_layers
         ncf = _nc_full(cfg, seq_len)
         half = max(seq_len // 2, 1)
-        A = base.replace(n_layers=2)                    # L2 nc1
-        B = base.replace(n_layers=2, ssm_chunk=half)    # L2 nc2
-        C = base.replace(n_layers=4)                    # L4 nc1
+        A = base.replace(n_layers=2)  # L2 nc1
+        B = base.replace(n_layers=2, ssm_chunk=half)  # L2 nc2
+        C = base.replace(n_layers=4)  # L4 nc1
 
         def solve(vals):
             out = {}
             for k in vals[0]:
                 vA, vB, vC = (v[k] for v in vals)
-                quad = vA - vB                          # L2·quad/2 gap
-                per1 = (vC - vA) / 2.0                  # base + quad at nc1
+                quad = vA - vB  # L2·quad/2 gap
+                per1 = (vC - vA) / 2.0  # base + quad at nc1
                 bse = per1 - quad
                 a = vA - 2 * per1
                 out[k] = a + L_full * (bse + quad / ncf)
@@ -146,9 +146,9 @@ def cost_variants(cfg, seq_len: int, kind: str = "train"):
     if cfg.n_experts > 0 and cfg.moe_layer_start > 0:
         # deepseek: v = a + b_d·Ld + b_m·Lm
         Ld_full, Lm_full = cfg.moe_layer_start, cfg.n_layers - cfg.moe_layer_start
-        A = base.replace(n_layers=3, moe_layer_start=1)    # Ld1 Lm2
-        B = base.replace(n_layers=4, moe_layer_start=2)    # Ld2 Lm2
-        C = base.replace(n_layers=5, moe_layer_start=1)    # Ld1 Lm4
+        A = base.replace(n_layers=3, moe_layer_start=1)  # Ld1 Lm2
+        B = base.replace(n_layers=4, moe_layer_start=2)  # Ld2 Lm2
+        C = base.replace(n_layers=5, moe_layer_start=1)  # Ld1 Lm4
 
         def solve(vals):
             out = {}

@@ -78,7 +78,7 @@ def _compile_cell(cfg, shape, mesh, rules, remat: str, microbatches: int):
 
 def _extract_costs(compiled, n_dev) -> dict:
     cost = compiled.cost_analysis() or {}
-    if isinstance(cost, (list, tuple)):     # older jax wraps it per-partition
+    if isinstance(cost, (list, tuple)):  # older jax wraps it per-partition
         cost = cost[0] if cost else {}
     coll = parse_collective_bytes(compiled.as_text(), n_dev)
     vals = {k: float(cost.get(k, 0.0)) for k in COST_KEYS}
@@ -90,10 +90,16 @@ def _extract_costs(compiled, n_dev) -> dict:
     return vals
 
 
-def lower_cell(arch: str, shape_name: str, multi_pod: bool,
-               remat: str = "full", microbatches: int = 1,
-               overrides: dict | None = None, return_artifacts: bool = False,
-               config_overrides: dict | None = None):
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    remat: str = "full",
+    microbatches: int = 1,
+    overrides: dict | None = None,
+    return_artifacts: bool = False,
+    config_overrides: dict | None = None,
+):
     """Lower + compile one cell; returns the result record (and artifacts).
 
     Two kinds of compiles happen:

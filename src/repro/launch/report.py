@@ -24,7 +24,7 @@ def roofline_markdown() -> str:
             "|---|---|---|---|---|---|---|---|---|---|---|"]
     for p in sorted(RESULTS.glob("*.json")):
         if p.stem.count("_") > 2 and not p.stem.endswith(("single", "multi")):
-            continue                      # tagged perf variants: §Perf table
+            continue  # tagged perf variants: §Perf table
         r = json.loads(p.read_text())
         if r.get("skipped"):
             rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "

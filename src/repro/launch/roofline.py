@@ -29,9 +29,9 @@ __all__ = ["HW", "parse_collective_bytes", "active_param_count",
            "roofline_terms", "model_flops"]
 
 HW = {
-    "peak_flops": 197e12,       # bf16 / chip
-    "hbm_bw": 819e9,            # B/s
-    "link_bw": 50e9,            # B/s per ICI link
+    "peak_flops": 197e12,  # bf16 / chip
+    "hbm_bw": 819e9,  # B/s
+    "link_bw": 50e9,  # B/s per ICI link
 }
 
 _DTYPE_BYTES = {
@@ -145,7 +145,7 @@ def active_param_count(model) -> tuple[int, int]:
         name = "/".join(path)
         if name == "embed":
             if cfg.tie_embeddings:
-                active += n          # used as the output head matmul
+                active += n  # used as the output head matmul
             continue
         if name == "pos_embed":
             continue
@@ -165,12 +165,13 @@ def model_flops(model, shape) -> float:
     if shape.kind == "prefill":
         tokens = shape.global_batch * shape.seq_len
         return 2.0 * active * tokens
-    tokens = shape.global_batch * 1          # decode: one token per row
+    tokens = shape.global_batch * 1  # decode: one token per row
     return 2.0 * active * tokens
 
 
-def roofline_terms(cost: dict, coll: dict, n_devices: int,
-                   model=None, shape=None) -> dict:
+def roofline_terms(
+    cost: dict, coll: dict, n_devices: int, model=None, shape=None
+) -> dict:
     flops = float(cost.get("flops", 0.0))
     bytes_ = float(cost.get("bytes accessed", 0.0))
     wire = float(coll["total_wire_bytes"])

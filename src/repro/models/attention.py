@@ -37,8 +37,9 @@ def _ID(x, axes):
 _NEG = -1e30
 
 
-def chunked_attention(q, k, v, *, scale: float, causal: bool = True,
-                      window=None, chunk: int = 1024):
+def chunked_attention(
+    q, k, v, *, scale: float, causal: bool = True, window=None, chunk: int = 1024
+):
     """Online-softmax attention over KV chunks.
 
     q: (B, Sq, H, hd); k: (B, Sk, KH, hd); v: (B, Sk, KH, vh) with H = KH·g.
@@ -52,7 +53,7 @@ def chunked_attention(q, k, v, *, scale: float, causal: bool = True,
     g = H // KH
     chunk = min(chunk, Sk)
     pad = (-Sk) % chunk
-    if pad:                      # padded keys are masked out below (kj < Sk)
+    if pad:  # padded keys are masked out below (kj < Sk)
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
     n_chunks = (Sk + pad) // chunk
@@ -61,16 +62,16 @@ def chunked_attention(q, k, v, *, scale: float, causal: bool = True,
     kc = k.reshape(B, n_chunks, chunk, KH, hd).transpose(1, 0, 2, 3, 4)
     vc = v.reshape(B, n_chunks, chunk, KH, vh).transpose(1, 0, 2, 3, 4)
 
-    qi = jnp.arange(Sq)[:, None] + (Sk - Sq)      # absolute q positions
+    qi = jnp.arange(Sq)[:, None] + (Sk - Sq)  # absolute q positions
     m0 = jnp.full((B, KH, g, Sq), _NEG, jnp.float32)
     l0 = jnp.zeros((B, KH, g, Sq), jnp.float32)
     acc0 = jnp.zeros((B, Sq, KH, g, vh), jnp.float32)
 
     def body(carry, inp):
         m, lsum, acc = carry
-        c_idx, kb, vb = inp                        # kb (B, chunk, KH, hd)
+        c_idx, kb, vb = inp  # kb (B, chunk, KH, hd)
         kj = c_idx * chunk + jnp.arange(chunk)[None, :]
-        mask = kj < Sk                             # exclude pad keys
+        mask = kj < Sk  # exclude pad keys
         if causal:
             mask &= kj <= qi
         if window is not None:
@@ -119,8 +120,9 @@ def _qkv(p, cfg, x):
             v.reshape(B, S, KV, hd))
 
 
-def attn_train(p, cfg, x, positions, *, window=None, theta=None,
-               chunk: int = 1024, rules=_ID):
+def attn_train(
+    p, cfg, x, positions, *, window=None, theta=None, chunk: int = 1024, rules=_ID
+):
     """Full-sequence attention (training / prefill). Returns (out, (k, v))."""
     B, S, _ = x.shape
     H, hd = cfg.n_heads, cfg.head_dim
@@ -145,8 +147,9 @@ def _scatter_kv(cache, new, pos):
     return cache.at[jnp.arange(B), pos].set(new[:, 0].astype(cache.dtype))
 
 
-def attn_decode(p, cfg, x, pos, kv_cache, *, window=None, theta=None,
-                rope_positions=None, rules=_ID):
+def attn_decode(
+    p, cfg, x, pos, kv_cache, *, window=None, theta=None, rope_positions=None, rules=_ID
+):
     """One-token decode. x: (B, 1, d); pos: (B,) absolute positions (cache
     write index + mask); rope_positions overrides the rotary stream (M-RoPE
     decode passes (3, B, 1)); kv_cache: (k, v) each (B, S_max, KV, hd)."""
@@ -294,7 +297,7 @@ def mla_decode(p, cfg, x, pos, cache, rules=_ID):
 
     # absorb W_k^b into q:  q_eff[h] = q_nope[h] @ W_k^b[h]^T  ∈ R^R
     wk = p["wk_b"].reshape(R, H, nh)
-    q_eff = jnp.einsum("bqhn,rhn->bqhr", q_nope, wk)        # (B,1,H,R)
+    q_eff = jnp.einsum("bqhn,rhn->bqhr", q_nope, wk)  # (B,1,H,R)
 
     scale = 1.0 / math.sqrt(nh + rh)
     logits = (jnp.einsum("bqhr,bsr->bhqs", q_eff, c_cache.astype(q_eff.dtype))

@@ -32,8 +32,14 @@ class SpecTree:
         self.tree: dict[str, Any] = {}
         self.dtype = dtype
 
-    def param(self, path: str, shape: tuple[int, ...], axes: tuple,
-              init: str = "fan_in", scale: float | None = None):
+    def param(
+        self,
+        path: str,
+        shape: tuple[int, ...],
+        axes: tuple,
+        init: str = "fan_in",
+        scale: float | None = None,
+    ):
         """Declare a leaf at 'a/b/c'. axes has one logical name (or None)
         per dim. init ∈ {fan_in, zeros, ones, normal}."""
         assert len(shape) == len(axes), (path, shape, axes)
@@ -144,8 +150,7 @@ def rope_freqs(head_dim: int, theta) -> jnp.ndarray:
     return jnp.asarray(theta, jnp.float32) ** (-exponents)
 
 
-def apply_rope(x, positions, theta,
-               mrope_sections: tuple[int, int, int] | None = None):
+def apply_rope(x, positions, theta, mrope_sections: tuple[int, int, int] | None = None):
     """x: (B, S, H, hd); positions: (B, S) or (3, B, S) for M-RoPE.
 
     M-RoPE (qwen2-vl): the hd/2 frequency pairs are split into (t, h, w)
@@ -153,7 +158,7 @@ def apply_rope(x, positions, theta,
     inputs pass identical streams, reducing to standard RoPE.
     """
     hd = x.shape[-1]
-    freqs = rope_freqs(hd, theta)                                   # (hd/2,)
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
     if mrope_sections is None:
         if positions.ndim == 3:
             positions = positions[0]
@@ -168,7 +173,7 @@ def apply_rope(x, positions, theta,
             f = freqs[start:start + n]
             parts.append(positions[i][..., None].astype(jnp.float32) * f)
             start += n
-        angles = jnp.concatenate(parts, axis=-1)                    # (B,S,hd/2)
+        angles = jnp.concatenate(parts, axis=-1)  # (B,S,hd/2)
     cos = jnp.cos(angles)[:, :, None, :]
     sin = jnp.sin(angles)[:, :, None, :]
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)

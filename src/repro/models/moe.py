@@ -69,19 +69,19 @@ def moe_apply(p, cfg, x, rules=_ID):
     gte = ("moe_group", None, "expert")
     logits = rules(jnp.einsum("gtd,de->gte", xg,
                               p["router"]).astype(jnp.float32), gte)
-    probs = rules(jax.nn.softmax(logits, axis=-1), gte)      # (G, Tg, E)
-    top_w, top_i = jax.lax.top_k(probs, k)                   # (G, Tg, k)
+    probs = rules(jax.nn.softmax(logits, axis=-1), gte)  # (G, Tg, E)
+    top_w, top_i = jax.lax.top_k(probs, k)  # (G, Tg, k)
     top_w = rules(top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9),
                   ("moe_group", None, None))
     top_i = rules(top_i, ("moe_group", None, None))
 
-    onehot = jax.nn.one_hot(top_i, E, dtype=jnp.float32)     # (G, Tg, k, E)
+    onehot = jax.nn.one_hot(top_i, E, dtype=jnp.float32)  # (G, Tg, k, E)
     w_te = rules(jnp.einsum("gtke,gtk->gte", onehot, top_w), gte)
 
     # per-(group, expert) top-C tokens ("expert choice" within the top-k mask)
     C = max(1, int(math.ceil(Tg * k / E * cfg.capacity_factor)))
     C = min(C, Tg)
-    gate, idx = jax.lax.top_k(w_te.transpose(0, 2, 1), C)    # (G, E, C)
+    gate, idx = jax.lax.top_k(w_te.transpose(0, 2, 1), C)  # (G, E, C)
     gate = rules(gate, ("moe_group", "expert", None))
     idx = rules(idx, ("moe_group", "expert", None))
 
@@ -91,13 +91,13 @@ def moe_apply(p, cfg, x, rules=_ID):
     # all-reduce the full f32 (G,Tg,d) per layer (measured 24 GiB/op).
     idx_local = rules(idx, ("moe_group", None, None))
     xe = jnp.take_along_axis(xg[:, None, :, :], idx_local[..., None], axis=2)
-    xe = rules(xe, ("moe_group", None, None, None))          # local gather
-    xe = rules(xe, ("moe_group", "expert", None, None))      # all-to-all
+    xe = rules(xe, ("moe_group", None, None, None))  # local gather
+    xe = rules(xe, ("moe_group", "expert", None, None))  # all-to-all
 
     h = (jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"]))
          * jnp.einsum("gecd,edf->gecf", xe, p["w_up"]))
     ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
-    ye = ye * gate[..., None].astype(ye.dtype)               # dropped ⇒ gate 0
+    ye = ye * gate[..., None].astype(ye.dtype)  # dropped ⇒ gate 0
     ye = rules(ye, ("moe_group", "expert", None, None))
 
     # combine (§Perf P5): the scatter SUMS over experts, so two layouts:

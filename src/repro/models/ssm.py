@@ -30,7 +30,7 @@ def _ID(x, axes):
 
 def conv_dim(cfg) -> int:
     """channels that pass through the causal depthwise conv: x ++ B ++ C."""
-    return cfg.d_inner + 2 * cfg.ssm_state          # n_groups = 1
+    return cfg.d_inner + 2 * cfg.ssm_state  # n_groups = 1
 
 
 def ssm_specs(spec: SpecTree, path: str, cfg):
@@ -83,28 +83,28 @@ def ssd_chunked(x, dt, A, B_, C_, chunk: int, unroll: bool = False):
     Br = B_.reshape(Bb, nc, Q, N)
     Cr = C_.reshape(Bb, nc, Q, N)
 
-    dA = dtr * A[None, None, None, :]                     # (B,nc,Q,H) ≤ 0
-    cum = jnp.cumsum(dA, axis=2)                          # within-chunk cumsum
+    dA = dtr * A[None, None, None, :]  # (B,nc,Q,H) ≤ 0
+    cum = jnp.cumsum(dA, axis=2)  # within-chunk cumsum
 
     # ---- intra-chunk (quadratic in Q) ----
     # decay(i,j) = exp(cum_i - cum_j) for i ≥ j else 0
     ii = jnp.arange(Q)[:, None]
     jj = jnp.arange(Q)[None, :]
-    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q_i,Q_j,H)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q_i,Q_j,H)
     decay = jnp.where((ii >= jj)[None, None, :, :, None],
                       jnp.exp(seg), 0.0)
-    cb = jnp.einsum("bcin,bcjn->bcij", Cr, Br)            # (B,nc,Q,Q)
-    M = cb[..., None] * decay * dtr[:, :, None, :, :]     # (B,nc,Qi,Qj,H)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cr, Br)  # (B,nc,Q,Q)
+    M = cb[..., None] * decay * dtr[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
     y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xr)
 
     # ---- chunk summaries ----
-    last = cum[:, :, -1:, :]                              # (B,nc,1,H)
-    wj = jnp.exp(last - cum) * dtr                        # (B,nc,Q,H)
+    last = cum[:, :, -1:, :]  # (B,nc,1,H)
+    wj = jnp.exp(last - cum) * dtr  # (B,nc,Q,H)
     S_c = jnp.einsum("bcqh,bcqn,bcqhp->bchnp", wj, Br, xr)  # (B,nc,H,N,P)
 
     # ---- inter-chunk recurrence ----
     def body(S_prev, inp):
-        S_chunk, decay_last = inp                          # (B,H,N,P), (B,H)
+        S_chunk, decay_last = inp  # (B,H,N,P), (B,H)
         S_new = S_prev * jnp.exp(decay_last)[:, :, None, None] + S_chunk
         return S_new, S_prev
 
@@ -112,7 +112,7 @@ def ssd_chunked(x, dt, A, B_, C_, chunk: int, unroll: bool = False):
     xs = (S_c.transpose(1, 0, 2, 3, 4), last[:, :, 0, :].transpose(1, 0, 2))
     S_final, S_prevs = jax.lax.scan(body, S0, xs,
                                     unroll=True if unroll else 1)  # (nc,...)
-    S_prevs = S_prevs.transpose(1, 0, 2, 3, 4)            # (B,nc,H,N,P)
+    S_prevs = S_prevs.transpose(1, 0, 2, 3, 4)  # (B,nc,H,N,P)
 
     y_inter = jnp.einsum("bcqn,bchnp->bcqhp",
                          Cr, S_prevs) * jnp.exp(cum)[..., None]
@@ -120,8 +120,9 @@ def ssd_chunked(x, dt, A, B_, C_, chunk: int, unroll: bool = False):
     return y, S_final
 
 
-def mamba_train(p, cfg, x, chunk: int | None = None, return_state: bool = False,
-                rules=_ID):
+def mamba_train(
+    p, cfg, x, chunk: int | None = None, return_state: bool = False, rules=_ID
+):
     """Full-sequence Mamba2 block. x: (B,S,d) -> (y, final_state).
 
     final_state (when requested) is a dict {"ssm": (B,H,P,N), "conv":
@@ -132,7 +133,7 @@ def mamba_train(p, cfg, x, chunk: int | None = None, return_state: bool = False,
     di, H, P, N = cfg.d_inner, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
     chunk = chunk or cfg.ssm_chunk
 
-    z = x @ p["wz"]                                        # (B,S,di)
+    z = x @ p["wz"]  # (B,S,di)
     xbc_raw = x @ p["wxbc"]
     xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
     xs, B_, C_ = jnp.split(xbc, [di, di + N], axis=-1)
@@ -167,24 +168,24 @@ def mamba_decode(p, cfg, x, state, rules=_ID):
     W = cfg.conv_width
 
     z = x @ p["wz"]
-    xbc_new = (x @ p["wxbc"])[:, 0, :]                     # (B, Ch)
+    xbc_new = (x @ p["wxbc"])[:, 0, :]  # (B, Ch)
     conv_in = jnp.concatenate([state["conv"], xbc_new[:, None, :]], axis=1)
     w = p["conv_w"]
     out = sum(conv_in[:, i, :] * w[i] for i in range(W)) + p["conv_b"]
-    xbc = jax.nn.silu(out)                                 # (B, Ch)
+    xbc = jax.nn.silu(out)  # (B, Ch)
     new_conv = conv_in[:, 1:, :]
 
     xs, B_, C_ = jnp.split(xbc, [di, di + N], axis=-1)
     dt = jax.nn.softplus(
         (x[:, 0, :] @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])  # (B,H)
     A = -jnp.exp(p["A_log"].astype(jnp.float32))
-    dA = jnp.exp(dt * A[None, :])                          # (B,H)
+    dA = jnp.exp(dt * A[None, :])  # (B,H)
 
     xh = xs.reshape(B, H, P).astype(jnp.float32)
     ssm = state["ssm"].astype(jnp.float32)
     upd = ((dt[:, :, None] * xh)[:, :, :, None]
            * B_[:, None, None, :].astype(jnp.float32))
-    ssm_new = ssm * dA[:, :, None, None] + upd             # (B,H,P,N)
+    ssm_new = ssm * dA[:, :, None, None] + upd  # (B,H,P,N)
     y = jnp.einsum("bhpn,bn->bhp", ssm_new, C_.astype(jnp.float32))
     y = y + xh * p["D"][None, :, None]
     y = y.reshape(B, 1, di).astype(x.dtype)

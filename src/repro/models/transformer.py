@@ -44,7 +44,7 @@ def _cfg_scan(cfg, body, init, xs):
                         unroll=True if cfg.unroll_scans else 1)
 
 REMAT_POLICIES = {
-    "full": None,                                            # save nothing
+    "full": None,  # save nothing
     "dots": "dots_with_no_batch_dims_saveable",
     "none": "everything_saveable",
 }
@@ -124,8 +124,9 @@ def _dense_block_train(p, cfg, h, positions, window, theta, moe: bool, rules):
     return h, kv, aux
 
 
-def _dense_block_decode(p, cfg, h, pos, cache, window, theta, moe: bool, rules,
-                        rope_positions=None):
+def _dense_block_decode(
+    p, cfg, h, pos, cache, window, theta, moe: bool, rules, rope_positions=None
+):
     x = _norm(p["ln1"], cfg, h)
     if cfg.mla:
         a, cache = mla_decode(p["attn"], cfg, x, pos, cache, rules=rules)
@@ -160,10 +161,10 @@ def _layer_pattern(cfg, n_layers: int):
 class Model:
     config: Any
     spec: SpecTree
-    loss: Callable          # (params, batch, rules=, remat=) -> (loss, metrics)
-    prefill: Callable       # (params, batch, rules=) -> (last_logits, cache)
-    decode: Callable        # (params, batch, rules=) -> (logits, cache)
-    cache_spec: Callable    # (batch_size, s_max) -> (ShapeDtypeStruct tree, axes tree)
+    loss: Callable  # (params, batch, rules=, remat=) -> (loss, metrics)
+    prefill: Callable  # (params, batch, rules=) -> (last_logits, cache)
+    decode: Callable  # (params, batch, rules=) -> (logits, cache)
+    cache_spec: Callable  # (batch_size, s_max) -> (ShapeDtypeStruct tree, axes tree)
 
     def init(self, key):
         return init_params(self.spec, key)
@@ -274,7 +275,7 @@ def _build_decoder_lm(cfg):
         _dense_block_specs(cfg, moe=False)(_mtp_sub := SpecTree(cfg.param_dtype))
         spec.subtree("mtp/block", _mtp_sub)
 
-    wpat, tpat = _layer_pattern(cfg, n_dense)   # moe archs here are uniform
+    wpat, tpat = _layer_pattern(cfg, n_dense)  # moe archs here are uniform
 
     def embed_input(params, batch, S_expected):
         """tokens (+ optional patch embeds for vlm) -> (h, positions, text_mask)."""
@@ -329,7 +330,7 @@ def _build_decoder_lm(cfg):
         return h, sum(auxes), caches
 
     def loss(params, batch, rules=_ID, remat="full"):
-        tokens = batch["tokens"]                       # (B, S_text+1)
+        tokens = batch["tokens"]  # (B, S_text+1)
         inputs = {**batch, "tokens": tokens[:, :-1]}
         labels = tokens[:, 1:]
         h, positions = embed_input(params, inputs, None)
@@ -369,7 +370,7 @@ def _build_decoder_lm(cfg):
 
     def decode(params, batch, rules=_ID):
         cache, pos = batch["cache"], batch["pos"]
-        rope_positions = batch.get("positions")     # (3, B, 1) for M-RoPE
+        rope_positions = batch.get("positions")  # (3, B, 1) for M-RoPE
         cdt = DTYPES[cfg.compute_dtype]
         h = jnp.take(params["embed"], batch["token"], axis=0).astype(cdt)
         if cfg.embed_scale:
@@ -517,7 +518,7 @@ def _build_ssm_lm(cfg):
 
 def _hybrid_layout(cfg):
     """81 layers = n_groups · (hybrid_every-1 mamba + 1 shared attn) + tail."""
-    per = cfg.hybrid_every                      # e.g. 6 ⇒ 5 mamba + 1 attn
+    per = cfg.hybrid_every  # e.g. 6 ⇒ 5 mamba + 1 attn
     n_groups = cfg.n_layers // per
     tail = cfg.n_layers - n_groups * per
     return n_groups, per - 1, tail

@@ -18,8 +18,8 @@ __all__ = ["AdamW", "OptState"]
 
 @dataclasses.dataclass(frozen=True)
 class OptState:
-    step: jnp.ndarray            # () int32
-    m: Any                       # f32 tree, same structure as params
+    step: jnp.ndarray  # () int32
+    m: Any  # f32 tree, same structure as params
     v: Any
 
 

@@ -14,8 +14,9 @@ def cosine_schedule(base_lr: float, total_steps: int, min_frac: float = 0.1):
     return lr
 
 
-def linear_warmup_cosine(base_lr: float, warmup: int, total_steps: int,
-                         min_frac: float = 0.1):
+def linear_warmup_cosine(
+    base_lr: float, warmup: int, total_steps: int, min_frac: float = 0.1
+):
     cos = cosine_schedule(base_lr, max(total_steps - warmup, 1), min_frac)
     def lr(step):
         s = step.astype(jnp.float32)

@@ -74,8 +74,14 @@ class TrainSupervisor:
     exact stream from the restored step.
     """
 
-    def __init__(self, step_fn: Callable, ckpt, injector: FailureInjector,
-                 save_every: int = 50, async_save: bool = True):
+    def __init__(
+        self,
+        step_fn: Callable,
+        ckpt,
+        injector: FailureInjector,
+        save_every: int = 50,
+        async_save: bool = True,
+    ):
         self.step_fn = step_fn
         self.ckpt = ckpt
         self.injector = injector
@@ -85,8 +91,14 @@ class TrainSupervisor:
         self.restarts = 0
         self.lost_steps = 0
 
-    def run(self, state, make_iterator, total_steps: int, start_step: int = 0,
-            on_metrics: Optional[Callable] = None):
+    def run(
+        self,
+        state,
+        make_iterator,
+        total_steps: int,
+        start_step: int = 0,
+        on_metrics: Optional[Callable] = None,
+    ):
         step = start_step
         it = make_iterator(step)
         while step < total_steps:
@@ -98,7 +110,7 @@ class TrainSupervisor:
                 restored = self.ckpt.latest_step()
                 if restored is None:
                     restored = start_step
-                    state_r = state     # no checkpoint yet: lose nothing but time
+                    state_r = state  # no checkpoint yet: lose nothing but time
                 else:
                     state_r, restored = self.ckpt.restore(like=state,
                                                           step=restored)

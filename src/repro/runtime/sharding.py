@@ -28,9 +28,9 @@ __all__ = ["Rules", "make_rules", "PRESETS"]
 PRESETS: dict[str, dict[str, tuple[str, ...]]] = {
     "train": {
         "batch": ("pod", "data"),
-        "seq": (),                  # attention runs with full seq per shard
-        "seq_sp": ("model",),       # SP: residual stream seq-sharded
-        "embed": ("data",),         # FSDP
+        "seq": (),  # attention runs with full seq per shard
+        "seq_sp": ("model",),  # SP: residual stream seq-sharded
+        "embed": ("data",),  # FSDP
         "vocab": ("model",),
         "heads": ("model",),
         "kv_heads": ("model",),
@@ -137,8 +137,9 @@ class Rules:
                             abstract_tree, axes_tree)
 
 
-def make_rules(mesh: Optional[Mesh], preset: str = "train",
-               overrides: Optional[dict] = None) -> Rules:
+def make_rules(
+    mesh: Optional[Mesh], preset: str = "train", overrides: Optional[dict] = None
+) -> Rules:
     table = dict(PRESETS[preset])
     if overrides:
         table.update(overrides)

@@ -29,24 +29,31 @@ __all__ = ["TrainState", "make_train_step", "init_train_state"]
 class TrainState:
     params: Any
     opt: OptState
-    err: Any            # compression error-feedback tree (or None)
+    err: Any  # compression error-feedback tree (or None)
 
 
 jax.tree_util.register_dataclass(
     TrainState, data_fields=["params", "opt", "err"], meta_fields=[])
 
 
-def init_train_state(model, key, optimizer: AdamW,
-                     compress: bool = False) -> TrainState:
+def init_train_state(
+    model, key, optimizer: AdamW, compress: bool = False
+) -> TrainState:
     params = model.init(key)
     err = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
            if compress else None)
     return TrainState(params=params, opt=optimizer.init(params), err=err)
 
 
-def make_train_step(model, optimizer: AdamW, *, rules=None, remat: str = "full",
-                    microbatches: int = 1,
-                    compress_ratio: Optional[float] = None):
+def make_train_step(
+    model,
+    optimizer: AdamW,
+    *,
+    rules=None,
+    remat: str = "full",
+    microbatches: int = 1,
+    compress_ratio: Optional[float] = None,
+):
     """Returns step(state, batch) -> (state, metrics)."""
     rules = rules if rules is not None else (lambda x, a: x)
     param_axes = model.axes()

@@ -22,28 +22,33 @@ K_CHIPS, K_HOSTS, K_ICI = 0, 1, 2
 @dataclasses.dataclass(frozen=True)
 class Slice:
     name: str
-    accel: str                    # "v5e" | "v5p" | "trn2" — service locality
-    chips: int                    # e.g. 256 = one pod slice
+    accel: str  # "v5e" | "v5p" | "trn2" — service locality
+    chips: int  # e.g. 256 = one pod slice
     hosts: int
     ici_domains: int
 
 
 @dataclasses.dataclass(frozen=True)
 class JobType:
-    name: str                     # e.g. "qwen2.5-32b:train_4k"
+    name: str  # e.g. "qwen2.5-32b:train_4k"
     arch: str
     shape: str
-    accel_ok: tuple[str, ...]     # service-locality set
-    chips: int                    # gang requirement
+    accel_ok: tuple[str, ...]  # service-locality set
+    chips: int  # gang requirement
     hosts: int
     ici_domains: int
-    value_rate: float             # $-value per unit normalized throughput
+    value_rate: float  # $-value per unit normalized throughput
     arrival_p: float = 0.9
 
 
-def build_instance(slices: list[Slice], jobs: list[JobType],
-                   mean_rates: np.ndarray, *, alpha: float = 0.5,
-                   seed: int = 0) -> tuple[Instance, np.ndarray]:
+def build_instance(
+    slices: list[Slice],
+    jobs: list[JobType],
+    mean_rates: np.ndarray,
+    *,
+    alpha: float = 0.5,
+    seed: int = 0,
+) -> tuple[Instance, np.ndarray]:
     """Map (jobs × slices) onto the paper's bipartite Instance.
 
     mean_rates[l, r]: expected normalized throughput of job l on slice r
@@ -60,7 +65,7 @@ def build_instance(slices: list[Slice], jobs: list[JobType],
                 continue
             if (sl.chips < job.chips or sl.hosts < job.hosts
                     or sl.ici_domains < job.ici_domains):
-                continue                      # not solely-servable (Sec 2.1)
+                continue  # not solely-servable (Sec 2.1)
             if mean_rates[li, r] <= 0:
                 continue
             edges.append((li, r))
@@ -68,7 +73,7 @@ def build_instance(slices: list[Slice], jobs: list[JobType],
             mu.append(job.value_rate * mean_rates[li, r])
             rate.append(mean_rates[li, r])
     edges = np.asarray(edges, np.int32)
-    A = np.asarray(A_cols, np.int64).T.astype(np.int32)      # (K, E)
+    A = np.asarray(A_cols, np.int64).T.astype(np.int32)  # (K, E)
 
     # cluster-wide capacities (constraint (1)): totals over the fleet
     c = np.asarray([sum(s.chips for s in slices),
@@ -81,9 +86,9 @@ def build_instance(slices: list[Slice], jobs: list[JobType],
     c_u = np.minimum(c // unit, 12).astype(np.int32)
 
     mu = np.asarray(mu, np.float32)
-    mu = 0.1 + 0.9 * mu / max(float(mu.max()), 1e-9)          # into [0.1, 1]
+    mu = 0.1 + 0.9 * mu / max(float(mu.max()), 1e-9)  # into [0.1, 1]
     sigma = mu / 2.0
-    cost = np.full(len(edges), 0.15, np.float32)              # supply cost
+    cost = np.full(len(edges), 0.15, np.float32)  # supply cost
     v = np.asarray([clipped_normal_mean(float(m - co), float(s))
                     for m, s, co in zip(mu, sigma, cost)], np.float32)
 

@@ -22,7 +22,7 @@ from ..configs import SHAPES
 
 __all__ = ["roofline_rate", "rate_matrix"]
 
-_ACTIVE_B = {   # fallback active-params (B) if no dry-run record
+_ACTIVE_B = {  # fallback active-params (B) if no dry-run record
     "qwen2.5-32b": 32.8, "gemma3-27b": 27.0, "gemma-7b": 8.5,
     "qwen1.5-32b": 35.2, "zamba2-7b": 5.7, "dbrx-132b": 36.0,
     "deepseek-v3-671b": 37.0, "whisper-medium": 0.79,
@@ -30,8 +30,9 @@ _ACTIVE_B = {   # fallback active-params (B) if no dry-run record
 }
 
 
-def roofline_rate(arch: str, shape_name: str,
-                  results_dir: str = "results/dryrun") -> float:
+def roofline_rate(
+    arch: str, shape_name: str, results_dir: str = "results/dryrun"
+) -> float:
     """Normalized tokens/s per chip for the single-pod mesh."""
     shape = SHAPES[shape_name]
     tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
@@ -51,8 +52,9 @@ def roofline_rate(arch: str, shape_name: str,
     return tokens / max(step_s, 1e-9) / 256.0
 
 
-def rate_matrix(jobs, slices, results_dir: str = "results/dryrun",
-                slice_speed: dict | None = None) -> np.ndarray:
+def rate_matrix(
+    jobs, slices, results_dir: str = "results/dryrun", slice_speed: dict | None = None
+) -> np.ndarray:
     """mean_rates[l, r] for build_instance; slice_speed scales per slice
     (heterogeneous fleets / chronic stragglers)."""
     out = np.zeros((len(jobs), len(slices)), np.float32)

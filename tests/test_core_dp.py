@@ -4,7 +4,7 @@ import itertools
 import numpy as np
 import pytest
 
-try:        # optional [test] extra — property tests skip cleanly without it
+try:  # optional [test] extra — property tests skip cleanly without it
     from hypothesis import given, settings, strategies as st
     HAS_HYPOTHESIS = True
 except ImportError:
@@ -135,10 +135,10 @@ if HAS_HYPOTHESIS:
             tables, s_limit, jnp.int32(s_limit))
         x = np.asarray(x)
         assert set(np.unique(x)).issubset({0, 1})
-        assert np.all(A @ x <= c)                       # capacity (1)
-        assert upsilon @ x >= int(info["s_star"])        # budget (16)
+        assert np.all(A @ x <= c)  # capacity (1)
+        assert upsilon @ x >= int(info["s_star"])  # budget (16)
         row = np.asarray(info["value_row"])
-        assert row[int(info["s_star"])] == sigma2 @ x    # value consistency
+        assert row[int(info["s_star"])] == sigma2 @ x  # value consistency
 
     @settings(max_examples=20, deadline=None)
     @given(st.integers(0, 2**31 - 1))

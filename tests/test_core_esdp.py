@@ -18,8 +18,8 @@ def small():
 
 def test_instance_sanity():
     inst = generate_instance(seed=0)
-    assert inst.n_edges >= inst.n_ports          # ≥1 channel per port
-    assert np.all(inst.A <= inst.c[:, None])     # solely-servable condition
+    assert inst.n_edges >= inst.n_ports  # ≥1 channel per port
+    assert np.all(inst.A <= inst.c[:, None])  # solely-servable condition
     assert np.all((inst.v >= 0) & (inst.v <= 1))
     assert np.all(inst.sigma == inst.mu / 2)
 
@@ -46,7 +46,7 @@ def test_all_policies_feasible_every_slot(small):
         res = simulate(inst, pol, T, seed=1, tables=tables)
         assert res.sw.shape == (T,)
         assert np.all(res.sw >= 0)
-        assert np.all(res.n_dispatched <= inst.c.sum())   # loose capacity bound
+        assert np.all(res.n_dispatched <= inst.c.sum())  # loose capacity bound
         assert np.all(res.sw_oracle + 1e-5 >= 0)
 
 
@@ -86,7 +86,7 @@ def test_esdp_regret_sublinear(small):
 def test_esdp_beats_literal_greedy():
     """vs the paper-literal (no-tiebreak) baselines on the paper's default
     instance, ESDP wins clearly (paper Fig. 2 regime)."""
-    inst = generate_instance(seed=0)          # Table-2 defaults
+    inst = generate_instance(seed=0)  # Table-2 defaults
     tables = build_tables(inst.A, inst.c)
     T = 1000
     esdp = simulate(inst, make_esdp_policy(inst, T, g_fn=g_logt_only,

@@ -64,8 +64,8 @@ def test_docs_actually_contain_snippets():
 def test_doc_snippet(name, idx, mode, src, tmp_path, monkeypatch):
     code = compile(src, f"{name}:snippet{idx}", "exec")
     if mode == COMPILE_ONLY:
-        return                      # template: syntax-checked, not run
+        return  # template: syntax-checked, not run
     assert mode == "exec", f"unknown doc-snippet mode {mode!r}"
-    monkeypatch.chdir(tmp_path)     # relative writes land in the temp dir
+    monkeypatch.chdir(tmp_path)  # relative writes land in the temp dir
     exec(code, {"__name__": f"doc_snippet_{name}_{idx}"})
     assert os.getcwd() == str(tmp_path)

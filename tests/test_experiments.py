@@ -210,7 +210,7 @@ def test_cluster_sim_accepts_scenario():
     scn = get_scenario("elastic_outage", frac=0.34, t_down=40.0, t_up=80.0)
     _, _, alive = unroll_scenario(scn, T, inst.n_servers, seed=2)
     dead_servers = np.nonzero(~alive.all(axis=0))[0]
-    assert dead_servers.size > 0           # the outage actually fired
+    assert dead_servers.size > 0  # the outage actually fired
     out = ClusterSim(inst, T, scenario=scn, seed=2).run("esdp")
     assert out.dispatch_share[39:79, dead_servers].sum() == 0.0
 

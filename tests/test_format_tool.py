@@ -1,0 +1,105 @@
+"""Tests for tools/format.py — the stdlib machine-format normalizer.
+
+The tree-wide check mirrors the blocking CI format gate: if a change
+re-introduces aligned trailing comments or aligned-under-paren def
+signatures, tier-1 fails locally before CI does.
+"""
+
+import ast
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+from format import _split_top_level, format_source, main  # noqa: E402
+
+
+def test_inline_comment_respaced():
+    src = "x = 1          # aligned far right\ny = 2  # already fine\n"
+    out, skipped = format_source(src)
+    assert out == "x = 1  # aligned far right\ny = 2  # already fine\n"
+    assert skipped == []
+
+
+def test_standalone_comment_untouched():
+    src = "    # a standalone comment keeps its indent\nx = 1\n"
+    out, _ = format_source(src)
+    assert out == src
+
+
+def test_hash_inside_string_not_a_comment():
+    src = 'x = "#  not a comment"     # real one\n'
+    out, _ = format_source(src)
+    assert out == 'x = "#  not a comment"  # real one\n'
+
+
+def test_signature_joined_when_it_fits():
+    src = "def f(a, b,\n      c):\n    return a + b + c\n"
+    out, _ = format_source(src)
+    assert out.startswith("def f(a, b, c):\n")
+
+
+def test_signature_hug_form():
+    long_names = ", ".join(f"argument_number_{i}" for i in range(3))
+    src = f"def quite_a_long_function_name({long_names},\n        tail=None) -> dict:\n    pass\n"
+    assert len(src.splitlines()[0]) + len("tail=None) -> dict:") > 88  # one line won't fit
+    out, _ = format_source(src)
+    lines = out.splitlines()
+    assert lines[0] == "def quite_a_long_function_name("
+    assert lines[1] == f"    {long_names}, tail=None"
+    assert lines[2] == ") -> dict:"
+
+
+def test_magic_trailing_comma_forces_explode():
+    src = "def f(a, b,\n      c,):\n    pass\n"
+    out, _ = format_source(src)
+    assert out.splitlines()[:5] == ["def f(", "    a,", "    b,", "    c,", "):"]
+
+
+def test_default_with_commas_and_strings_survives():
+    src = 'def f(a=(1, 2), b="x,  y",\n      c=None) -> int:\n    return a[0]\n'
+    out, _ = format_source(src)
+    assert 'b="x,  y"' in out  # string interior untouched by whitespace collapse
+    assert ast.dump(ast.parse(out)) == ast.dump(ast.parse(src))
+
+
+def test_split_top_level_respects_nesting():
+    assert _split_top_level('a=(1, 2), b="q,r", *args') == ["a=(1, 2)", ' b="q,r"', " *args"]
+
+
+def test_signature_with_comment_is_skipped():
+    src = "def f(a,  # why\n      b):\n    return a\n"
+    out, skipped = format_source(src)
+    assert "def f(a,  # why" in out  # body left alone
+    assert any("def f" in s for s in skipped)
+
+
+def test_idempotent_and_ast_preserving_on_this_repo():
+    targets = [REPO / "src", REPO / "tests", REPO / "benchmarks", REPO / "tools"]
+    for path in targets:
+        for f in sorted(path.rglob("*.py")):
+            src = f.read_text()
+            out, _ = format_source(src)  # raises if AST changes
+            assert out == src, f"{f} is not machine-formatted — run python tools/format.py"
+
+
+def test_check_mode_exit_codes(tmp_path):
+    good = tmp_path / "good.py"
+    good.write_text("x = 1  # fine\n")
+    assert main(["--check", str(good)]) == 0
+    bad = tmp_path / "bad.py"
+    bad.write_text("x = 1     # aligned\n")
+    assert main(["--check", str(bad)]) == 1
+    assert bad.read_text() == "x = 1     # aligned\n"  # check mode never writes
+    assert main([str(bad)]) == 0
+    assert bad.read_text() == "x = 1  # aligned\n"
+
+
+@pytest.mark.parametrize("snippet", ["def f(:\n", "x = (\n"])
+def test_broken_source_reports_error(tmp_path, snippet):
+    f = tmp_path / "broken.py"
+    f.write_text(snippet)
+    assert main(["--check", str(f)]) == 2

@@ -28,10 +28,10 @@ from repro.kernels.budgeted_dp.ref import dp_forward_ref
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("B,S,H,KH,hd,causal,window", [
     (2, 256, 4, 4, 64, True, 0),
-    (1, 256, 8, 2, 64, True, 0),       # GQA g=4
-    (2, 128, 4, 1, 32, True, 0),       # MQA
-    (1, 512, 2, 2, 128, True, 128),    # sliding window
-    (2, 256, 4, 4, 64, False, 0),      # bidirectional (whisper encoder)
+    (1, 256, 8, 2, 64, True, 0),  # GQA g=4
+    (2, 128, 4, 1, 32, True, 0),  # MQA
+    (1, 512, 2, 2, 128, True, 128),  # sliding window
+    (2, 256, 4, 4, 64, False, 0),  # bidirectional (whisper encoder)
 ])
 def test_flash_attention_matches_ref(B, S, H, KH, hd, causal, window, dtype):
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
@@ -67,8 +67,8 @@ def test_flash_attention_cross_lengths():
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("B,S,H,P,N,Q", [
     (2, 128, 2, 32, 16, 32),
-    (1, 96, 4, 64, 32, 32),      # S not multiple of Q after pad? 96%32=0
-    (2, 80, 2, 32, 16, 32),      # padding path (80 % 32 != 0)
+    (1, 96, 4, 64, 32, 32),  # S not multiple of Q after pad? 96%32=0
+    (2, 80, 2, 32, 16, 32),  # padding path (80 % 32 != 0)
     (1, 256, 2, 64, 64, 64),
 ])
 def test_ssd_matches_ref(B, S, H, P, N, Q, dtype):
@@ -111,7 +111,7 @@ def test_budgeted_dp_matches_core(seed):
     np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
 
 
-@pytest.mark.parametrize("E", [7, 32, 40])   # 1 word, exact fit, 2 words
+@pytest.mark.parametrize("E", [7, 32, 40])  # 1 word, exact fit, 2 words
 def test_budgeted_dp_kernel_packed_decisions_match_ref(E):
     """The kernel's bit-packed (⌈E/32⌉, S, C) i32 decision words equal the
     pure-jnp oracle's, including across the word boundary (bit 31 → sign)."""
@@ -222,13 +222,13 @@ def test_budgeted_dp_s_tiled_u_max_halo_edge():
     reads the FIRST halo row of each tile, and block_s == u_max makes the
     halo as tall as the tile itself."""
     A, c, ups, sig = _tiling_problem(seed=17)
-    ups[0] = max(int(ups.max()), 1)          # ensure the max is taken
+    ups[0] = max(int(ups.max()), 1)  # ensure the max is taken
     tables = build_tables(A, c)
     s_cap = int(ups.sum())
     S, C = s_cap + 1, tables.n_states
     feas, offs = prepare_tables(tables)
     feas, offs = jnp.asarray(feas), jnp.asarray(offs)
-    u_max = int(ups.max())                   # no +1 margin
+    u_max = int(ups.max())  # no +1 margin
     v0 = jnp.full((S, C), NEG, jnp.float32).at[0, :].set(0.0)
     V_t, dec_t = dp_forward_pallas(
         jnp.asarray(ups), jnp.asarray(sig), feas, offs, v0, n_edges=len(ups),
@@ -317,7 +317,7 @@ def test_choose_tiling_decision_table():
     be, bs, bc = choose_tiling(S, C, E, u_max, off_max)
     assert bs is not None and bs >= u_max and bc >= off_max
     assert tiled_vmem_bytes(bs, bc, u_max) <= VMEM_BUDGET_BYTES
-    assert be == min(E, MAX_BLOCK_E)      # small histories: whole E fuses
+    assert be == min(E, MAX_BLOCK_E)  # small histories: whole E fuses
     assert fused_tile_vmem_bytes(be, bs, bc, u_max, off_max, S, C) <= \
         VMEM_BUDGET_BYTES
     # a tighter budget still yields a legal (if smaller) pair
@@ -335,7 +335,7 @@ def test_fused_hbm_model_cuts_traffic_blockwise():
     be, bs, bc = choose_tiling(S, C, E, u_max, off_max)
     scan = modeled_hbm_bytes(S, C, E, u_max, off_max, None, bs, bc)
     fused = modeled_hbm_bytes(S, C, E, u_max, off_max, be, bs, bc)
-    assert fused * 4 <= scan              # the PR-5 acceptance bound
+    assert fused * 4 <= scan  # the PR-5 acceptance bound
     # whole-plane streams everything exactly once and is the floor
     whole = modeled_hbm_bytes(S, C, E, u_max, off_max, None, None, None)
     assert whole < fused < scan
@@ -413,7 +413,7 @@ def test_budgeted_dp_fused_whole_chunk_masked():
     on) and the solver must still match the reference bit for bit."""
     A, c, ups, sig = _tiling_problem(seed=31, E=12)
     allowed = np.ones(12, bool)
-    allowed[4:8] = False                 # chunk [4, 8) fully masked
+    allowed[4:8] = False  # chunk [4, 8) fully masked
     tables = build_tables(A, c)
     s_cap = int(ups.sum())
     u_max = int(ups.max() + 1)
@@ -442,20 +442,20 @@ def test_budgeted_dp_fused_u_max_halo_tracks_in_chunk_updates():
     A = rng.integers(1, 3, (K, E))
     c = rng.integers(2, 4, K)
     A = np.minimum(A, c[:, None])
-    ups = rng.integers(1, 4, E).astype(np.int32)     # strictly positive
+    ups = rng.integers(1, 4, E).astype(np.int32)  # strictly positive
     sig = rng.integers(1, 3000, E).astype(np.int32)
     tables = build_tables(A, c)
     s_cap = int(ups.sum())
     feas, offs = prepare_tables(tables)
     feas, offs = jnp.asarray(feas), jnp.asarray(offs)
-    u_max = int(ups.max())               # exact bound, no margin
+    u_max = int(ups.max())  # exact bound, no margin
     off_max = int(offs.max())
     v0 = jnp.full((s_cap + 1, tables.n_states), NEG,
                   jnp.float32).at[0, :].set(0.0)
     V_f, dec_f = dp_forward_pallas(
         jnp.asarray(ups), jnp.asarray(sig), feas, offs, v0, n_edges=E,
         u_max=u_max, off_max=off_max, interpret=True,
-        block_c=off_max, block_s=u_max, block_e=E)   # one chunk, all edges
+        block_c=off_max, block_s=u_max, block_e=E)  # one chunk, all edges
     V_r, dec_r = dp_forward_ref(jnp.asarray(ups), jnp.asarray(sig), feas,
                                 offs, v0)
     np.testing.assert_array_equal(np.asarray(V_f), np.asarray(V_r))
@@ -541,9 +541,9 @@ def test_batched_vmap_emits_single_launch_with_shared_tables():
     calls = _pallas_calls(jaxpr.jaxpr)
     assert len(calls) == 1
     shapes = [tuple(v.aval.shape) for v in calls[0].invars]
-    assert (E, C) in shapes                  # feasibility plane, shared
-    assert (B, E, C) not in shapes           # never replicated per seed
-    assert (B, E) in shapes                  # per-instance statistics
+    assert (E, C) in shapes  # feasibility plane, shared
+    assert (B, E, C) not in shapes  # never replicated per seed
+    assert (B, E) in shapes  # per-instance statistics
 
 
 def test_simulate_batch_one_launch_per_slot():
@@ -593,7 +593,7 @@ def test_choose_tiling_batched_decision_table():
         assert (bb, be, bs, bc) == (bb_want, None, None, None)
         assert batched_vmem_bytes(S, 512, 16, 4, 73, bb) <= \
             VMEM_BUDGET_BYTES
-        if bb < 32:    # the next-larger fleet is what overflowed
+        if bb < 32:  # the next-larger fleet is what overflowed
             assert batched_vmem_bytes(S, 512, 16, 4, 73, 2 * bb) > \
                 VMEM_BUDGET_BYTES
     # long horizon: even block_b=1 overflows whole-plane → the plane
@@ -625,7 +625,7 @@ def test_batched_modeled_hbm_shares_tables_once():
             vmapped = B * one
             assert batched < vmapped
             shared = vmapped - batched
-            assert shared % (B - 1) == 0     # (B−1) shared re-streams saved
+            assert shared % (B - 1) == 0  # (B−1) shared re-streams saved
         assert batched_modeled_hbm_bytes(S, C, E, u_max, off_max, 1,
                                          be, bs, bc) == one
 
@@ -691,13 +691,13 @@ def test_batched_ragged_pad_instances_inert():
     ups = rng.integers(0, u_max, (B, E)).astype(np.int32)
     sig = rng.integers(1, 3000, (B, E)).astype(np.int32)
     alw = rng.integers(0, 2, (B, E)).astype(np.int32)
-    alw[3] = 0                               # a real all-masked instance
+    alw[3] = 0  # a real all-masked instance
     slim = rng.integers(0, s_cap + 1, B).astype(np.int32)
     x, info = solve_budgeted_dp_batched(ups, sig, tables, s_cap, slim,
                                         u_max=u_max, allowed=alw,
                                         interpret=True, block_b=2,
                                         block_c=None)
-    assert x.shape == (B, E)                 # pad instances dropped
+    assert x.shape == (B, E)  # pad instances dropped
     for b in range(B):
         xr, ir = solve_budgeted_dp(
             jnp.asarray(ups[b]), jnp.asarray(sig[b]), tables, s_cap,

@@ -82,7 +82,7 @@ def test_prefill_decode_consistency(built, arch):
         from repro.models import build_model as _bm
         model = _bm(cfg)
     key = jax.random.PRNGKey(2)
-    batch_full = make_batch(cfg, key, s=S)          # tokens (B, S+1)
+    batch_full = make_batch(cfg, key, s=S)  # tokens (B, S+1)
     tokens = batch_full["tokens"]
 
     # reference: prefill over all S+1 tokens

@@ -25,7 +25,7 @@ def cluster():
                 256, 32, 4, value_rate=0.5),
     ]
     rates = rate_matrix(jobs, slices,
-                        slice_speed={"pod-b": 0.55})   # chronic straggler
+                        slice_speed={"pod-b": 0.55})  # chronic straggler
     inst, edge_rate = build_instance(slices, jobs, rates, seed=0)
     return slices, jobs, inst
 
@@ -58,7 +58,7 @@ def test_straggler_avoidance(cluster):
     def speed_fn(t):
         s = np.ones(R, np.float32)
         if t > T // 3:
-            s[0] = 0.3            # pod-a brownout after t=T/3
+            s[0] = 0.3  # pod-a brownout after t=T/3
         return s
 
     out = ClusterSim(inst, T, speed_fn=speed_fn, seed=1).run("esdp")

@@ -6,7 +6,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-try:        # optional [test] extra — property tests skip cleanly without it
+try:  # optional [test] extra — property tests skip cleanly without it
     from hypothesis import given, settings, strategies as st
     HAS_HYPOTHESIS = True
 except ImportError:
@@ -172,7 +172,7 @@ def test_supervisor_restart_exact(tiny_setup, tmp_path):
 
     clean, _ = run(())
     failed, sup = run((17,))
-    assert sup.restarts == 1 and sup.lost_steps == 7   # 17 -> restored 10
+    assert sup.restarts == 1 and sup.lost_steps == 7  # 17 -> restored 10
     for a, b in zip(jax.tree.leaves(clean.params),
                     jax.tree.leaves(failed.params)):
         np.testing.assert_allclose(np.asarray(a, np.float32),
@@ -184,7 +184,7 @@ def test_straggler_tracker():
     st_ = StragglerTracker(alpha=0.5, k=2.0)
     assert not st_.observe(1.0)
     assert not st_.observe(1.1)
-    assert st_.observe(5.0)          # 5x slower than EMA
+    assert st_.observe(5.0)  # 5x slower than EMA
     assert st_.slow_steps == 1
 
 

@@ -1,0 +1,352 @@
+"""Deterministic stdlib-only formatter for the black-compatible subset.
+
+The CI format gate (`ruff format --check`) was advisory for a long time
+because the tree carried two systematic divergences from black style:
+column-aligned trailing comments and aligned-under-paren ("hanging
+indent") function signatures.  This tool machine-normalizes exactly
+those divergences, deterministically, using only the standard library —
+so the tree can be formatted (and the gate kept blocking) on machines
+where ruff itself is not installable.
+
+Two transforms, both semantics-preserving and verified per file by
+``ast.dump`` equality before anything is written:
+
+1. **Inline-comment spacing** — exactly two spaces between code and a
+   trailing ``#`` comment (black's rule).  Standalone comments are
+   untouched.
+
+2. **Def-signature shape** — every multi-line ``def``/``async def``
+   signature is rewritten into one of black's canonical forms, tried in
+   order:
+
+   * one line, when ``def name(p1, p2) -> ret:`` fits in 88 columns;
+   * the three-line "hug" form (all params on a single line indented
+     four spaces, closing paren back at def indent) when that fits;
+   * exploded one-param-per-line with a magic trailing comma otherwise.
+
+   A trailing comma already present at the top level of the parameter
+   list forces the exploded form (black's magic trailing comma).
+   Signatures containing comments are left alone and reported.
+
+``ruff format`` remains the canonical formatter: where it disagrees
+with this tool, run it and commit.  This tool exists so the invariant
+is checkable offline and in tier-1 tests.
+
+Usage::
+
+    python tools/format.py [--check] [--diff] PATH [PATH ...]
+
+``--check`` exits 1 listing files that would change (CI mode).
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import difflib
+import io
+import sys
+import tokenize
+from pathlib import Path
+
+LINE_LIMIT = 88
+
+# ---------------------------------------------------------------------------
+# small string-aware scanner helpers
+# ---------------------------------------------------------------------------
+
+_OPEN = {"(": ")", "[": "]", "{": "}"}
+_CLOSE = {")", "]", "}"}
+
+
+def _skip_string(text: str, i: int) -> int:
+    """Return the index just past the string literal starting at ``i``.
+
+    ``text[i]`` must be a quote character.  Handles triple quotes and
+    backslash escapes.
+    """
+    q = text[i]
+    if text[i : i + 3] == q * 3:
+        end = text.find(q * 3, i + 3)
+        return len(text) if end < 0 else end + 3
+    j = i + 1
+    while j < len(text):
+        if text[j] == "\\":
+            j += 2
+        elif text[j] == q:
+            return j + 1
+        else:
+            j += 1
+    return j
+
+
+def _split_top_level(params: str) -> list[str]:
+    """Split a parameter-list body on commas at bracket depth zero."""
+    parts, depth, start, i = [], 0, 0, 0
+    while i < len(params):
+        ch = params[i]
+        if ch in "'\"":
+            i = _skip_string(params, i)
+            continue
+        if ch in _OPEN:
+            depth += 1
+        elif ch in _CLOSE:
+            depth -= 1
+        elif ch == "," and depth == 0:
+            parts.append(params[start:i])
+            start = i + 1
+        i += 1
+    parts.append(params[start:])
+    return parts
+
+
+def _collapse_ws(text: str) -> str:
+    """Collapse whitespace runs to single spaces, except inside strings."""
+    out, i = [], 0
+    while i < len(text):
+        ch = text[i]
+        if ch in "'\"":
+            j = _skip_string(text, i)
+            out.append(text[i:j])
+            i = j
+        elif ch in " \t\n\r":
+            j = i
+            while j < len(text) and text[j] in " \t\n\r":
+                j += 1
+            out.append(" ")
+            i = j
+        else:
+            out.append(ch)
+            i += 1
+    return "".join(out).strip()
+
+
+def _ends_in_colon(line: str) -> bool:
+    """True when the code part of ``line`` (trailing comment stripped) ends ``:``."""
+    i = 0
+    while i < len(line):
+        ch = line[i]
+        if ch in "'\"":
+            i = _skip_string(line, i)
+        elif ch == "#":
+            line = line[:i]
+            break
+        else:
+            i += 1
+    return line.rstrip().endswith(":")
+
+
+# ---------------------------------------------------------------------------
+# transform 2: def-signature shape
+# ---------------------------------------------------------------------------
+
+
+def _sig_region(src: str, def_line: int) -> tuple[int, int, int, int] | None:
+    """Locate the signature starting on 1-based ``def_line``.
+
+    Returns ``(open_idx, close_idx, colon_idx, end_line)`` as absolute
+    character offsets of ``(``, its matching ``)``, the following ``:``,
+    and the 1-based line the colon sits on — or None when the region
+    cannot be resolved cleanly (e.g. a comment inside the signature).
+    """
+    line_starts = [0]
+    for ln in src.splitlines(keepends=True):
+        line_starts.append(line_starts[-1] + len(ln))
+    base = line_starts[def_line - 1]
+    open_idx = src.find("(", base)
+    if open_idx < 0:
+        return None
+    depth, i = 0, open_idx
+    while i < len(src):
+        ch = src[i]
+        if ch in "'\"":
+            i = _skip_string(src, i)
+            continue
+        if ch == "#":  # comment inside the signature: bail out
+            return None
+        if ch in _OPEN:
+            depth += 1
+        elif ch in _CLOSE:
+            depth -= 1
+            if depth == 0:
+                break
+        i += 1
+    else:
+        return None
+    close_idx = i
+    # scan forward to the def-colon (may cross lines for `-> ret:`)
+    j = close_idx + 1
+    depth = 0
+    while j < len(src):
+        ch = src[j]
+        if ch in "'\"":
+            j = _skip_string(src, j)
+            continue
+        if ch == "#":
+            return None
+        if ch in _OPEN:
+            depth += 1
+        elif ch in _CLOSE:
+            depth -= 1
+        elif ch == ":" and depth == 0:
+            break
+        j += 1
+    else:
+        return None
+    colon_idx = j
+    end_line = src.count("\n", 0, colon_idx) + 1
+    # inline body on the colon line is out of scope — leave the def alone
+    rest = src[colon_idx + 1 : line_starts[end_line] - 1 if end_line < len(line_starts) else len(src)]
+    if rest.strip():
+        return None
+    return open_idx, close_idx, colon_idx, end_line
+
+
+def _render_def(indent: str, head: str, params: list[str], tail: str) -> str | None:
+    """Render a def signature in black's canonical forms, narrowest first."""
+    force_explode = bool(params) and params[-1] == ""
+    clean = [p for p in params if p]
+    if not force_explode:
+        one = f"{indent}{head}({', '.join(clean)}){tail}"
+        if len(one) <= LINE_LIMIT:
+            return one
+        hug_body = f"{indent}    {', '.join(clean)}"
+        if len(hug_body) <= LINE_LIMIT:
+            return f"{indent}{head}(\n{hug_body}\n{indent}){tail}"
+    lines = [f"{indent}{head}("]
+    lines += [f"{indent}    {p}," for p in clean]
+    lines.append(f"{indent}){tail}")
+    return "\n".join(lines)
+
+
+def _format_defs(src: str) -> tuple[str, list[str]]:
+    """Rewrite multi-line def signatures into black's canonical forms."""
+    skipped: list[str] = []
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as exc:  # pragma: no cover - tree is expected to parse
+        return src, [f"syntax error: {exc}"]
+    edits: list[tuple[int, int, str]] = []  # (start_offset, end_offset, text)
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        region = _sig_region(src, node.lineno)
+        if region is None:
+            if not _ends_in_colon(src.splitlines()[node.lineno - 1]):
+                skipped.append(f"line {node.lineno}: def {node.name} (unresolvable signature)")
+            continue
+        open_idx, close_idx, colon_idx, end_line = region
+        if end_line == node.lineno:
+            continue  # already one line
+        line_start = src.rfind("\n", 0, open_idx) + 1
+        indent = src[line_start : line_start + (len(src[line_start:]) - len(src[line_start:].lstrip()))]
+        head = _collapse_ws(src[line_start + len(indent) : open_idx])
+        params = [_collapse_ws(p) for p in _split_top_level(src[open_idx + 1 : close_idx])]
+        if params == [""]:
+            params = []
+        tail = _collapse_ws(src[close_idx + 1 : colon_idx + 1])
+        tail = f" {tail}" if tail != ":" else tail
+        rendered = _render_def(indent, head, params, tail)
+        if rendered is None:
+            skipped.append(f"line {node.lineno}: def {node.name}")
+            continue
+        edits.append((line_start, colon_idx + 1, rendered))
+    for start, end, text in sorted(edits, reverse=True):
+        src = src[:start] + text + src[end:]
+    return src, skipped
+
+
+# ---------------------------------------------------------------------------
+# transform 1: inline-comment spacing
+# ---------------------------------------------------------------------------
+
+
+def _format_comments(src: str) -> str:
+    """Normalize spacing before trailing comments to exactly two spaces."""
+    lines = src.splitlines(keepends=True)
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(src).readline))
+    except tokenize.TokenError:  # pragma: no cover - tree is expected to parse
+        return src
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        row, col = tok.start
+        line = lines[row - 1]
+        code = line[:col]
+        if not code.strip():
+            continue  # standalone comment: indent untouched
+        fixed = code.rstrip() + "  " + line[col:]
+        lines[row - 1] = fixed
+    return "".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def format_source(src: str) -> tuple[str, list[str]]:
+    """Apply both transforms; the result must be AST-identical to the input."""
+    out, skipped = _format_defs(src)
+    out = _format_comments(out)
+    if ast.dump(ast.parse(out)) != ast.dump(ast.parse(src)):
+        raise ValueError("transform changed program semantics — refusing to write")
+    return out, skipped
+
+
+def _iter_files(paths: list[str]):
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            yield from sorted(path.rglob("*.py"))
+        elif path.suffix == ".py":
+            yield path
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="+", help="files or directories to format")
+    ap.add_argument("--check", action="store_true", help="exit 1 if any file would change")
+    ap.add_argument("--diff", action="store_true", help="print unified diffs instead of writing")
+    args = ap.parse_args(argv)
+
+    changed, errors = [], []
+    for path in _iter_files(args.paths):
+        src = path.read_text()
+        try:
+            out, skipped = format_source(src)
+        except (ValueError, SyntaxError) as exc:
+            errors.append(f"{path}: {exc}")
+            continue
+        for s in skipped:
+            print(f"note: {path}: skipped {s}", file=sys.stderr)
+        if out == src:
+            continue
+        changed.append(str(path))
+        if args.diff:
+            sys.stdout.writelines(
+                difflib.unified_diff(
+                    src.splitlines(keepends=True),
+                    out.splitlines(keepends=True),
+                    fromfile=str(path),
+                    tofile=str(path),
+                )
+            )
+        elif not args.check:
+            path.write_text(out)
+            print(f"reformatted {path}")
+    for err in errors:
+        print(f"error: {err}", file=sys.stderr)
+    if errors:
+        return 2
+    if args.check and changed:
+        print(f"{len(changed)} file(s) would be reformatted:")
+        for f in changed:
+            print(f"  {f}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
