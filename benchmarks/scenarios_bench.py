@@ -1,5 +1,6 @@
 """Beyond the paper: ESDP vs its strongest baseline under every registered
-fluctuation regime (DVFS, MMPP bursts, stragglers, brownouts, outages).
+fluctuation regime (DVFS, MMPP bursts, stragglers, brownouts, outages,
+server crash/repair).
 
 One declarative spec per scenario — the scenario registry makes "does ESDP
 still win under regime X?" a 5-line question (see docs/scenarios.md).
@@ -9,13 +10,20 @@ Run as a module for the timed benchmark (the nightly perf-trend artifact)::
     python -m benchmarks.scenarios_bench                 # full regimes
     python -m benchmarks.scenarios_bench --smoke
     python -m benchmarks.scenarios_bench --baseline results/BENCH_scenarios.json
+    python -m benchmarks.scenarios_bench --fault-smoke   # CI degradation leg
 
 Writes ``results/BENCH_scenarios.json``: per-scenario end-to-end sweep
 wall-clock (trace + compile recorded separately from the steady-state
-re-run) plus the ASW/regret summary.  ``--baseline`` applies the same
+re-run) plus the ASW/regret summary, the failure-aware mitigation legs
+(utility recovered by redundancy / opportunistic checkpointing vs naive on
+the crashy ``server_failures`` regime — docs/robustness.md), and the
+fault-injection bit-exactness record.  ``--baseline`` applies the same
 guard as ``dp_bench``: exits non-zero on a ``--max-regression``-fold
 slowdown, warn-not-fail when the host fingerprint (CPU model + jax
-version) differs from the committed file.
+version) differs from the committed file.  ``--fault-smoke`` runs ONLY
+the degradation-chain check (honouring ``$REPRO_DP_FAULT_RATE``) and
+exits non-zero unless the faulted run is bit-identical to the fault-free
+one with at least one fault actually injected — the CI leg.
 """
 from __future__ import annotations
 
@@ -34,6 +42,11 @@ from .dp_bench import host_fingerprint
 
 T = 800
 SEEDS = (21, 22)
+
+# the crashy regime the mitigation legs share: frequent crashes, a lemon
+# subset crashing 3x as often, and spare capacity so replicas fit
+FAILURE_REGIME = dict(p_crash=0.12, p_repair=0.6, lemon_frac=0.34,
+                      lemon_mult=3.0, arr_scale=0.6)
 
 
 def _spec(scenario: str) -> SweepSpec:
@@ -93,6 +106,87 @@ def bench(smoke: bool) -> dict:
             "host": host_fingerprint(), "smoke": smoke, "grid": records}
 
 
+def _failure_cluster():
+    """The tiny roofline-grounded cluster the failure legs run on."""
+    from repro.sched import JobType, Slice, build_instance, rate_matrix
+
+    slices = [Slice("pod-a", "v5e", 256, 32, 4),
+              Slice("pod-b", "v5e", 256, 32, 4),
+              Slice("pod-c", "v5p", 256, 32, 4)]
+    jobs = [JobType("train", "qwen2.5-32b", "train_4k", ("v5e", "v5p"),
+                    256, 32, 4, value_rate=1.0),
+            JobType("decode", "deepseek-v3-671b", "decode_32k", ("v5e",),
+                    256, 32, 4, value_rate=1.2)]
+    inst, _ = build_instance(slices, jobs, rate_matrix(jobs, slices), seed=0)
+    return inst
+
+
+def failure_bench(smoke: bool) -> list[dict]:
+    """Mitigation legs on the crashy regime: how much of the utility lost
+    to in-slot crashes does each failure-aware mode recover vs dispatching
+    naively?  (ClusterSim host loop — the failure runtime settles crashes
+    per slot, so these legs time the failure-aware path itself.)"""
+    from repro.experiments import get_scenario
+    from repro.sched import ClusterSim, FailureModel
+
+    T = 200 if smoke else 600
+    scn = get_scenario("server_failures", **FAILURE_REGIME)
+    inst = _failure_cluster()
+    legs = {
+        "naive": FailureModel(),
+        "redundant": FailureModel(redundancy=2),
+        "checkpoint": FailureModel(checkpoints=3, checkpoint_cost=0.003),
+        "detect": FailureModel(detect=True),
+    }
+    records = []
+    for leg, model in legs.items():
+        t0 = time.perf_counter()
+        out = ClusterSim(inst, T, scenario=scn, seed=4,
+                         failures=model).run("esdp")
+        led = out.failures
+        records.append({
+            "leg": leg, "T": T, "wall_s": time.perf_counter() - t0,
+            "asw": out.asw, "lost": led["total_lost"],
+            "salvaged": led["total_salvaged"],
+            "ckpt_cost": led["total_ckpt_cost"],
+            "restarts": led["restarts"],
+            "replicas": int(led["replicas"].sum()),
+        })
+        print(f"failures/{leg}: asw={out.asw:.1f} "
+              f"lost={led['total_lost']:.1f} "
+              f"salvaged={led['total_salvaged']:.1f} "
+              f"restarts={led['restarts']}", flush=True)
+    return records
+
+
+def fault_injection_check(rate: "float | None" = None) -> dict:
+    """The graceful-degradation acceptance bar: a full ESDP ClusterSim run
+    with solver faults injected (``rate``, else ``$REPRO_DP_FAULT_RATE``)
+    completes BIT-IDENTICAL to the fault-free run — every fallback link is
+    exact, so degradation costs speed, never answers."""
+    import numpy as np
+
+    from repro.core.solvers import FallbackSolver
+    from repro.sched import ClusterSim
+
+    inst = _failure_cluster()
+    T = 120
+    plain = ClusterSim(inst, T, seed=7).run("esdp")
+    fb = FallbackSolver(chain=("pallas_interpret", "reference"),
+                        fault_rate=rate)
+    out = ClusterSim(inst, T, seed=7, solver=fb).run("esdp")
+    identical = bool(np.array_equal(plain.sw, out.sw)
+                     and np.array_equal(plain.regret, out.regret))
+    rec = {"T": T, "rate": fb.fault_rate, "identical": identical,
+           "served_by": dict(fb.stats["served_by"]),
+           **{k: v for k, v in fb.stats.items() if isinstance(v, int)}}
+    print(f"fault-injection: rate={rec['rate']} "
+          f"faults={rec['faults_injected']} "
+          f"degraded={rec['degraded_calls']} identical={identical}",
+          flush=True)
+    return rec
+
+
 def check_baseline(result: dict, base: dict, max_regression: float) -> list[str]:
     """Warm (steady-state) per-scenario wall-clock vs the committed file;
     only (scenario, T, seeds)-matched rows compare."""
@@ -119,7 +213,24 @@ def main() -> None:
     ap.add_argument("--baseline", default=None,
                     help="committed BENCH_scenarios.json to guard against")
     ap.add_argument("--max-regression", type=float, default=2.0)
+    ap.add_argument("--fault-smoke", action="store_true",
+                    help="run ONLY the degradation-chain bit-exactness "
+                         "check (rate from $REPRO_DP_FAULT_RATE); non-zero "
+                         "exit on mismatch or zero injected faults")
     args = ap.parse_args()
+    if args.fault_smoke:
+        rec = fault_injection_check()
+        if rec["rate"] <= 0.0:
+            sys.exit("fault-smoke needs a positive rate — set "
+                     "REPRO_DP_FAULT_RATE (e.g. 0.05)")
+        if not rec["identical"]:
+            sys.exit("FAULT SMOKE FAILED: faulted run diverged from the "
+                     "fault-free run — a fallback link is not exact")
+        if rec["faults_injected"] == 0:
+            sys.exit("FAULT SMOKE FAILED: no faults injected at rate "
+                     f"{rec['rate']} over {rec['T']} solves — the hook "
+                     "is not firing")
+        return
     base = None
     if args.baseline:
         bpath = pathlib.Path(args.baseline)
@@ -129,6 +240,8 @@ def main() -> None:
                      f"--out {bpath}")
         base = json.loads(bpath.read_text())
     out = bench(args.smoke)
+    out["failures"] = failure_bench(args.smoke)
+    out["fault_injection"] = fault_injection_check(rate=0.05)
     path = pathlib.Path(args.out)
     path.parent.mkdir(parents=True, exist_ok=True)
     path.write_text(json.dumps(out, indent=2))

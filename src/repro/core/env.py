@@ -38,7 +38,7 @@ from .graph import Instance
 
 __all__ = [
     "Scenario", "default_scenario", "SimResult",
-    "simulate", "simulate_batch", "simulate_grid",
+    "simulate", "simulate_batch", "simulate_grid", "crash_events",
 ]
 
 # Salt folded into the simulation key to derive the scenario's private PRNG
@@ -102,6 +102,24 @@ def default_scenario() -> Scenario:
         description="iid clipped-Gaussian valuations at constant unit speed "
                     "(paper Sec. 5 baseline setting)",
     )
+
+
+def crash_events(alive):
+    """(T, R) bool: server r crashed DURING slot t.
+
+    The aliveness trace encodes crashes as up→down transitions: a server
+    that was alive when slot t dispatched but is dead at slot t+1 died
+    mid-slot, so work dispatched onto it in slot t is at risk (the
+    failure-aware runtime in ``sched.dispatcher`` uses exactly this
+    coupling — the ``server_failures`` scenario emits ``alive`` BEFORE
+    applying the slot's crash draws so the transition is observable).
+    The final slot has no successor to compare against and reports no
+    crashes.  Host-side numpy helper; pure in the trace.
+    """
+    alive = np.asarray(alive, dtype=bool)
+    out = np.zeros_like(alive)
+    out[:-1] = alive[:-1] & ~alive[1:]
+    return out
 
 
 _DEFAULT_SCENARIO = default_scenario()

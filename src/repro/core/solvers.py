@@ -50,6 +50,16 @@ Incremental layer: :class:`CachedSolver` wraps any backend with the
 quantized-statistics solve cache (``core.incremental.SolveCache``) —
 same call contract, ``accepts_batch`` passthrough, kernel launches
 skipped on concrete-input cache hits.  See ``docs/solvers.md``.
+
+Degradation layer: :class:`FallbackSolver` wraps the registry with a
+bounded retry chain (pallas → pallas_interpret → reference by default),
+catching backend launch failures and rejecting corrupted value planes
+(``kernels.budgeted_dp.ops.validate_value_row`` invariants) before
+falling through — bit-identical results whichever link serves, because
+backends are bit-exact interchangeable.  A deterministic fault-injection
+hook (``runtime.fault.planned_fault``, env-togglable via
+``$REPRO_DP_FAULT_RATE``) exercises the chain in CI without real
+hardware faults.  See ``docs/robustness.md``.
 """
 from __future__ import annotations
 
@@ -64,7 +74,7 @@ import jax.numpy as jnp
 from .dp import NEG, DPTables, solve_budgeted_dp
 
 __all__ = ["SOLVER_ENV_VAR", "SOLVER_NAMES", "Solver", "resolve_solver",
-           "get_solver", "CachedSolver"]
+           "get_solver", "CachedSolver", "FallbackSolver"]
 
 SOLVER_ENV_VAR = "REPRO_DP_SOLVER"
 SOLVER_NAMES = ("auto", "reference", "pallas", "pallas_interpret")
@@ -289,6 +299,194 @@ class CachedSolver:
         return x, {"s_star": stars, "value_row": rows}
 
 
+class FallbackSolver:
+    """Graceful degradation of the solve path: a bounded backend retry chain.
+
+    The production failure mode this guards is a kernel backend dying or
+    corrupting its output at dispatch time — a failed ``pallas_call``
+    launch, an OOM, a bad lowering after a toolchain bump, a clamped
+    scratch silently poisoning a plane.  Because the registry backends are
+    *bit-exact interchangeable* (``tests/test_solver_equiv.py``), any link
+    of the chain can serve any solve with identical results, so degrading
+    never changes ``x``/``s_star``/``value_row`` — it only costs speed.
+
+    Per concrete-input call the wrapper walks ``chain`` (default: the
+    primary backend, then ``pallas_interpret`` if the primary was compiled
+    pallas, then ``reference``).  An attempt degrades when
+
+      * the backend RAISES (launch failure — caught and recorded), or
+      * the returned value row violates the DP-invariant checks of
+        :func:`repro.kernels.budgeted_dp.ops.validate_value_row`
+        (NEG-source contract, ``VALUE_BOUND``, feasible-prefix and
+        monotone-in-budget checks — theorems of the recurrence, so a
+        violation always means corruption, never a legitimate input).
+
+    The LAST link is exempt from fault injection and its exceptions
+    propagate: a chain that cannot serve at all is a real outage, not a
+    degradation.  Every degradation is recorded as a structured event in
+    ``stats["events"]`` and counted in ``stats``; consumers
+    (``sched.dispatcher.ClusterSim``, the sweep engine) surface those via
+    ``solve_stats``.
+
+    Deterministic fault injection: with ``fault_rate > 0`` (explicit arg,
+    else ``$REPRO_DP_FAULT_RATE``), each non-final attempt consults
+    :func:`repro.runtime.fault.planned_fault` — a pure function of
+    ``(fault_seed, call_index, attempt)`` — and either raises a synthetic
+    :class:`repro.runtime.fault.InjectedFault` before launching or poisons
+    the returned value row so validation must catch it.  Injection is a
+    plan computed per call index, so a run is bit-reproducible and, since
+    fallbacks are exact, bit-identical to the fault-free run.
+
+    Host-side like :class:`CachedSolver`: calls with traced inputs bypass
+    the chain entirely and run the primary backend (counted in
+    ``stats["bypasses"]``) — under ``jit``/``vmap`` the wrapper is
+    invisible and adds zero launches (guarded by a jaxpr test).
+    ``accepts_batch`` follows the primary; batched (B, E) concrete inputs
+    walk the same chain with per-row plane validation.
+    """
+
+    def __init__(
+        self,
+        base: "Solver | str | None" = None,
+        chain: "tuple | None" = None,
+        fault_rate: "float | None" = None,
+        fault_seed: "int | None" = None,
+    ):
+        from ..runtime.fault import FAULT_SEED_ENV, fault_rate_from_env
+        if chain is not None:
+            links = [get_solver(s) for s in chain]
+            if not links:
+                raise ValueError("FallbackSolver chain must be non-empty")
+        else:
+            primary = get_solver(base)
+            links = [primary]
+            if primary.name == "pallas":
+                links.append(get_solver("pallas_interpret"))
+            if primary.name != "reference":
+                links.append(get_solver("reference"))
+        self.chain = tuple(links)
+        self.base = self.chain[0]
+        self.fault_rate = (fault_rate_from_env() if fault_rate is None
+                           else float(fault_rate))
+        self.fault_seed = (int(os.environ.get(FAULT_SEED_ENV, "0") or 0)
+                           if fault_seed is None else int(fault_seed))
+        self._jitted: dict = {}
+        self.stats: dict = {
+            "calls": 0, "bypasses": 0, "degraded_calls": 0,
+            "launch_failures": 0, "validation_failures": 0,
+            "faults_injected": 0, "served_by": {s.name: 0 for s in links},
+            "events": [],
+        }
+
+    _MAX_EVENTS = 256  # structured events kept; counters never truncate
+
+    @property
+    def name(self) -> str:
+        return "fallback:" + "->".join(s.name for s in self.chain)
+
+    @property
+    def interpret(self):
+        return self.base.interpret
+
+    @property
+    def accepts_batch(self) -> bool:
+        return self.base.accepts_batch
+
+    def _record(self, **event) -> None:
+        ev = self.stats["events"]
+        if len(ev) < self._MAX_EVENTS:
+            ev.append(event)
+
+    def _link_jit(self, link: Solver, tables, s_cap, u_max, batched: bool):
+        key = (link.name, id(tables), s_cap, u_max, batched)
+        fn = self._jitted.get(key)
+        if fn is None:
+            def solve(upsilon, sigma2, s_limit, allowed):
+                return link(upsilon, sigma2, tables, s_cap, s_limit,
+                            allowed=allowed, u_max=u_max)
+            fn = jax.jit(jax.vmap(solve) if batched else solve)
+            self._jitted[key] = fn
+        return fn
+
+    def __call__(
+        self,
+        upsilon,
+        sigma2,
+        tables: DPTables,
+        s_cap: int,
+        s_limit,
+        allowed=None,
+        u_max: int | None = None,
+    ):
+        if any(isinstance(a, jax.core.Tracer)
+               for a in (upsilon, sigma2, s_limit, allowed) if a is not None):
+            self.stats["bypasses"] += 1
+            return self.base(upsilon, sigma2, tables, s_cap, s_limit,
+                             allowed=allowed, u_max=u_max)
+
+        import numpy as np
+
+        from ..kernels.budgeted_dp.ops import validate_value_row
+        from ..runtime.fault import InjectedFault, planned_fault
+
+        call = self.stats["calls"]
+        self.stats["calls"] += 1
+        shape = np.shape(upsilon)
+        batched = len(shape) == 2
+        ups = jnp.asarray(upsilon)
+        alw = (np.ones(shape, bool) if allowed is None
+               else np.broadcast_to(np.asarray(allowed, bool), shape))
+        slim = (np.broadcast_to(np.asarray(s_limit), shape[:1]) if batched
+                else np.asarray(s_limit))
+        last = len(self.chain) - 1
+        for attempt, link in enumerate(self.chain):
+            fault = (None if attempt == last else planned_fault(
+                call, self.fault_rate, seed=self.fault_seed,
+                attempt=attempt))
+            try:
+                if fault == "launch":
+                    self.stats["faults_injected"] += 1
+                    raise InjectedFault(
+                        f"injected launch failure (call {call}, "
+                        f"attempt {attempt}, backend {link.name})")
+                fn = self._link_jit(link, tables, s_cap, u_max, batched)
+                x, info = fn(ups, jnp.asarray(sigma2),
+                             jnp.asarray(slim), jnp.asarray(alw))
+                row = np.asarray(info["value_row"])
+                if fault == "corrupt":
+                    # poison out of the f32-exact domain: validation MUST
+                    # reject this row, proving the checks are live
+                    self.stats["faults_injected"] += 1
+                    row = row.copy()
+                    row[..., 0] = 2 ** 24
+            except Exception as err:  # noqa: BLE001 — any launch failure degrades
+                if attempt == last:
+                    raise
+                self.stats["launch_failures"] += 1
+                self._record(call=call, attempt=attempt, backend=link.name,
+                             kind="launch",
+                             injected=isinstance(err, InjectedFault),
+                             error=f"{type(err).__name__}: {err}")
+                continue
+            reason = validate_value_row(row)
+            if reason is not None:
+                if attempt == last:
+                    raise RuntimeError(
+                        f"DP value plane failed validation on the final "
+                        f"chain link {link.name!r}: {reason}")
+                self.stats["validation_failures"] += 1
+                self._record(call=call, attempt=attempt, backend=link.name,
+                             kind="validate", injected=fault == "corrupt",
+                             error=reason)
+                continue
+            if attempt > 0:
+                self.stats["degraded_calls"] += 1
+            self.stats["served_by"][link.name] += 1
+            return (np.asarray(x),
+                    {"s_star": np.asarray(info["s_star"]), "value_row": row})
+        raise AssertionError("unreachable: final chain link never skips")
+
+
 _CACHE: dict[str, Solver] = {}
 
 
@@ -298,8 +496,13 @@ def get_solver(
     """Resolve ``name`` (see :func:`resolve_solver`) and return the Solver.
 
     Instances are cached per concrete backend, so repeated policy builds
-    share one identity (jit-static-friendly)."""
-    if isinstance(name, Solver):
+    share one identity (jit-static-friendly).  Solver-shaped wrapper
+    objects (:class:`CachedSolver`, :class:`FallbackSolver`, or anything
+    callable exposing ``name``/``accepts_batch``) pass through unchanged,
+    so every consumer that takes ``solver=`` accepts a wrapped chain."""
+    if isinstance(name, Solver) or (
+            callable(name) and hasattr(name, "accepts_batch")
+            and hasattr(name, "name")):
         return name
     concrete = resolve_solver(name, platform)
     solver = _CACHE.get(concrete)

@@ -257,6 +257,82 @@ def elastic_outage(
 
 
 # ---------------------------------------------------------------------------
+# server_failures — Markov crash/repair per server, optional rack correlation
+# ---------------------------------------------------------------------------
+
+def _failures_init(params, key, n_servers):
+    key, k_lemon = jax.random.split(key)
+    perm = jax.random.permutation(k_lemon, n_servers)
+    n_lemon = jnp.ceil(params["lemon_frac"] * n_servers).astype(jnp.int32)
+    # (down mask — all start up, lemon mask, private chain key)
+    return (jnp.zeros(n_servers, dtype=bool), perm < n_lemon, key)
+
+
+def _failures_step(params, state, t, n_servers):
+    down, lemon, key = state
+    key, k_rep, k_crash, k_rack = jax.random.split(key, 4)
+    # repairs land at the slot boundary: a repaired server serves slot t
+    repaired = down & (jax.random.uniform(k_rep, (n_servers,))
+                       < params["p_repair"])
+    down = down & ~repaired
+    alive = ~down
+    # crash draws are taken AFTER emitting aliveness: a server crashing in
+    # slot t still shows alive[t]=True (it accepted work) and goes down
+    # from t+1 until repaired — the up→down transition IS the crash event
+    # (core.env.crash_events), which is what lets the failure-aware
+    # dispatcher charge the lost in-slot work deterministically.
+    p = params["p_crash"] * jnp.where(lemon, params["lemon_mult"], 1.0)
+    crash = alive & (jax.random.uniform(k_crash, (n_servers,)) < p)
+    # correlated rack failures: servers partition into n_racks contiguous
+    # groups; one uniform draw per rack (read through the rack's first
+    # server, static-shape-safe) can take the whole group down at once
+    G = jnp.maximum(params["n_racks"].astype(jnp.int32), 1)
+    r_ids = jnp.arange(n_servers)
+    rack = (r_ids * G) // n_servers  # (R,) rack id, non-decreasing
+    first = (rack * n_servers + G - 1) // G  # first server of own rack
+    u_rack = jax.random.uniform(k_rack, (n_servers,))[first]
+    rack_crash = (params["n_racks"] > 0) & alive & (u_rack < params["p_rack"])
+    down = down | crash | rack_crash
+    return ((down, lemon, key), params["arr_scale"].astype(jnp.float32),
+            _ones_speed(n_servers), alive)
+
+
+@register_scenario("server_failures")
+def server_failures(
+    p_crash: float = 0.03,
+    p_repair: float = 0.4,
+    n_racks: int = 0,
+    p_rack: float = 0.0,
+    lemon_frac: float = 0.0,
+    lemon_mult: float = 1.0,
+    arr_scale: float = 1.0,
+) -> Scenario:
+    """Seeded Markov crash/repair per server: an alive server crashes with
+    p_crash per slot (losing that slot's in-flight work — see
+    ``docs/robustness.md``) and stays down until repaired with p_repair per
+    slot.  With ``n_racks > 0`` servers also partition into contiguous rack
+    groups and each rack fails as a unit with p_rack per slot (correlated
+    failure domains: shared switch / power feed).  ``lemon_frac``/
+    ``lemon_mult`` make a seeded ⌈frac·R⌉-subset of servers crash
+    lemon_mult× as often (persistent bad hosts — what detection-driven
+    eligibility in ``sched.dispatcher.FailureRuntime`` is for), and
+    ``arr_scale`` uniformly scales arrival intensity (redundant dispatch
+    needs spare capacity to place replicas)."""
+    return Scenario(
+        name="server_failures",
+        init=_failures_init,
+        step=_failures_step,
+        params={"p_crash": p_crash, "p_repair": p_repair,
+                "n_racks": n_racks, "p_rack": p_rack,
+                "lemon_frac": lemon_frac, "lemon_mult": lemon_mult,
+                "arr_scale": arr_scale},
+        fluctuates=False,  # live servers run at unit speed
+        description="Markov crash/repair per server, optional correlated "
+                    "rack-group failures and crash-prone lemon hosts",
+    )
+
+
+# ---------------------------------------------------------------------------
 # host-side unrolling (shared interface with sched.dispatcher.ClusterSim)
 # ---------------------------------------------------------------------------
 

@@ -100,9 +100,11 @@ class SweepSpec:
     scenario_params: Mapping = dataclasses.field(default_factory=dict)
     instance_kwargs: Mapping = dataclasses.field(default_factory=dict)
     grid: tuple[GridPoint, ...] = (GridPoint("default"),)
-    # Algorithm-2 backend for solver-aware policies (core.solvers name);
+    # Algorithm-2 backend for solver-aware policies: a core.solvers name,
+    # or a preassembled wrapper object (e.g. a FallbackSolver degradation
+    # chain — its counters then surface as fallback_* record columns);
     # None keeps each factory's own default (env var / auto resolution).
-    solver: str | None = None
+    solver: "str | object | None" = None
     # incremental re-solve mode for cache-aware policies (None | "memo" |
     # "warm", see core.esdp) — bit-identical to None; per-sweep hit/skip
     # rates surface as solve_stats columns in the records.
@@ -136,9 +138,11 @@ class SweepRow:
     result: SimResult  # stacked (S, T) traces
     instance: Instance
     tables: DPTables
-    solver: str | None = None  # Algorithm-2 backend requested by the spec
+    # Algorithm-2 backend requested by the spec (name or wrapper object)
+    solver: "str | object | None" = None
     # incremental-solve counters (hit/skip rates etc.) aggregated over the
-    # seed batch by Policy.finalize; None for cache-less policies
+    # seed batch by Policy.finalize, plus fallback_* degradation counters
+    # when the spec's solver is a FallbackSolver chain; None otherwise
     solve_stats: Mapping | None = None
 
     def to_record(self) -> dict:
@@ -146,7 +150,7 @@ class SweepRow:
         rec = {
             "spec": self.spec, "point": self.point, "policy": self.policy,
             "scenario": self.scenario, "T": self.T,
-            "solver": self.solver or "default",
+            "solver": getattr(self.solver, "name", self.solver) or "default",
             "seeds": ";".join(str(s) for s in self.seeds),
             "asw_mean": self.asw_mean, "asw_ci95": self.asw_ci95,
             "regret_mean": self.regret_mean, "regret_ci95": self.regret_ci95,
@@ -232,12 +236,22 @@ def run_spec(spec: SweepSpec) -> list[SweepRow]:
             policy = factory(instance, T, tables, **kw)
             res = simulate_batch(instance, policy, T, spec.seeds,
                                  tables=tables, scenario=scenario)
+            stats = _batch_solve_stats(policy, res)
+            fb = getattr(spec.solver, "stats", None)
+            if isinstance(fb, dict):
+                # FallbackSolver-style degradation counters: surface the
+                # numeric ones as record columns (jitted sweeps bypass the
+                # host chain, so expect bypasses; host-loop consumers see
+                # the full launch/validate/degraded accounting)
+                stats = {**(stats or {}),
+                         **{f"fallback_{k}": v for k, v in fb.items()
+                            if isinstance(v, (int, float))}}
             rows.append(SweepRow(
                 spec=spec.name, point=point.label, policy=pname,
                 scenario=scenario.name, T=T, seeds=tuple(spec.seeds),
                 result=res, instance=instance, tables=tables,
                 solver=spec.solver,
-                solve_stats=_batch_solve_stats(policy, res),
+                solve_stats=stats,
                 **summarize(res)))
     return rows
 

@@ -59,10 +59,67 @@ from .kernel import (NEG, choose_tiling, dp_forward_pallas,
                      dp_forward_pallas_batched, resolve_interpret)
 
 __all__ = ["VALUE_BOUND", "prepare_tables", "max_achievable_value",
-           "solve_budgeted_dp_pallas", "solve_budgeted_dp_batched",
-           "WarmPallasSolver", "resolve_interpret"]
+           "validate_value_row", "solve_budgeted_dp_pallas",
+           "solve_budgeted_dp_batched", "WarmPallasSolver",
+           "resolve_interpret"]
 
 VALUE_BOUND = 2 ** 24  # f32-exact integer domain (kernel contract)
+
+
+def validate_value_row(value_row) -> "str | None":
+    """Cheap host-side invariant check of a returned DP value row.
+
+    The checked properties are THEOREMS of the P4/P5 recurrence — true for
+    any correct backend and tiling, so a violation means the plane is
+    corrupted (bad launch, clamped shift, bit flip), never a legitimate
+    input.  On the contract row (int32, ``core.dp.NEG`` at
+    budget-infeasible entries; see ``core.solvers``):
+
+      * source: ``value_row[0] >= 0`` — the empty selection achieves s=0;
+      * NEG contract: every entry is ``>= 0`` or exactly the sentinel;
+      * VALUE_BOUND: feasible values stay ``< 2**24`` (the f32-exact
+        domain the kernel is allowed to produce);
+      * prefix feasibility: feasible s form a prefix — any x with
+        ``Υ̂ᵀx >= s`` also witnesses every ``s' < s``;
+      * monotone: values are non-increasing in s over the feasible prefix
+        (raising the budget floor only shrinks the feasible set).
+
+    Accepts an (S,) row or a batched (B, S) stack; returns ``None`` when
+    every invariant holds, else a short reason string (first violation).
+    """
+    row = np.asarray(value_row)
+    if row.ndim == 2:
+        for b in range(row.shape[0]):
+            reason = validate_value_row(row[b])
+            if reason is not None:
+                return f"row {b}: {reason}"
+        return None
+    neg = int(core_dp.NEG)
+    feas = row != neg
+    if not feas[0] or row[0] < 0:
+        return f"source: value_row[0] = {row[0]} (must be >= 0)"
+    bad = feas & (row < 0)
+    if bad.any():
+        s = int(np.flatnonzero(bad)[0])
+        return (f"neg-contract: value_row[{s}] = {row[s]} is negative but "
+                f"not the NEG sentinel ({neg})")
+    over = feas & (row >= VALUE_BOUND)
+    if over.any():
+        s = int(np.flatnonzero(over)[0])
+        return (f"value-bound: value_row[{s}] = {row[s]} >= 2^24 "
+                "(outside the f32-exact domain)")
+    n_feas = int(feas.sum())
+    if not feas[:n_feas].all():
+        s = int(np.flatnonzero(~feas)[0])
+        return (f"feasible-prefix: value_row[{s}] is infeasible but a "
+                "larger budget is feasible")
+    pre = row[:n_feas]
+    rising = np.flatnonzero(np.diff(pre.astype(np.int64)) > 0)
+    if rising.size:
+        s = int(rising[0])
+        return (f"monotone: value_row[{s + 1}] = {pre[s + 1]} > "
+                f"value_row[{s}] = {pre[s]} (must be non-increasing in s)")
+    return None
 
 
 @functools.lru_cache(maxsize=32)

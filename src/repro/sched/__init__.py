@@ -1,8 +1,8 @@
 """Cluster-level integration: ESDP as the gang dispatcher for multi-pod
 training/serving jobs (DESIGN.md §2)."""
 from .cluster import JobType, Slice, build_instance
-from .dispatcher import ClusterSim, SimOutput
+from .dispatcher import ClusterSim, FailureModel, FailureRuntime, SimOutput
 from .ratemodel import rate_matrix, roofline_rate
 
 __all__ = ["JobType", "Slice", "build_instance", "ClusterSim", "SimOutput",
-           "rate_matrix", "roofline_rate"]
+           "FailureModel", "FailureRuntime", "rate_matrix", "roofline_rate"]

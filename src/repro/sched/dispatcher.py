@@ -1,19 +1,34 @@
 """ESDP-backed gang dispatcher over the cluster, with time-varying service
-rates (stragglers) and elastic events (slice loss/join).
+rates (stragglers), elastic events (slice loss/join), and server failures
+(crash/repair with lost-work accounting).
 
 The generative machinery — degradation schedules (multi-tenant noise,
 chronic stragglers, transient brownouts: the paper's "fluctuated processing
-speeds") and aliveness schedules (elastic scale-down/up) — lives in the
-shared ``Scenario`` protocol of ``core.env`` with named regimes registered
-in ``repro.experiments.scenarios``.  ``ClusterSim`` accepts either a
-``scenario=`` (unrolled host-side through the SAME keying the jitted
-environment uses) or raw ``speed_fn``/``alive_fn`` callbacks for ad-hoc
-schedules.  Dispatch-share accounting lets tests assert the bandit actually
-routes AROUND a degraded slice (straggler mitigation at the cluster level —
-in-job mitigation lives in runtime/fault.py).
+speeds") and aliveness schedules (elastic scale-down/up, Markov
+crash/repair) — lives in the shared ``Scenario`` protocol of ``core.env``
+with named regimes registered in ``repro.experiments.scenarios``.
+``ClusterSim`` accepts either a ``scenario=`` (unrolled host-side through
+the SAME keying the jitted environment uses) or raw
+``speed_fn``/``alive_fn`` callbacks for ad-hoc schedules.  Dispatch-share
+accounting lets tests assert the bandit actually routes AROUND a degraded
+slice (straggler mitigation at the cluster level — in-job mitigation lives
+in runtime/fault.py).
+
+Failure-aware mode (``failures=FailureModel(...)``): a job dispatched onto
+a server that crashes in-slot loses its accumulated service — unless it
+was dispatched redundantly (r-way, consuming r× capacity) or salvaged by
+opportunistic checkpointing with an explicit per-checkpoint cost (both
+knobs per the speedup-function analysis of arXiv:1707.01655).  The crash
+process is ``runtime.fault.FailureInjector`` (counter-based, replayable)
+coupled with the aliveness trace's up→down transitions
+(``core.env.crash_events`` semantics); detection-driven eligibility uses
+``runtime.fault.CrashRateTracker`` — the StragglerTracker pattern applied
+to crash events.  Lost/salvaged/restart accounting surfaces in
+``SimOutput.failures``.  See ``docs/robustness.md``.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 from typing import Callable, Optional
 
@@ -27,8 +42,9 @@ from ..core.dp import oracle_knapsack
 from ..core.env import Scenario
 from ..core.graph import Instance
 from ..core.solvers import Solver, get_solver
+from ..runtime.fault import CrashRateTracker, FailureInjector
 
-__all__ = ["ClusterSim", "SimOutput"]
+__all__ = ["ClusterSim", "SimOutput", "FailureModel", "FailureRuntime"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,13 +53,242 @@ class SimOutput:
     regret: np.ndarray  # (T,)
     dispatch_share: np.ndarray  # (T, R) fraction of dispatches per slice
     asw: float
-    # incremental-solve counters (cache hit rate / warm skip rate) when the
-    # sim ran with incremental= set; None otherwise
+    # incremental-solve counters (cache hit rate / warm skip rate) and/or
+    # fallback-chain degradation events when the sim ran with incremental=
+    # or a wrapped solver; None otherwise
     solve_stats: "dict | None" = None
+    # lost/salvaged/restart ledger when the sim ran failure-aware
+    # (failures=FailureModel(...)); None otherwise.  Per-slot arrays
+    # dispatched/completed/lost/salvaged/ckpt_cost (value units, satisfying
+    # dispatched = completed + lost + salvaged exactly), crash/replica
+    # counts, and scalar totals.
+    failures: "dict | None" = None
 
     @property
     def cum_regret(self):
         return np.cumsum(self.regret)
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureModel:
+    """Knobs of the failure-aware runtime (see ``docs/robustness.md``).
+
+    Crash channels (all counter-based off the sim seed, so runs replay):
+      * the aliveness schedule's up→down transitions — a server alive at
+        dispatch time but dead next slot died mid-slot (the
+        ``server_failures`` scenario emits exactly this coupling);
+      * ``p_crash``: extra iid in-slot crashes per (server, slot) — the
+        server loses the slot's work but stays in the schedule (crashes
+        and recovers within the slot);
+      * ``n_racks``/``p_rack``: correlated in-slot crashes — servers
+        partition into ``n_racks`` contiguous groups and each group fails
+        as a unit with ``p_rack`` per slot.
+
+    Mitigations (arXiv:1707.01655's redundancy-vs-checkpointing axis):
+      * ``redundancy`` — r-way dispatch: each job unit greedily places up
+        to r−1 replicas on same-port edges with distinct servers within
+        residual capacity (replicas consume capacity, produce no utility,
+        and save the job if any copy's server survives);
+      * ``checkpoints``/``checkpoint_cost`` — opportunistic checkpointing:
+        n checkpoints per slot at fractions i/(n+1), each costing
+        ``checkpoint_cost`` utility when written; a crash at in-slot
+        fraction U salvages ⌊U·(n+1)⌋/(n+1) of the job's value;
+      * ``detect`` — CrashRateTracker-driven eligibility: servers whose
+        crash-rate EMA is elevated are masked out of dispatch for a
+        probation window (~4 slots at the tracker defaults).
+    """
+    p_crash: float = 0.0
+    n_racks: int = 0
+    p_rack: float = 0.0
+    redundancy: int = 1
+    checkpoints: int = 0
+    checkpoint_cost: float = 0.0
+    detect: bool = False
+
+    def __post_init__(self):
+        if self.redundancy < 1:
+            raise ValueError("redundancy is the total copy count (>= 1)")
+        if self.checkpoints < 0 or self.checkpoint_cost < 0:
+            raise ValueError("checkpoints/checkpoint_cost must be >= 0")
+
+
+class FailureRuntime:
+    """Host-side crash/repair bookkeeping for one ``ClusterSim`` run.
+
+    Owns the in-slot crash process (a counter-based
+    :class:`repro.runtime.fault.FailureInjector` — pure in (seed, slot,
+    channel), so reruns and tests replay the identical failure stream),
+    replica placement, salvage/cost settlement, detection state, and the
+    per-slot ledger.  Built fresh inside every ``run()`` call: the runtime
+    is mutable, the sim object stays reusable.
+    """
+
+    # injector draw channels (salt residues mod 3 keep them independent)
+    _CRASH, _RACK, _FRAC = 0, 1, 2
+
+    def __init__(
+        self,
+        model: FailureModel,
+        instance: Instance,
+        T: int,
+        alive_fn: Callable[[int], np.ndarray],
+        seed: int,
+    ):
+        self.model = model
+        self.inst = instance
+        self.T = T
+        self.alive_fn = alive_fn
+        self.inj = FailureInjector(p_fail=model.p_crash, seed=seed)
+        R = instance.n_servers
+        self.trackers = [CrashRateTracker() for _ in range(R)]
+        self.suspicious = np.zeros(R, bool)
+        self.restarts = 0
+        self.ledger = {k: np.zeros(T, np.float64) for k in
+                       ("dispatched", "completed", "lost", "salvaged",
+                        "ckpt_cost")}
+        self.crashes = np.zeros(T, np.int32)
+        self.replicas = np.zeros(T, np.int32)
+
+    def eligibility(self, allowed: np.ndarray, server: np.ndarray) -> np.ndarray:
+        """Mask suspicious servers' edges out of dispatch (detection)."""
+        if not self.model.detect:
+            return allowed
+        return allowed & ~self.suspicious[server]
+
+    def crashed_servers(self, t0: int, alive_now: np.ndarray) -> np.ndarray:
+        """(R,) bool: which servers crash DURING slot t0 (all channels)."""
+        m = self.model
+        R = self.inst.n_servers
+        crashed = np.zeros(R, bool)
+        if t0 + 1 < self.T:  # schedule transition: up now, down next slot
+            nxt = np.asarray(self.alive_fn(t0 + 1), bool)
+            crashed |= alive_now & ~nxt
+        if m.p_crash > 0.0:
+            u = np.array([self.inj.draw(t0, r * 3 + self._CRASH)
+                          for r in range(R)])
+            crashed |= alive_now & (u < m.p_crash)
+        if m.n_racks > 0 and m.p_rack > 0.0:
+            rack_of = (np.arange(R) * m.n_racks) // R
+            u = np.array([self.inj.draw(t0, g * 3 + self._RACK)
+                          for g in range(m.n_racks)])
+            crashed |= alive_now & (u < m.p_rack)[rack_of]
+        return crashed
+
+    def place_replicas(self, t0: int, x: np.ndarray, eligible: np.ndarray):
+        """Greedy r-way replica placement within residual capacity.
+
+        For each dispatched job unit (edge e, unit i), walk the other
+        eligible same-port edges in index order and claim up to
+        ``redundancy − 1`` replicas on DISTINCT servers, each consuming
+        its edge's full capacity column from the residual c − A·x.
+        Returns ``{(e, i): [replica server ids]}``; placement is
+        best-effort — a saturated cluster simply gets fewer replicas.
+        """
+        m, inst = self.model, self.inst
+        reps: dict = {}
+        if m.redundancy <= 1 or not x.any():
+            return reps
+        A = np.asarray(inst.A)
+        residual = np.asarray(inst.c) - A @ x
+        port, server = inst.port_of_edge, inst.edges[:, 1]
+        placed_total = 0
+        for e in np.flatnonzero(x):
+            cands = np.flatnonzero((port == port[e]) & (server != server[e])
+                                   & eligible)
+            for i in range(int(x[e])):
+                placed: list[int] = []
+                used = {int(server[e])}
+                for e2 in cands:
+                    if len(placed) >= m.redundancy - 1:
+                        break
+                    if int(server[e2]) in used:
+                        continue
+                    if np.all(A[:, e2] <= residual):
+                        residual = residual - A[:, e2]
+                        placed.append(int(server[e2]))
+                        used.add(int(server[e2]))
+                if placed:
+                    reps[(int(e), i)] = placed
+                    placed_total += len(placed)
+        self.replicas[t0] = placed_total
+        return reps
+
+    def settle(self, t0, x, z, crashed, reps):
+        """Charge the slot's crashes; return (sw_t, per-edge bandit signal).
+
+        Per job unit of value z: survived (own server or any replica's
+        server up) → completed; crashed with checkpointing → the fraction
+        checkpointed before the crash instant is salvaged, the rest lost;
+        crashed bare → lost.  ``completed + lost + salvaged = dispatched``
+        holds exactly (checkpoint costs are charged separately, including
+        for completed jobs — opportunistic checkpoints are written whether
+        or not the slot ends in a crash).  Social welfare for the slot is
+        completed + salvaged − checkpoint costs; the bandit signal is the
+        per-edge realized utility clipped at 0 (the learned v̂ then absorbs
+        crash risk and checkpoint overhead, steering dispatch away from
+        crashy servers).
+        """
+        m, inst = self.model, self.inst
+        server = inst.edges[:, 1]
+        nck = m.checkpoints
+        led = self.ledger
+        realized = np.zeros(x.shape[0], np.float64)
+        for e in np.flatnonzero(x):
+            ze = float(z[e])
+            sv = int(server[e])
+            # the server dies ONCE, at one in-slot instant: every unit on
+            # it sees the same crash fraction U (counter-based, per slot)
+            U = self.inj.draw(t0, sv * 3 + self._FRAC)
+            for i in range(int(x[e])):
+                led["dispatched"][t0] += ze
+                survived = (not crashed[sv]) or any(
+                    not crashed[r] for r in reps.get((int(e), i), ()))
+                if survived:
+                    led["completed"][t0] += ze
+                    cost = nck * m.checkpoint_cost
+                    gain = ze - cost
+                else:
+                    self.restarts += 1
+                    if nck > 0:
+                        written = int(U * (nck + 1))
+                        salv = written / (nck + 1) * ze
+                        cost = written * m.checkpoint_cost
+                        led["salvaged"][t0] += salv
+                        led["lost"][t0] += ze - salv
+                        gain = salv - cost
+                    else:
+                        cost = 0.0
+                        led["lost"][t0] += ze
+                        gain = 0.0
+                led["ckpt_cost"][t0] += cost
+                realized[e] += max(gain, 0.0)
+        sw_t = (led["completed"][t0] + led["salvaged"][t0]
+                - led["ckpt_cost"][t0])
+        return sw_t, realized
+
+    def observe(self, t0: int, crashed: np.ndarray) -> None:
+        """Feed the slot's crash indicators to the per-server trackers."""
+        self.crashes[t0] = int(crashed.sum())
+        for r, tr in enumerate(self.trackers):
+            tr.observe(bool(crashed[r]))
+        if self.model.detect:
+            self.suspicious = np.array([tr.suspicious
+                                        for tr in self.trackers])
+
+    def summary(self) -> dict:
+        led = {k: v.astype(np.float32) for k, v in self.ledger.items()}
+        return dict(
+            led,
+            crashes=self.crashes.copy(),
+            replicas=self.replicas.copy(),
+            restarts=self.restarts,
+            total_dispatched=float(self.ledger["dispatched"].sum()),
+            total_completed=float(self.ledger["completed"].sum()),
+            total_lost=float(self.ledger["lost"].sum()),
+            total_salvaged=float(self.ledger["salvaged"].sum()),
+            total_ckpt_cost=float(self.ledger["ckpt_cost"].sum()),
+            model=dataclasses.asdict(self.model),
+        )
 
 
 class ClusterSim:
@@ -62,6 +307,8 @@ class ClusterSim:
         incremental: "str | None" = None,
         solve_cache=None,
         warm_checkpoint_every: int = 8,
+        failures: "FailureModel | None" = None,
+        fallback: bool = False,
     ):
         """``incremental`` turns on cross-slot re-solve reuse for the ESDP
         policy (bit-identical in the default exact modes):
@@ -77,6 +324,14 @@ class ClusterSim:
             the edges whose statistics changed since the previous slot,
             checkpointing every ``warm_checkpoint_every`` fold steps.
             Requires a Pallas backend and the single-seed ``run()``.
+
+        ``failures=FailureModel(...)`` turns on the failure-aware runtime
+        (crash settlement, redundancy, checkpointing, detection — see
+        :class:`FailureModel`); single-seed ``run()`` only.
+        ``fallback=True`` wraps the backend in a
+        ``core.solvers.FallbackSolver`` degradation chain (host-side
+        per-slot solves, exact results whichever link serves); mutually
+        exclusive with ``incremental`` — wrap explicitly to compose.
         """
         self.inst = instance
         self.T = T
@@ -107,6 +362,15 @@ class ClusterSim:
         self.m = instance.m
         self.s_cap = stats_mod.s_cap_for_horizon(T, self.m)
         self.u_max = stats_mod.u_max_for_horizon(T, self.m)
+        self.failures = failures
+        if fallback:
+            if incremental is not None:
+                raise ValueError(
+                    "fallback=True and incremental= both wrap the backend "
+                    "host-side; compose explicitly (pass a preassembled "
+                    "wrapper via solver=) instead of stacking them here")
+            from ..core.solvers import FallbackSolver
+            self.solver = FallbackSolver(self.solver)
         if incremental == "cache":
             from ..core.solvers import CachedSolver
             self.solver = CachedSolver(self.solver, cache=solve_cache)
@@ -128,6 +392,11 @@ class ClusterSim:
             return self.solver.stats.as_dict()
         if self.incremental == "warm":
             return dict(self._warm.stats, edge_skip_rate=self._warm.skip_rate)
+        stats = getattr(self.solver, "stats", None)
+        if isinstance(stats, dict):
+            # FallbackSolver-style structured counters: deep-copy so later
+            # solves never mutate an already-returned record
+            return copy.deepcopy(stats)
         return None
 
     # ------------------------------------------------------------------
@@ -176,7 +445,7 @@ class ClusterSim:
         regret = np.zeros(self.T, np.float32)
         share = np.zeros((self.T, R), np.float32)
 
-        if self.incremental is None:
+        if self.incremental is None and isinstance(self.solver, Solver):
             jit_dp = jax.jit(
                 lambda u, s, lim, al: self.solver(
                     u, s, tables, self.s_cap, lim, allowed=al,
@@ -185,10 +454,10 @@ class ClusterSim:
             def solve_x(u, s, lim, al):
                 return np.asarray(jit_dp(u, s, lim, jnp.asarray(al)))
         else:
-            # host-side incremental paths need concrete inputs — the
-            # CachedSolver/WarmPallasSolver jit their own launch internals
-            # and skip them entirely on hits / unchanged fold prefixes
-            inc = self.solver if self.incremental == "cache" else self._warm
+            # host-side wrapper paths need concrete inputs — the
+            # CachedSolver/WarmPallasSolver/FallbackSolver jit their own
+            # launch internals and skip/degrade them per call
+            inc = self._warm if self.incremental == "warm" else self.solver
 
             def solve_x(u, s, lim, al):
                 return np.asarray(inc(u, s, tables, self.s_cap, int(lim),
@@ -200,11 +469,18 @@ class ClusterSim:
             lambda sc, el: greedy_pack(sc, el, jnp.asarray(inst.A),
                                        jnp.asarray(inst.c)))
 
+        fr = (FailureRuntime(self.failures, inst, self.T, self.alive_fn,
+                             self.seed)
+              if self.failures is not None else None)
+
         for t0 in range(self.T):
             t = t0 + 1  # 1-based for the bandit schedules
-            alive = self.alive_fn(t0)[server]  # schedules are 0-based
+            alive_srv = np.asarray(self.alive_fn(t0), bool)  # 0-based
+            alive = alive_srv[server]
             arrived = arrivals[t0][port]
             allowed = arrived & alive
+            if fr is not None:
+                allowed = fr.eligibility(allowed, server)
             vhat = np.where(n > 0, sumz / np.maximum(n, 1), 0.0).astype(
                 np.float32)
 
@@ -226,14 +502,21 @@ class ClusterSim:
 
             x = x * allowed
             z = self._z(t0, noise[t0])
-            sw[t0] = float((x * z).sum())
+            if fr is None:
+                sw[t0] = float((x * z).sum())
+                bandit_z = x * z
+            else:
+                crashed = fr.crashed_servers(t0, alive_srv)
+                reps = fr.place_replicas(t0, x, allowed)
+                sw[t0], bandit_z = fr.settle(t0, x, z, crashed, reps)
+                fr.observe(t0, crashed)
             v_true = self._v_true(t0)
             x_star = np.asarray(jit_oracle(jnp.asarray(v_true),
                                            jnp.asarray(allowed)))
             regret[t0] = float((v_true * x_star).sum() - (v_true * x).sum())
 
             n += x
-            sumz += x * z
+            sumz += bandit_z
             served = np.zeros(inst.n_ports, bool)
             np.maximum.at(served, port, x > 0)
             waiting = np.where(served, 0, waiting + arrivals[t0])
@@ -243,7 +526,8 @@ class ClusterSim:
         return SimOutput(sw=sw, regret=regret, dispatch_share=share,
                          asw=float(sw.sum()),
                          solve_stats=(self._solve_stats()
-                                      if policy == "esdp" else None))
+                                      if policy == "esdp" else None),
+                         failures=fr.summary() if fr is not None else None)
 
     # ------------------------------------------------------------------
     def run_batch(
@@ -269,6 +553,11 @@ class ClusterSim:
                 'incremental="warm" carries one value-plane chain and so '
                 "runs single-seed only (run()); use incremental=\"cache\" "
                 "for fleet batches — its keys are per instance row")
+        if self.failures is not None:
+            raise NotImplementedError(
+                "the failure-aware runtime settles crashes per seed "
+                "host-side and so runs single-seed only (run()); loop "
+                "run() over seeds for a failure-aware fleet")
         inst, tables = self.inst, self.tables
         E, R = inst.n_edges, inst.n_servers
         port = inst.port_of_edge
@@ -293,7 +582,7 @@ class ClusterSim:
             lambda v, k, t: stats_mod.scale_statistics(
                 v, k, t, self.m, g_fn=self.g_fn),
             in_axes=(0, 0, None)))
-        if self.incremental is None:
+        if self.incremental is None and isinstance(self.solver, Solver):
             jit_dp = jax.jit(jax.vmap(
                 lambda u, s, lim, al: self.solver(
                     u, s, tables, self.s_cap, lim, allowed=al,
@@ -302,8 +591,10 @@ class ClusterSim:
             def solve_x(u, s, lim, al):
                 return np.asarray(jit_dp(u, s, lim, jnp.asarray(al)))
         else:
-            # CachedSolver's concrete batched path: per-row keys, one
-            # batched launch on any miss, no launch at all on a full hit
+            # host-side wrappers' concrete batched paths: CachedSolver
+            # keys per row (one batched launch on any miss, none on a
+            # full hit); FallbackSolver walks its chain once per slot
+            # with per-row plane validation
             def solve_x(u, s, lim, al):
                 return np.asarray(self.solver(
                     np.asarray(u), np.asarray(s), tables, self.s_cap,
@@ -359,7 +650,16 @@ class ClusterSim:
                 np.add.at(share[b, t0], server, x[b] / tot[b])
 
         stats = self._solve_stats() if policy == "esdp" else None
+        if stats is not None:
+            # the counters aggregate the WHOLE fleet's solves (per-slot
+            # batched launches are shared across seeds) — label them so
+            # they cannot masquerade as per-seed numbers, and hand every
+            # output its OWN copy (a shared dict object would alias
+            # mutation across seeds)
+            stats["scope"] = "fleet"
         return [SimOutput(sw=sw[b], regret=regret[b],
                           dispatch_share=share[b],
                           asw=float(sw[b].sum()),
-                          solve_stats=stats) for b in range(B)]
+                          solve_stats=(copy.deepcopy(stats)
+                                       if stats is not None else None))
+                for b in range(B)]

@@ -18,7 +18,8 @@ from repro.data import SyntheticLM, make_batch_iterator
 from repro.models import build_model
 from repro.optim import AdamW, linear_warmup_cosine, topk_compress_with_feedback
 from repro.runtime import (greedy_generate, init_train_state, make_train_step)
-from repro.runtime.fault import FailureInjector, StragglerTracker, TrainSupervisor
+from repro.runtime.fault import (CrashRateTracker, FailureInjector,
+                                 StragglerTracker, TrainSupervisor)
 
 
 # ---------------------------------------------------------------------------
@@ -186,6 +187,89 @@ def test_straggler_tracker():
     assert not st_.observe(1.1)
     assert st_.observe(5.0)  # 5x slower than EMA
     assert st_.slow_steps == 1
+
+
+def test_injector_replay_deterministic():
+    """The Bernoulli failure stream is counter-based: step t's outcome is a
+    pure function of (seed, t), never of prior call history — so a
+    restore-replay through already-visited steps sees the identical stream."""
+    fresh = FailureInjector(p_fail=0.3, seed=7)
+    stream = [fresh.check(t) for t in range(40)]
+    assert any(stream) and not all(stream)  # p=0.3 actually draws both ways
+
+    replayed = FailureInjector(p_fail=0.3, seed=7)
+    # burn extra out-of-order checks first — a stateful generator would
+    # advance and desynchronize; a counter-based one cannot
+    for t in (13, 13, 2, 39, 5):
+        replayed.check(t)
+    assert [replayed.check(t) for t in range(40)] == stream
+
+    # draw() is pure in (seed, step, salt); distinct salts are independent
+    inj = FailureInjector(seed=7)
+    assert inj.draw(5) == inj.draw(5) == fresh.draw(5)
+    assert inj.draw(5, salt=1) != inj.draw(5, salt=2)
+    # different seeds give different streams
+    other = FailureInjector(p_fail=0.3, seed=8)
+    assert [other.check(t) for t in range(40)] != stream
+
+
+def test_injector_scheduled_fires_once():
+    inj = FailureInjector(scheduled=(3,))
+    assert not inj.check(2)
+    assert inj.check(3)
+    assert not inj.check(3)  # replay through step 3 must not re-kill
+
+
+def test_straggler_rate_estimate():
+    st_ = StragglerTracker(alpha=0.5, k=2.0)
+    assert st_.rate_estimate == 0.0  # no observation yet: unknown, not inf
+    st_.observe(0.5)
+    assert st_.rate_estimate == pytest.approx(2.0)
+    before = st_.rate_estimate
+    assert st_.observe(5.0)  # flagged slow step still updates the EMA
+    assert 0.0 < st_.rate_estimate < before
+
+
+def test_crash_rate_tracker_probation():
+    tr = CrashRateTracker(alpha=0.2, threshold=0.1)
+    assert not tr.suspicious  # clean history: eligible
+    assert tr.observe(True)  # one crash at defaults exceeds the threshold
+    assert tr.suspicious and tr.crashes == 1
+    # probation: ~4 clean slots at the defaults before eligibility returns
+    clean = 0
+    while tr.suspicious:
+        tr.observe(False)
+        clean += 1
+    assert 3 <= clean <= 5
+    assert tr.crashes == 1
+
+
+class _SlowWriteManager(CheckpointManager):
+    """Async writes linger long enough to still be in flight next step."""
+
+    def _write(self, step, flat, meta):
+        import time as _time
+        _time.sleep(0.5)
+        super()._write(step, flat, meta)
+
+
+def test_supervisor_async_save_gap(tiny_setup, tmp_path):
+    """A failure landing while an async save is still in flight must join
+    the writer BEFORE reading latest_step(): otherwise the supervisor
+    restores the previous checkpoint and replays 10 extra steps."""
+    cfg, model, opt, step_fn, ds = tiny_setup
+    cm = _SlowWriteManager(tmp_path / "slow", keep_n=3)
+    sup = TrainSupervisor(step_fn, cm, FailureInjector(scheduled=(21,)),
+                          save_every=10, async_save=True)
+    state = init_train_state(model, jax.random.PRNGKey(1), opt)
+    _, final = sup.run(
+        state, lambda s: make_batch_iterator(ds, start_step=s),
+        total_steps=25)
+    assert final == 25
+    # the step-20 save was mid-write when step 21 failed; wait-then-restore
+    # loses exactly one step (21 -> 20), not eleven (21 -> 10)
+    assert sup.restarts == 1 and sup.lost_steps == 1
+    assert cm.latest_step() == 20
 
 
 def test_compressed_training_still_learns(tiny_setup):
