@@ -11,6 +11,10 @@ Run as a module for the timed benchmark (the nightly perf-trend artifact)::
     python -m benchmarks.scenarios_bench --smoke
     python -m benchmarks.scenarios_bench --baseline results/BENCH_scenarios.json
     python -m benchmarks.scenarios_bench --fault-smoke   # CI degradation leg
+    python -m benchmarks.scenarios_bench --engine-smoke \
+        --baseline results/BENCH_engine.json             # CI throughput gate
+    python -m benchmarks.scenarios_bench --engine-full \
+        --out results/BENCH_engine.json                  # refresh baseline
 
 Writes ``results/BENCH_scenarios.json``: per-scenario end-to-end sweep
 wall-clock (trace + compile recorded separately from the steady-state
@@ -159,6 +163,113 @@ def failure_bench(smoke: bool) -> list[dict]:
     return records
 
 
+def engine_bench(smoke: bool) -> dict:
+    """Arrivals/sec of the streaming dispatch engine vs the lockstep host
+    loop it replaced, on the roofline cluster.
+
+    Legs (all seed-pinned):
+      * ``lockstep``   — ``ClusterSim.run("esdp")``, the pre-engine per-slot
+        host loop, at a modest horizon (it is ~100x slower per arrival);
+      * ``engine``     — single-variant stream mode: the whole trace is ONE
+        jitted ``lax.scan`` call;
+      * ``engine_ab``  — stream mode with a 90/10 ESDP/HSWF A/B split.
+
+    Before any timing, stream mode must be bit-identical to lockstep mode
+    at a small horizon — a throughput number for a wrong engine is
+    meaningless.  Full (non-smoke) mode adds the ~100k-arrival horizon the
+    acceptance bar targets (engine >= 5x lockstep arrivals/sec) and stamps
+    ``speedup`` / ``speedup_ok`` from that leg.
+    """
+    import jax
+    import numpy as np
+
+    from repro.sched import (ClusterSim, DispatchEngine, EngineConfig,
+                             VariantSpec)
+
+    inst = _failure_cluster()
+    seed = 9
+
+    # -- equivalence gate: stream == lockstep, bit for bit, or no timing --
+    eng = DispatchEngine(inst, 200, seed=seed)
+    o_s, o_l = eng.run(mode="stream"), eng.run(mode="lockstep")
+    for f in ("sw", "regret", "n", "sumz", "queue_len"):
+        if not np.array_equal(np.asarray(getattr(o_s, f)),
+                              np.asarray(getattr(o_l, f))):
+            raise AssertionError(
+                f"engine stream/lockstep diverged on {f!r} — refusing to "
+                "record a throughput number for a wrong engine")
+
+    ab = EngineConfig(variants=(VariantSpec("esdp", weight=0.9),
+                                VariantSpec("challenger", kind="hswf",
+                                            weight=0.1)))
+    T_lock = 200 if smoke else 400
+    horizons = (3_000,) if smoke else (3_000, 56_000)
+    records = []
+
+    def record(leg, T, arrivals, wall_s, mode):
+        records.append({
+            "leg": leg, "T": T, "arrivals": int(arrivals),
+            "wall_s": wall_s, "arrivals_per_s": arrivals / wall_s,
+            "mode": mode,
+        })
+        print(f"engine/{leg}: T={T} arrivals={arrivals} "
+              f"wall={wall_s:.2f}s -> {arrivals / wall_s:,.0f} arr/s",
+              flush=True)
+
+    # lockstep leg: second run so jit caches are warm and only the host
+    # loop itself is on the clock
+    arr_lock = int(DispatchEngine(inst, T_lock, seed=seed)
+                   ._streams(seed)[0].sum())
+    ClusterSim(inst, T_lock, seed=seed).run("esdp")
+    t0 = time.perf_counter()
+    ClusterSim(inst, T_lock, seed=seed).run("esdp")
+    record("lockstep", T_lock, arr_lock, time.perf_counter() - t0,
+           "host-loop")
+
+    for T in horizons:
+        for leg, cfg in (("engine", None), ("engine_ab", ab)):
+            eng = DispatchEngine(inst, T, cfg, seed=seed)
+            out = eng.run(mode="stream")  # pays trace + compile
+            t0 = time.perf_counter()
+            out = eng.run(mode="stream")
+            wall = time.perf_counter() - t0
+            record(leg, T, out.ledger["total_arrivals"], wall, "stream")
+
+    res = {"platform": jax.default_backend(), "jax": jax.__version__,
+           "host": host_fingerprint(), "smoke": smoke, "grid": records}
+    lock_rate = records[0]["arrivals_per_s"]
+    big = max((r for r in records if r["leg"] == "engine"),
+              key=lambda r: r["T"])
+    res["speedup"] = big["arrivals_per_s"] / lock_rate
+    res["speedup_ok"] = bool(res["speedup"] >= 5.0)
+    print(f"engine speedup vs lockstep ({big['arrivals']} arrivals): "
+          f"{res['speedup']:.0f}x (>=5x: {res['speedup_ok']})", flush=True)
+    return res
+
+
+def check_engine_baseline(result: dict, base: dict, max_regression: float) -> list[str]:
+    """Arrivals/sec per (leg, T) vs the committed file — a leg that got
+    ``max_regression``-fold slower (or a speedup that fell below the 5x
+    acceptance bar) fails the gate."""
+    base_r = {(r["leg"], r["T"]): r["arrivals_per_s"]
+              for r in base.get("grid", [])}
+    failures = []
+    for r in result["grid"]:
+        key = (r["leg"], r["T"])
+        if key not in base_r or r["leg"] == "lockstep":
+            continue  # lockstep is the denominator, not the gated path
+        if r["arrivals_per_s"] * max_regression < base_r[key]:
+            failures.append(
+                f"engine/{r['leg']} T={r['T']}: "
+                f"{r['arrivals_per_s']:,.0f} arr/s vs baseline "
+                f"{base_r[key]:,.0f} (> {max_regression:.1f}x slower)")
+    if not result.get("speedup_ok", True):
+        failures.append(
+            f"engine speedup {result['speedup']:.1f}x fell below the 5x "
+            "acceptance bar vs the lockstep host loop")
+    return failures
+
+
 def fault_injection_check(rate: "float | None" = None) -> dict:
     """The graceful-degradation acceptance bar: a full ESDP ClusterSim run
     with solver faults injected (``rate``, else ``$REPRO_DP_FAULT_RATE``)
@@ -184,6 +295,29 @@ def fault_injection_check(rate: "float | None" = None) -> dict:
           f"faults={rec['faults_injected']} "
           f"degraded={rec['degraded_calls']} identical={identical}",
           flush=True)
+
+    # streaming-engine leg: lockstep mode driving the faulted degradation
+    # chain must stay bit-identical to plain stream mode (every fallback
+    # link is exact), with at least one degradation event actually fired
+    from repro.sched import DispatchEngine, EngineConfig, VariantSpec
+
+    eng_plain = DispatchEngine(inst, T, seed=7).run(mode="stream")
+    fb_eng = FallbackSolver(chain=("pallas_interpret", "reference"),
+                            fault_rate=rate)
+    cfg = EngineConfig(variants=(VariantSpec("esdp", solver=fb_eng),))
+    eng_fault = DispatchEngine(inst, T, cfg, seed=7).run(mode="lockstep")
+    eng_identical = bool(
+        np.array_equal(np.asarray(eng_plain.sw), np.asarray(eng_fault.sw))
+        and np.array_equal(np.asarray(eng_plain.regret),
+                           np.asarray(eng_fault.regret)))
+    rec["engine"] = {
+        "identical": eng_identical,
+        "served_by": dict(fb_eng.stats["served_by"]),
+        **{k: v for k, v in fb_eng.stats.items() if isinstance(v, int)}}
+    print(f"fault-injection/engine: "
+          f"faults={rec['engine']['faults_injected']} "
+          f"degraded={rec['engine']['degraded_calls']} "
+          f"identical={eng_identical}", flush=True)
     return rec
 
 
@@ -217,6 +351,13 @@ def main() -> None:
                     help="run ONLY the degradation-chain bit-exactness "
                          "check (rate from $REPRO_DP_FAULT_RATE); non-zero "
                          "exit on mismatch or zero injected faults")
+    ap.add_argument("--engine-smoke", action="store_true",
+                    help="run ONLY the streaming-engine arrivals/sec legs "
+                         "at CI size (the engine-throughput gate)")
+    ap.add_argument("--engine-full", action="store_true",
+                    help="run ONLY the engine legs at full size, including "
+                         "the ~100k-arrival horizon the 5x acceptance bar "
+                         "targets — refreshes results/BENCH_engine.json")
     args = ap.parse_args()
     if args.fault_smoke:
         rec = fault_injection_check()
@@ -230,6 +371,12 @@ def main() -> None:
             sys.exit("FAULT SMOKE FAILED: no faults injected at rate "
                      f"{rec['rate']} over {rec['T']} solves — the hook "
                      "is not firing")
+        if not rec["engine"]["identical"]:
+            sys.exit("FAULT SMOKE FAILED: the streaming engine's faulted "
+                     "lockstep run diverged from plain stream mode")
+        if rec["engine"]["degraded_calls"] == 0:
+            sys.exit("FAULT SMOKE FAILED: the engine leg fired no "
+                     "degradation events — the chain never acted")
         return
     base = None
     if args.baseline:
@@ -239,6 +386,20 @@ def main() -> None:
                      "PYTHONPATH=src python -m benchmarks.scenarios_bench "
                      f"--out {bpath}")
         base = json.loads(bpath.read_text())
+    if args.engine_smoke or args.engine_full:
+        out = engine_bench(smoke=not args.engine_full)
+        path = pathlib.Path(args.out)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(out, indent=2))
+        print(f"wrote {path}")
+        if not out["speedup_ok"]:
+            sys.exit(f"ENGINE BENCH FAILED: speedup {out['speedup']:.1f}x "
+                     "< 5x vs the lockstep host loop")
+        if base is not None:
+            apply_baseline_guard(
+                out, base, args.baseline, args.max_regression,
+                check_engine_baseline(out, base, args.max_regression))
+        return
     out = bench(args.smoke)
     out["failures"] = failure_bench(args.smoke)
     out["fault_injection"] = fault_injection_check(rate=0.05)

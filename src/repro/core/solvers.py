@@ -201,11 +201,27 @@ class CachedSolver:
     ``exact`` exposes which mode this wrapper is in.
     """
 
-    def __init__(self, base: Solver, cache: "SolveCache | None" = None, **cache_kwargs):
+    def __init__(
+        self,
+        base: Solver,
+        cache: "SolveCache | None" = None,
+        scope: "str | None" = None,
+        **cache_kwargs,
+    ):
         from .incremental import SolveCache
         self.base = base
         self.cache = cache if cache is not None else SolveCache(**cache_kwargs)
+        # consumers owning several wrappers (e.g. one per A/B variant in
+        # sched.engine) label each one so its counters can't be confused
+        self.scope = scope
         self._jitted: dict = {}
+
+    def stats_dict(self) -> dict:
+        """``stats.as_dict()`` plus the ``scope`` label when set."""
+        d = self.cache.stats.as_dict()
+        if self.scope is not None:
+            d["scope"] = self.scope
+        return d
 
     @property
     def name(self) -> str:
@@ -351,6 +367,7 @@ class FallbackSolver:
         chain: "tuple | None" = None,
         fault_rate: "float | None" = None,
         fault_seed: "int | None" = None,
+        scope: "str | None" = None,
     ):
         from ..runtime.fault import FAULT_SEED_ENV, fault_rate_from_env
         if chain is not None:
@@ -371,12 +388,26 @@ class FallbackSolver:
         self.fault_seed = (int(os.environ.get(FAULT_SEED_ENV, "0") or 0)
                            if fault_seed is None else int(fault_seed))
         self._jitted: dict = {}
+        # scope labels this wrapper's counters when a consumer owns several
+        # (e.g. one chain per A/B variant in sched.engine)
+        self.scope = scope
         self.stats: dict = {
             "calls": 0, "bypasses": 0, "degraded_calls": 0,
             "launch_failures": 0, "validation_failures": 0,
             "faults_injected": 0, "served_by": {s.name: 0 for s in links},
             "events": [],
         }
+        if scope is not None:
+            self.stats["scope"] = scope
+
+    def stats_dict(self) -> dict:
+        """A detached copy of the counters (scope label included)."""
+        import copy as _copy
+
+        d = _copy.deepcopy(self.stats)
+        if self.scope is not None:
+            d["scope"] = self.scope
+        return d
 
     _MAX_EVENTS = 256  # structured events kept; counters never truncate
 

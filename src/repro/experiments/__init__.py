@@ -11,13 +11,13 @@ Two pieces:
 from .scenarios import (SCENARIOS, get_scenario, register_scenario,
                         scenario_names, unroll_scenario)
 from .sweep import (POLICY_FACTORIES, GridPoint, SweepRow, SweepSpec,
-                    default_policies, run_spec, summarize,
-                    sweep_scenario_param, write_csv, write_json)
+                    default_policies, engine_variant_records, run_spec,
+                    summarize, sweep_scenario_param, write_csv, write_json)
 
 __all__ = [
     "SCENARIOS", "get_scenario", "register_scenario", "scenario_names",
     "unroll_scenario",
     "POLICY_FACTORIES", "GridPoint", "SweepRow", "SweepSpec",
-    "default_policies", "run_spec", "summarize", "sweep_scenario_param",
-    "write_csv", "write_json",
+    "default_policies", "engine_variant_records", "run_spec", "summarize",
+    "sweep_scenario_param", "write_csv", "write_json",
 ]

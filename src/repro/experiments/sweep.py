@@ -44,7 +44,7 @@ from .scenarios import get_scenario
 
 __all__ = [
     "GridPoint", "SweepSpec", "SweepRow",
-    "run_spec", "summarize", "sweep_scenario_param",
+    "run_spec", "summarize", "sweep_scenario_param", "engine_variant_records",
     "write_csv", "write_json", "POLICY_FACTORIES", "default_policies",
 ]
 
@@ -144,11 +144,15 @@ class SweepRow:
     # seed batch by Policy.finalize, plus fallback_* degradation counters
     # when the spec's solver is a FallbackSolver chain; None otherwise
     solve_stats: Mapping | None = None
+    # A/B rollout lineage (sched.engine): the VariantSpec name this row's
+    # traffic slice was routed to, "" for whole-fleet (non-engine) sweeps
+    variant: str = ""
 
     def to_record(self) -> dict:
         """Sink-friendly flat record (drops the arrays)."""
         rec = {
             "spec": self.spec, "point": self.point, "policy": self.policy,
+            "variant": self.variant,
             "scenario": self.scenario, "T": self.T,
             "solver": getattr(self.solver, "name", self.solver) or "default",
             "seeds": ";".join(str(s) for s in self.seeds),
@@ -182,6 +186,33 @@ def summarize(res: SimResult) -> dict:
         "oracle_asw_mean": float(res.sw_oracle.sum(axis=-1).mean()),
         "n_dispatched_mean": float(res.n_dispatched.mean()),
     }
+
+
+def engine_variant_records(
+    out, spec: str = "engine", point: str = "default"
+) -> list[dict]:
+    """Per-variant flat records from a ``sched.engine.EngineOutput``.
+
+    One record per A/B rollout arm, sink-compatible with ``write_csv``/
+    ``write_json``: the ``variant`` column carries the arm name, and each
+    record reports that arm's routed/dispatched volume, realized welfare,
+    cumulative regret, and — because the record shape matches
+    ``SweepRow.to_record`` where fields overlap — slots next to ordinary
+    sweep rows in one table.
+    """
+    recs = []
+    routed = np.asarray(out.routed_variant).sum(axis=0)
+    for i, name in enumerate(out.variants):
+        recs.append({
+            "spec": spec, "point": point, "policy": name, "variant": name,
+            "T": int(np.asarray(out.sw).shape[0]),
+            "asw_mean": float(np.asarray(out.sw_variant)[:, i].sum()),
+            "regret_mean": float(np.asarray(out.regret_variant)[:, i].sum()),
+            "routed": int(routed[i]),
+            "dispatched": int(np.asarray(out.dispatched_variant)[:, i].sum()),
+            "mode": out.mode,
+        })
+    return recs
 
 
 def _resolve_scenario(

@@ -13,7 +13,7 @@ import numpy as np
 
 from ..core.graph import Instance, clipped_normal_mean
 
-__all__ = ["Slice", "JobType", "build_instance"]
+__all__ = ["Slice", "JobType", "build_instance", "validate_jobs"]
 
 # device types (K = 3): accelerator chips, host CPUs, ICI domains
 K_CHIPS, K_HOSTS, K_ICI = 0, 1, 2
@@ -39,6 +39,35 @@ class JobType:
     ici_domains: int
     value_rate: float  # $-value per unit normalized throughput
     arrival_p: float = 0.9
+
+
+def validate_jobs(slices: list[Slice], jobs: list[JobType]) -> dict:
+    """Fail-fast admission preflight: job types that can NEVER run here.
+
+    The validate-then-queue side of the streaming engine
+    (``sched.engine``): an arrival whose job type appears in this map is
+    dead-lettered immediately instead of camping in the queue.  Returns
+    ``{job name: human-readable reason}`` for every job type with no
+    solely-servable slice — wrong accelerator family everywhere, or a
+    gang (chips/hosts/ICI domains) larger than every matching slice.
+    Job types absent from the map have at least one feasible edge.
+    """
+    reasons: dict[str, str] = {}
+    for job in jobs:
+        matching = [s for s in slices if s.accel in job.accel_ok]
+        if not matching:
+            accels = sorted({s.accel for s in slices})
+            reasons[job.name] = (
+                f"no slice with accelerator in {job.accel_ok} "
+                f"(fleet has {accels})")
+            continue
+        if not any(s.chips >= job.chips and s.hosts >= job.hosts
+                   and s.ici_domains >= job.ici_domains for s in matching):
+            reasons[job.name] = (
+                f"gang {job.chips}c/{job.hosts}h/{job.ici_domains}i "
+                "exceeds every matching slice "
+                f"(largest: {max(s.chips for s in matching)}c)")
+    return reasons
 
 
 def build_instance(

@@ -213,7 +213,7 @@ class FailureRuntime:
         self.replicas[t0] = placed_total
         return reps
 
-    def settle(self, t0, x, z, crashed, reps):
+    def settle(self, t0, x, z, crashed, reps, ledger=None):
         """Charge the slot's crashes; return (sw_t, per-edge bandit signal).
 
         Per job unit of value z: survived (own server or any replica's
@@ -227,11 +227,15 @@ class FailureRuntime:
         per-edge realized utility clipped at 0 (the learned v̂ then absorbs
         crash risk and checkpoint overhead, steering dispatch away from
         crashy servers).
+
+        ``ledger`` targets an alternative (same-shape) ledger dict — the
+        streaming engine settles each A/B variant's units into its OWN
+        conserving ledger; default is the runtime's combined one.
         """
         m, inst = self.model, self.inst
         server = inst.edges[:, 1]
         nck = m.checkpoints
-        led = self.ledger
+        led = self.ledger if ledger is None else ledger
         realized = np.zeros(x.shape[0], np.float64)
         for e in np.flatnonzero(x):
             ze = float(z[e])
@@ -430,104 +434,32 @@ class ClusterSim:
 
     # ------------------------------------------------------------------
     def run(self, policy: str = "esdp", tiebreak: float = 1e-4) -> SimOutput:
-        inst, tables = self.inst, self.tables
-        E, R = inst.n_edges, inst.n_servers
-        port = inst.port_of_edge
-        server = inst.edges[:, 1]
-        arrivals, noise = self._streams()
-        rng = np.random.default_rng(self.seed + 1)
+        """The lockstep reference loop (thin adapter).
 
-        n = np.zeros(E, np.int64)
-        sumz = np.zeros(E, np.float64)
-        waiting = np.zeros(inst.n_ports, np.int64)
+        The loop body lives in ``sched.engine.lockstep_run``, preserved
+        bit-for-bit from the pre-engine implementation (same seeds ⇒ same
+        ``SimOutput`` arrays — pinned by ``tests/test_engine.py`` on all
+        six registered regimes).  The streaming admission/queue/dispatch
+        loop is :meth:`engine` / :class:`repro.sched.engine.DispatchEngine`.
+        """
+        from .engine import lockstep_run
 
-        sw = np.zeros(self.T, np.float32)
-        regret = np.zeros(self.T, np.float32)
-        share = np.zeros((self.T, R), np.float32)
+        return lockstep_run(self, policy, tiebreak)
 
-        if self.incremental is None and isinstance(self.solver, Solver):
-            jit_dp = jax.jit(
-                lambda u, s, lim, al: self.solver(
-                    u, s, tables, self.s_cap, lim, allowed=al,
-                    u_max=self.u_max)[0])
+    # ------------------------------------------------------------------
+    def engine(self, config=None):
+        """A :class:`repro.sched.engine.DispatchEngine` sharing this sim's
+        instance, horizon, schedule (already unrolled), seed, bandit
+        scaling, and failure model — the streaming counterpart of
+        :meth:`run` (admission control, bounded queue with backpressure,
+        weighted A/B policy variants; see ``docs/engine.md``)."""
+        from .engine import DispatchEngine
 
-            def solve_x(u, s, lim, al):
-                return np.asarray(jit_dp(u, s, lim, jnp.asarray(al)))
-        else:
-            # host-side wrapper paths need concrete inputs — the
-            # CachedSolver/WarmPallasSolver/FallbackSolver jit their own
-            # launch internals and skip/degrade them per call
-            inc = self._warm if self.incremental == "warm" else self.solver
-
-            def solve_x(u, s, lim, al):
-                return np.asarray(inc(u, s, tables, self.s_cap, int(lim),
-                                      allowed=al, u_max=self.u_max)[0])
-
-        jit_oracle = jax.jit(
-            lambda v, al: oracle_knapsack(v, tables, al)[0])
-        jit_greedy = jax.jit(
-            lambda sc, el: greedy_pack(sc, el, jnp.asarray(inst.A),
-                                       jnp.asarray(inst.c)))
-
-        fr = (FailureRuntime(self.failures, inst, self.T, self.alive_fn,
-                             self.seed)
-              if self.failures is not None else None)
-
-        for t0 in range(self.T):
-            t = t0 + 1  # 1-based for the bandit schedules
-            alive_srv = np.asarray(self.alive_fn(t0), bool)  # 0-based
-            alive = alive_srv[server]
-            arrived = arrivals[t0][port]
-            allowed = arrived & alive
-            if fr is not None:
-                allowed = fr.eligibility(allowed, server)
-            vhat = np.where(n > 0, sumz / np.maximum(n, 1), 0.0).astype(
-                np.float32)
-
-            if policy == "esdp":
-                ups, sig, _, s_lim = stats_mod.scale_statistics(
-                    jnp.asarray(vhat), jnp.asarray(n.astype(np.int32)),
-                    jnp.float32(t), self.m, g_fn=self.g_fn)
-                x = solve_x(ups, sig, s_lim, allowed)
-            else:
-                tb = rng.random(E).astype(np.float32) * tiebreak
-                if policy == "hswf":
-                    score = vhat + tb
-                elif policy == "lcf":
-                    score = -inst.cost + tb
-                else:  # lwtf
-                    score = waiting[port] * 1e3 + vhat + tb
-                x = np.asarray(jit_greedy(jnp.asarray(score),
-                                          jnp.asarray(allowed)))
-
-            x = x * allowed
-            z = self._z(t0, noise[t0])
-            if fr is None:
-                sw[t0] = float((x * z).sum())
-                bandit_z = x * z
-            else:
-                crashed = fr.crashed_servers(t0, alive_srv)
-                reps = fr.place_replicas(t0, x, allowed)
-                sw[t0], bandit_z = fr.settle(t0, x, z, crashed, reps)
-                fr.observe(t0, crashed)
-            v_true = self._v_true(t0)
-            x_star = np.asarray(jit_oracle(jnp.asarray(v_true),
-                                           jnp.asarray(allowed)))
-            regret[t0] = float((v_true * x_star).sum() - (v_true * x).sum())
-
-            n += x
-            sumz += bandit_z
-            served = np.zeros(inst.n_ports, bool)
-            np.maximum.at(served, port, x > 0)
-            waiting = np.where(served, 0, waiting + arrivals[t0])
-            if x.sum() > 0:
-                np.add.at(share[t0], server, x / x.sum())
-
-        return SimOutput(sw=sw, regret=regret, dispatch_share=share,
-                         asw=float(sw.sum()),
-                         solve_stats=(self._solve_stats()
-                                      if policy == "esdp" else None),
-                         failures=fr.summary() if fr is not None else None)
+        return DispatchEngine(
+            self.inst, self.T, config,
+            speed_fn=self.speed_fn, alive_fn=self.alive_fn,
+            arr_scale=self.arr_scale, g_fn=self.g_fn, seed=self.seed,
+            failures=self.failures)
 
     # ------------------------------------------------------------------
     def run_batch(

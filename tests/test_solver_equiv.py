@@ -408,6 +408,11 @@ def _rand_fleet(rng, B, E, s_cap, u_hi=4, sig_hi=10**4):
 
 
 if HAS_HYPOTHESIS:
+    # budget the heaviest sweep in the suite: a hypothesis shrink search
+    # over B=32 interpret-mode fleets can otherwise eat the CI job's whole
+    # timeout-minutes allowance (enforced only where pytest-timeout is
+    # installed — the [test] extra)
+    @pytest.mark.timeout(300)
     @settings(max_examples=20, deadline=None)
     @given(st.integers(0, 2**31 - 1))
     def test_batched_solve_bitexact_vs_instance_loop(seed):
@@ -444,6 +449,9 @@ if HAS_HYPOTHESIS:
 
 
 if HAS_HYPOTHESIS:
+    # same 5-minute budget as the fleet sweep above: random tilings multiply
+    # the per-example kernel launches
+    @pytest.mark.timeout(300)
     @settings(max_examples=20, deadline=None)
     @given(st.integers(0, 2**31 - 1))
     def test_batched_solver_random_tilings_bitexact(seed):
