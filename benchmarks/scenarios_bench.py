@@ -1,6 +1,9 @@
-"""Beyond the paper: ESDP vs its strongest baseline under every registered
-fluctuation regime (DVFS, MMPP bursts, stragglers, brownouts, outages,
-server crash/repair).
+"""Beyond the paper: ESDP vs the baseline field under every registered
+fluctuation regime (DVFS, MMPP bursts, stragglers, brownouts, power-coupled
+speeds, outages, server crash/repair) — the field now includes the two
+Markovian-service-rate baselines (``msr_greedy`` / ``msr_index``,
+arXiv:2412.08915) alongside HSWF, plus a malleable-jobs leg (rigid vs
+shrink vs shrink+preempt — ``docs/scenarios.md``).
 
 One declarative spec per scenario — the scenario registry makes "does ESDP
 still win under regime X?" a 5-line question (see docs/scenarios.md).
@@ -37,7 +40,8 @@ import pathlib
 import sys
 import time
 
-from repro.core.baselines import hswf_factory
+from repro.core.baselines import (hswf_factory, msr_greedy_factory,
+                                  msr_index_factory)
 from repro.core.esdp import esdp_factory
 from repro.core.stats import g_logt_only
 from repro.experiments import SweepSpec, run_spec, scenario_names
@@ -57,7 +61,9 @@ def _spec(scenario: str) -> SweepSpec:
     return SweepSpec(
         name=f"scenarios/{scenario}", T=T, seeds=SEEDS,
         policies={"esdp": esdp_factory(g_fn=g_logt_only),
-                  "hswf": hswf_factory()},
+                  "hswf": hswf_factory(),
+                  "msr_greedy": msr_greedy_factory(),
+                  "msr_index": msr_index_factory()},
         scenario=scenario,
         instance_kwargs={"seed": 0},
     )
@@ -70,10 +76,12 @@ def scenario_table(rows, smoke=False):
         if smoke:
             spec = spec.smoke()
         res = {r.policy: r for r in run_spec(spec)}
-        e, h = res["esdp"], res["hswf"]
+        e = res["esdp"]
         rows.append((f"scenarios/{scen}",
                      f"esdp={e.asw_mean:.1f}",
-                     f"hswf={h.asw_mean:.1f};"
+                     f"hswf={res['hswf'].asw_mean:.1f};"
+                     f"msr_greedy={res['msr_greedy'].asw_mean:.1f};"
+                     f"msr_index={res['msr_index'].asw_mean:.1f};"
                      f"oracle={e.oracle_asw_mean:.1f};"
                      f"esdp_regret={e.regret_mean:.1f}"))
 
@@ -102,10 +110,14 @@ def bench(smoke: bool) -> dict:
             "scenario": scen, "T": spec.T, "seeds": len(spec.seeds),
             "cold_s": cold_s, "warm_s": warm_s,
             "esdp_asw": e.asw_mean, "hswf_asw": h.asw_mean,
+            "msr_greedy_asw": res["msr_greedy"].asw_mean,
+            "msr_index_asw": res["msr_index"].asw_mean,
             "esdp_regret": e.regret_mean,
         })
         print(f"scenarios/{scen}: cold={cold_s:.2f}s warm={warm_s:.2f}s "
-              f"esdp={e.asw_mean:.1f} hswf={h.asw_mean:.1f}", flush=True)
+              f"esdp={e.asw_mean:.1f} hswf={h.asw_mean:.1f} "
+              f"msr_greedy={res['msr_greedy'].asw_mean:.1f} "
+              f"msr_index={res['msr_index'].asw_mean:.1f}", flush=True)
     return {"platform": jax.default_backend(), "jax": jax.__version__,
             "host": host_fingerprint(), "smoke": smoke, "grid": records}
 
@@ -160,6 +172,65 @@ def failure_bench(smoke: bool) -> list[dict]:
               f"lost={led['total_lost']:.1f} "
               f"salvaged={led['total_salvaged']:.1f} "
               f"restarts={led['restarts']}", flush=True)
+    return records
+
+
+def malleable_bench(smoke: bool) -> list[dict]:
+    """Malleable-jobs legs: the same cluster with shrinkable gangs, rigid
+    vs shrink(+grow) vs shrink+preempt (docs/scenarios.md).  Records ASW,
+    the conserving work-units ledger totals, and transition counts — the
+    headline is how much utility mid-flight reconfiguration buys once its
+    explicit costs are ledgered."""
+    from repro.sched import (ClusterSim, JobType, MalleableModel, Slice,
+                             build_instance, rate_matrix)
+
+    slices = [Slice("pod-a", "v5e", 256, 32, 4),
+              Slice("pod-b", "v5e", 256, 32, 4),
+              Slice("pod-c", "v5p", 256, 32, 4)]
+
+    def _jobs(malleable):
+        return [JobType("train", "qwen2.5-32b", "train_4k", ("v5e", "v5p"),
+                        256, 32, 4, value_rate=1.0, malleable=malleable,
+                        min_chips=128, min_hosts=16, min_ici_domains=2),
+                JobType("decode", "deepseek-v3-671b", "decode_32k", ("v5e",),
+                        256, 32, 4, value_rate=1.2, malleable=malleable,
+                        min_chips=64, min_hosts=8, min_ici_domains=1)]
+
+    def _inst(malleable):
+        jobs = _jobs(malleable)
+        return build_instance(slices, jobs, rate_matrix(jobs, slices),
+                              seed=0)[0]
+
+    T = 150 if smoke else 500
+    # rigid runs the same multi-slot jobs on an instance WITHOUT shrunk
+    # config edges (nothing to shrink to) — what reconfiguration buys
+    legs = {
+        "rigid": (_inst(False), MalleableModel(duration=4)),
+        "shrink": (_inst(True), MalleableModel(duration=4)),
+        "shrink_preempt": (_inst(True), MalleableModel(duration=4,
+                                                       preempt=True)),
+    }
+    records = []
+    for leg, (inst, model) in legs.items():
+        t0 = time.perf_counter()
+        out = ClusterSim(inst, T, seed=4, malleable=model).run("esdp")
+        mal = out.malleable
+        records.append({
+            "leg": leg, "T": T, "wall_s": time.perf_counter() - t0,
+            "asw": out.asw,
+            "dispatched_units": mal["total_dispatched"],
+            "done_units": mal["total_done"],
+            "lost_units": mal["total_lost"],
+            "reconfig_cost": mal["total_reconfig_cost"],
+            "shutdown_cost": mal["total_shutdown_cost"],
+            "transitions": mal["transitions"],
+            "shutdowns": int(mal["shutdowns"].sum()),
+            "blocked": int(mal["blocked"].sum()),
+        })
+        print(f"malleable/{leg}: asw={out.asw:.1f} "
+              f"transitions={mal['transitions']} "
+              f"blocked={int(mal['blocked'].sum())} "
+              f"lost={mal['total_lost']:.1f}", flush=True)
     return records
 
 
@@ -402,6 +473,7 @@ def main() -> None:
         return
     out = bench(args.smoke)
     out["failures"] = failure_bench(args.smoke)
+    out["malleable"] = malleable_bench(args.smoke)
     out["fault_injection"] = fault_injection_check(rate=0.05)
     path = pathlib.Path(args.out)
     path.parent.mkdir(parents=True, exist_ok=True)

@@ -24,7 +24,9 @@ from .graph import Instance
 
 __all__ = [
     "make_hswf_policy", "make_lcf_policy", "make_lwtf_policy", "greedy_pack",
+    "make_msr_greedy_policy", "make_msr_index_policy",
     "hswf_factory", "lcf_factory", "lwtf_factory",
+    "msr_greedy_factory", "msr_index_factory",
 ]
 
 
@@ -110,6 +112,105 @@ def make_lwtf_policy(instance: Instance, tiebreak: float = 1e-4) -> Policy:
     return Policy(name="lwtf", init=init, step=step)
 
 
+# ---------------------------------------------------------------------------
+# Markovian-service-rate baselines (arXiv:2412.08915)
+#
+# Both policies model each *server*'s effective service rate as a slowly
+# mixing Markov chain and track a per-server rate estimate ŝ_r alongside the
+# shared per-edge value estimates.  The policy interface never exposes
+# realized observations directly, but it passes both v̂ (running mean) and n
+# (observation count) — so the newest observations on edge e are
+# reconstructible exactly as (n·v̂ − n_prev·v̂_prev) / (n − n_prev).  Each
+# slot the mean new observation is compared to the previous estimate v̂_prev
+# (an obs/expectation ratio ≈ the server's current relative speed), folded
+# into ŝ_r by an EMA; servers with no fresh observation mean-revert toward 1
+# (the chain mixes back to its stationary regime).  MSR-greedy ranks edges by
+# v̂·ŝ_r; MSR-index adds a UCB exploration bonus c·√(log(t+1)/(n+1)).
+# ---------------------------------------------------------------------------
+
+def _msr_common(instance: Instance):
+    A, c, _, _ = _common(instance)
+    server = jnp.asarray(instance.edges[:, 1], jnp.int32)
+    return A, c, server
+
+
+def _msr_init(instance: Instance):
+    E, R = instance.n_edges, instance.n_servers
+    return (jnp.zeros(E, jnp.float32),  # previous v̂
+            jnp.zeros(E, jnp.int32),  # previous n
+            jnp.ones(R, jnp.float32))  # per-server rate estimate ŝ
+
+
+def _msr_update(state, vhat, n, server, n_servers, ema, revert):
+    """Fold this slot's fresh observations into the per-server rate chain."""
+    prev_vhat, prev_n, shat = state
+    dn = (n - prev_n).astype(jnp.float32)
+    seen = dn > 0
+    # mean of the observations that landed on e since last slot
+    obs = jnp.where(
+        seen,
+        (n.astype(jnp.float32) * vhat
+         - prev_n.astype(jnp.float32) * prev_vhat) / jnp.maximum(dn, 1.0),
+        0.0)
+    # obs vs the *pre-observation* estimate ≈ realized relative speed
+    base = jnp.maximum(jnp.where(prev_n > 0, prev_vhat, vhat), 1e-3)
+    ratio = jnp.clip(obs / base, 0.0, 2.0)
+    cnt = jnp.zeros(n_servers, jnp.float32).at[server].add(
+        seen.astype(jnp.float32))
+    rsum = jnp.zeros(n_servers, jnp.float32).at[server].add(
+        jnp.where(seen, ratio, 0.0))
+    robs = rsum / jnp.maximum(cnt, 1.0)
+    shat = jnp.where(cnt > 0,
+                     (1.0 - ema) * shat + ema * robs,
+                     shat + revert * (1.0 - shat))
+    return (vhat, n, shat), shat
+
+
+def make_msr_greedy_policy(
+    instance: Instance,
+    ema: float = 0.35,
+    revert: float = 0.1,
+    tiebreak: float = 1e-4,
+) -> Policy:
+    """MSR-greedy: rank edges by v̂ · ŝ_server (certainty-equivalent greedy
+    against the tracked Markovian rate state)."""
+    A, c, server = _msr_common(instance)
+    E, R = instance.n_edges, instance.n_servers
+
+    def step(state, t, eligible, arrived, vhat, n, key):
+        state, shat = _msr_update(state, vhat, n, server, R, ema, revert)
+        score = vhat * shat[server] + _tiebreak(key, E, tiebreak)
+        return greedy_pack(score, eligible, A, c), state
+
+    return Policy(name="msr_greedy", init=lambda: _msr_init(instance),
+                  step=step)
+
+
+def make_msr_index_policy(
+    instance: Instance,
+    ema: float = 0.35,
+    revert: float = 0.1,
+    ucb: float = 0.15,
+    tiebreak: float = 1e-4,
+) -> Policy:
+    """MSR-index: v̂ · ŝ_server plus a UCB bonus c·√(log(t+1)/(n+1)) — the
+    index variant that keeps probing channels whose rate chain may have
+    drifted since they were last observed."""
+    A, c, server = _msr_common(instance)
+    E, R = instance.n_edges, instance.n_servers
+
+    def step(state, t, eligible, arrived, vhat, n, key):
+        state, shat = _msr_update(state, vhat, n, server, R, ema, revert)
+        bonus = ucb * jnp.sqrt(
+            jnp.log(t.astype(jnp.float32) + 1.0)
+            / (n.astype(jnp.float32) + 1.0))
+        score = vhat * shat[server] + bonus + _tiebreak(key, E, tiebreak)
+        return greedy_pack(score, eligible, A, c), state
+
+    return Policy(name="msr_index", init=lambda: _msr_init(instance),
+                  step=step)
+
+
 def _factory(make, name: str, tiebreak: float) -> PolicyFactory:
     def factory(instance: Instance, T: int, tables=None) -> Policy:
         del T, tables  # greedy baselines are horizon-free and DP-free
@@ -129,3 +230,21 @@ def lcf_factory(tiebreak: float = 1e-4) -> PolicyFactory:
 
 def lwtf_factory(tiebreak: float = 1e-4) -> PolicyFactory:
     return _factory(make_lwtf_policy, "lwtf", tiebreak)
+
+
+def msr_greedy_factory(tiebreak: float = 1e-4, **kw) -> PolicyFactory:
+    def factory(instance: Instance, T: int, tables=None) -> Policy:
+        del T, tables
+        return make_msr_greedy_policy(instance, tiebreak=tiebreak, **kw)
+
+    factory.policy_name = "msr_greedy"
+    return factory
+
+
+def msr_index_factory(tiebreak: float = 1e-4, **kw) -> PolicyFactory:
+    def factory(instance: Instance, T: int, tables=None) -> Policy:
+        del T, tables
+        return make_msr_index_policy(instance, tiebreak=tiebreak, **kw)
+
+    factory.policy_name = "msr_index"
+    return factory

@@ -70,6 +70,14 @@ class Scenario:
     ``fluctuates`` must be True iff ``speed`` can differ from 1: it switches
     the regret oracle from the precomputed true means to per-slot clipped
     means (a static branch — each scenario compiles its own jaxpr).
+
+    ``speed_bounds`` is the regime's declared (lo, hi) envelope for every
+    emitted per-server speed — a *contract*, not a hint: the scenario
+    contract suite (``tests/test_scenario_contracts.py``) asserts each
+    registered regime's realized speeds stay inside its declared bounds.
+    Builders derive it from their resolved parameters (e.g. ``markov_dvfs``
+    declares ``(slow_speed, 1.0)``); the default ``(1.0, 1.0)`` is the
+    non-fluctuating contract.
     """
 
     name: str
@@ -78,6 +86,7 @@ class Scenario:
     params: dict = dataclasses.field(default_factory=dict)
     fluctuates: bool = False
     description: str = ""
+    speed_bounds: tuple = (1.0, 1.0)
 
 
 def _default_init(params, key, n_servers):

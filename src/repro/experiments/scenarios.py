@@ -33,7 +33,7 @@ from ..core.env import Scenario, default_scenario
 
 __all__ = [
     "SCENARIOS", "register_scenario", "get_scenario", "scenario_names",
-    "unroll_scenario",
+    "unroll_scenario", "power_allocation",
 ]
 
 # name -> builder(**params) -> Scenario
@@ -50,10 +50,16 @@ def register_scenario(name: str):
 
 
 def get_scenario(name: str, **overrides) -> Scenario:
-    """Build a registered scenario, overriding its default parameters."""
+    """Build a registered scenario, overriding its default parameters.
+
+    Raises ``ValueError`` (listing the registered names) on an unknown name —
+    this is the single validation boundary every consumer (``SweepSpec``,
+    ``ClusterSim``, benches) routes through.
+    """
     if name not in SCENARIOS:
-        raise KeyError(
-            f"unknown scenario {name!r}; registered: {sorted(SCENARIOS)}")
+        raise ValueError(
+            f"unknown scenario {name!r}; registered scenarios: "
+            f"{', '.join(sorted(SCENARIOS))}")
     return SCENARIOS[name](**overrides)
 
 
@@ -114,6 +120,7 @@ def markov_dvfs(
         params={"slow_speed": slow_speed, "p_slow": p_slow, "p_fast": p_fast},
         fluctuates=True,
         description="per-server two-state Markov speed modulation (DVFS)",
+        speed_bounds=(slow_speed, 1.0),
     )
 
 
@@ -185,6 +192,7 @@ def chronic_straggler(frac: float = 0.25, straggler_speed: float = 0.35) -> Scen
         params={"frac": frac, "straggler_speed": straggler_speed},
         fluctuates=True,
         description="a persistent random subset of servers is degraded",
+        speed_bounds=(straggler_speed, 1.0),
     )
 
 
@@ -219,6 +227,7 @@ def transient_brownout(
                 "brownout_speed": brownout_speed},
         fluctuates=True,
         description="cluster-wide speed dip in a fixed time window",
+        speed_bounds=(brownout_speed, 1.0),
     )
 
 
@@ -329,6 +338,89 @@ def server_failures(
         fluctuates=False,  # live servers run at unit speed
         description="Markov crash/repair per server, optional correlated "
                     "rack-group failures and crash-prone lemon hosts",
+    )
+
+
+# ---------------------------------------------------------------------------
+# power_coupled — shared sum-power budget couples per-server speeds
+# ---------------------------------------------------------------------------
+
+def power_allocation(demand, budget):
+    """Ration a shared power budget across servers, proportionally.
+
+    demand: (R,) f32 per-server power draw this slot (≥ 0); budget: scalar
+    total budget P (≥ 0 after clamping).  Returns p (R,) with
+    ``p_i = d_i · min(1, P / Σd)`` — each server's allocation is cut by the
+    same oversubscription ratio, the droop model of a shared power feed.
+
+    Two invariants the hypothesis suite pins: ``Σp = min(P, Σd) ≤ P`` (the
+    budget is never exceeded), and p is monotone non-decreasing in P
+    elementwise (more budget never slows anyone).  Pure jnp: safe inside the
+    jitted scan, under vmap, and under ``lax.map`` parameter grids.
+    """
+    d = jnp.asarray(demand, jnp.float32)
+    B = jnp.maximum(jnp.asarray(budget, jnp.float32), 0.0)
+    total = jnp.sum(d)
+    ratio = jnp.where(total > B, B / jnp.maximum(total, 1e-9), 1.0)
+    return d * ratio
+
+
+def _power_init(params, key, n_servers):
+    # burst mask (co-located tenant bursting on that server) + private key
+    return (jnp.zeros(n_servers, dtype=bool), key)
+
+
+def _power_step(params, state, t, n_servers):
+    burst, key = state
+    key, k = jax.random.split(key)
+    u = jax.random.uniform(k, (n_servers,))
+    start = ~burst & (u < params["p_burst"])
+    stop = burst & (u < params["p_calm"])
+    burst = (burst | start) & ~stop
+    # demand: 1 unit for the scheduled job, plus (burst_mult − 1) drawn by a
+    # bursting co-tenant; the feed rations everyone by the same factor, and
+    # the co-tenant's draw comes off the top of the server's allocation —
+    # one tenant's burst slows *every* server (the coupling), and bursting
+    # servers slow the most.
+    demand = jnp.where(burst, params["burst_mult"], 1.0).astype(jnp.float32)
+    p = power_allocation(demand, params["budget"] * n_servers)
+    job_power = jnp.clip(p - (demand - 1.0), 0.0, 1.0)
+    speed = jnp.clip(job_power ** params["alpha"],
+                     params["s_min"], 1.0).astype(jnp.float32)
+    return ((burst, key), jnp.float32(1.0), speed, _all_alive(n_servers))
+
+
+@register_scenario("power_coupled")
+def power_coupled(
+    budget: float = 1.1,
+    burst_mult: float = 3.0,
+    p_burst: float = 0.08,
+    p_calm: float = 0.25,
+    alpha: float = 0.5,
+    s_min: float = 0.05,
+) -> Scenario:
+    """Power-oversubscribed co-location (arXiv:2108.06935): all R servers
+    share one power feed with total budget ``budget·R``.  Each server hosts
+    a co-located tenant whose draw follows a two-state Markov chain (calm =
+    1 unit, burst = ``burst_mult`` units, entered w.p. ``p_burst``, left
+    w.p. ``p_calm``).  The feed rations proportionally
+    (:func:`power_allocation`), the co-tenant's draw comes off the top, and
+    the scheduled job's speed is ``clip(job_power^alpha, s_min, 1)`` —
+    s_i ∝ p_i^α.  Unlike every independent-perturbation regime, enough
+    bursts anywhere slow *all* servers at once."""
+    if burst_mult < 1.0:
+        raise ValueError(f"burst_mult must be ≥ 1, got {burst_mult}")
+    return Scenario(
+        name="power_coupled",
+        init=_power_init,
+        step=_power_step,
+        params={"budget": budget, "burst_mult": burst_mult,
+                "p_burst": p_burst, "p_calm": p_calm,
+                "alpha": alpha, "s_min": s_min},
+        fluctuates=True,
+        description="shared sum-power budget: co-located bursts slow every "
+                    "server via proportional power rationing, s_i ∝ p_i^α",
+        speed_bounds=(s_min, 1.0),
     )
 
 

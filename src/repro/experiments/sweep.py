@@ -35,7 +35,8 @@ import numpy as np
 
 from ..core import (build_tables, generate_instance, simulate_batch,
                     simulate_grid)
-from ..core.baselines import hswf_factory, lcf_factory, lwtf_factory
+from ..core.baselines import (hswf_factory, lcf_factory, lwtf_factory,
+                              msr_greedy_factory, msr_index_factory)
 from ..core.dp import DPTables
 from ..core.env import Scenario, SimResult
 from ..core.esdp import PolicyFactory, esdp_factory
@@ -54,20 +55,31 @@ POLICY_FACTORIES = {
     "hswf": hswf_factory,
     "lcf": lcf_factory,
     "lwtf": lwtf_factory,
+    "msr_greedy": msr_greedy_factory,
+    "msr_index": msr_index_factory,
 }
 
 
 def default_policies(
     g_fn=None,
     tiebreak: float = 1e-4,
-    names: Sequence[str] = ("esdp", "hswf", "lcf", "lwtf"),
+    names: Sequence[str] = ("esdp", "hswf", "lcf", "lwtf", "msr_greedy", "msr_index"),
     solver: str | None = None,
 ) -> dict[str, PolicyFactory]:
-    """The paper's four policies as a sweep-ready dict (Fig. 2–4 lineup).
+    """The full policy lineup as a sweep-ready dict: the paper's four
+    (Fig. 2–4) plus the two Markovian-service-rate baselines
+    (``core.baselines`` — arXiv:2412.08915), so sweeps report ESDP against
+    a stronger field than the paper's three benchmarks by default.
 
+    Unknown names raise ``ValueError`` listing the registry — the
+    ``SweepSpec`` boundary's counterpart of ``get_scenario``'s check.
     ``solver`` pins the Algorithm-2 backend for ESDP (see ``core.solvers``)."""
     out: dict[str, PolicyFactory] = {}
     for n in names:
+        if n not in POLICY_FACTORIES:
+            raise ValueError(
+                f"unknown policy {n!r}; registered policies: "
+                f"{', '.join(sorted(POLICY_FACTORIES))}")
         if n == "esdp":
             kw = {"g_fn": g_fn} if g_fn else {}
             if solver is not None:

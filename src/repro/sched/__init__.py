@@ -1,13 +1,15 @@
 """Cluster-level integration: ESDP as the gang dispatcher for multi-pod
 training/serving jobs (DESIGN.md §2)."""
 from .cluster import JobType, Slice, build_instance, validate_jobs
-from .dispatcher import ClusterSim, FailureModel, FailureRuntime, SimOutput
-from .engine import (BACKPRESSURE_POLICIES, DispatchEngine, EngineConfig,
-                     EngineOutput, VariantSpec, feasible_ports)
+from .dispatcher import (ClusterSim, FailureModel, FailureRuntime,
+                         MalleableModel, MalleableRuntime, SimOutput)
+from .engine import (BACKPRESSURE_POLICIES, LOCKSTEP_POLICIES, DispatchEngine,
+                     EngineConfig, EngineOutput, VariantSpec, feasible_ports)
 from .ratemodel import rate_matrix, roofline_rate
 
 __all__ = ["JobType", "Slice", "build_instance", "validate_jobs",
            "ClusterSim", "SimOutput", "FailureModel", "FailureRuntime",
-           "BACKPRESSURE_POLICIES", "DispatchEngine", "EngineConfig",
-           "EngineOutput", "VariantSpec", "feasible_ports",
+           "MalleableModel", "MalleableRuntime",
+           "BACKPRESSURE_POLICIES", "LOCKSTEP_POLICIES", "DispatchEngine",
+           "EngineConfig", "EngineOutput", "VariantSpec", "feasible_ports",
            "rate_matrix", "roofline_rate"]

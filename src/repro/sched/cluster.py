@@ -26,6 +26,10 @@ class Slice:
     chips: int  # e.g. 256 = one pod slice
     hosts: int
     ici_domains: int
+    # a divisible slice can grant a malleable job its shrunk gang (a
+    # sub-mesh); an indivisible one (e.g. a wafer-scale part) is
+    # all-or-nothing and gets only full-gang edges
+    divisible: bool = True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,6 +43,21 @@ class JobType:
     ici_domains: int
     value_rate: float  # $-value per unit normalized throughput
     arrival_p: float = 0.9
+    # malleable jobs (elona-dup-style malleable MPI scheduling) can run on
+    # a shrunk gang mid-execution: ``build_instance`` emits a second edge
+    # per feasible (job, divisible slice) pair at the min-gang shape, and
+    # ``sched.dispatcher.MalleableRuntime`` shrinks/regrows running jobs
+    # between the two configs.  min_* of 0 default to the full gang.
+    malleable: bool = False
+    min_chips: int = 0
+    min_hosts: int = 0
+    min_ici_domains: int = 0
+
+    def min_gang(self) -> tuple[int, int, int]:
+        """The shrunk-config gang (falling back to the full gang)."""
+        return (self.min_chips or self.chips,
+                self.min_hosts or self.hosts,
+                self.min_ici_domains or self.ici_domains)
 
 
 def validate_jobs(slices: list[Slice], jobs: list[JobType]) -> dict:
@@ -84,6 +103,14 @@ def build_instance(
     (from the roofline model — sched/ratemodel.py); <= 0 means no edge
     (service locality violated or capacity insufficient).
 
+    Malleable jobs (``JobType.malleable``) additionally get a *shrunk*
+    edge per feasible (job, divisible slice) pair — same (port, server),
+    min-gang requirement column, throughput scaled by the chip fraction
+    (linear scaling; roofline-aware sublinear scaling is a refinement the
+    rate model can supply via ``mean_rates``).  ``MalleableRuntime``
+    groups such same-(port, server) edges into a config family and moves
+    running jobs between them.
+
     Returns (instance, edge_rate) where edge_rate aligns with instance.edges.
     """
     L, R = len(jobs), len(slices)
@@ -101,6 +128,15 @@ def build_instance(
             A_cols.append([job.chips, job.hosts, job.ici_domains])
             mu.append(job.value_rate * mean_rates[li, r])
             rate.append(mean_rates[li, r])
+            mg = job.min_gang()
+            full = (job.chips, job.hosts, job.ici_domains)
+            if (job.malleable and sl.divisible
+                    and all(a <= b for a, b in zip(mg, full)) and mg != full):
+                frac = mg[0] / job.chips
+                edges.append((li, r))
+                A_cols.append(list(mg))
+                mu.append(job.value_rate * mean_rates[li, r] * frac)
+                rate.append(mean_rates[li, r] * frac)
     edges = np.asarray(edges, np.int32)
     A = np.asarray(A_cols, np.int64).T.astype(np.int32)  # (K, E)
 

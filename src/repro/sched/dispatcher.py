@@ -44,7 +44,8 @@ from ..core.graph import Instance
 from ..core.solvers import Solver, get_solver
 from ..runtime.fault import CrashRateTracker, FailureInjector
 
-__all__ = ["ClusterSim", "SimOutput", "FailureModel", "FailureRuntime"]
+__all__ = ["ClusterSim", "SimOutput", "FailureModel", "FailureRuntime",
+           "MalleableModel", "MalleableRuntime"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +64,12 @@ class SimOutput:
     # dispatched = completed + lost + salvaged exactly), crash/replica
     # counts, and scalar totals.
     failures: "dict | None" = None
+    # work-units ledger when the sim ran with malleable jobs
+    # (malleable=MalleableModel(...)); None otherwise.  Per-slot arrays
+    # dispatched/done/lost (work units, satisfying dispatched = done + lost
+    # + residual exactly), reconfiguration/shutdown costs and counts, and
+    # scalar totals (see MalleableRuntime.summary).
+    malleable: "dict | None" = None
 
     @property
     def cum_regret(self):
@@ -295,6 +302,236 @@ class FailureRuntime:
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class MalleableModel:
+    """Knobs of the malleable-jobs runtime (elona-dup-style malleable MPI
+    scheduling; see ``docs/scenarios.md``).
+
+    Jobs carry ``duration`` work units (slots at the full-gang rate) instead
+    of completing in-slot.  A running job occupies its current config edge's
+    capacity column until done; when a new dispatch does not fit the
+    residual capacity, running jobs are *shrunk* one config level
+    (``sched.cluster.build_instance`` emits the shrunk same-(port, server)
+    edges for malleable job types), and — with ``grow_back`` — regrown
+    toward their dispatched config when capacity frees.  Every shrink or
+    grow is one reconfiguration charging ``reconfig_cost`` utility exactly
+    once; with ``preempt`` a still-blocked dispatch may shut a low-value
+    running job down entirely, charging ``shutdown_cost`` and losing the
+    job's remaining work units into the ledger.
+    """
+    duration: int = 4
+    reconfig_cost: float = 0.02
+    shutdown_cost: float = 0.05
+    grow_back: bool = True
+    preempt: bool = False
+
+    def __post_init__(self):
+        if self.duration < 1:
+            raise ValueError("duration is the job's work units (>= 1)")
+        if self.reconfig_cost < 0 or self.shutdown_cost < 0:
+            raise ValueError("reconfig_cost/shutdown_cost must be >= 0")
+
+
+class MalleableRuntime:
+    """Host-side shrink/grow bookkeeping for one ``ClusterSim`` run.
+
+    Edges sharing a (port, server) pair form a *config family* ordered by
+    gang size — the full config plus the shrunk configs ``build_instance``
+    emitted for malleable job types.  A running job tracks its dispatched
+    config ``e0`` and current config ``ecur``; per slot it advances
+    ``rate[ecur] = Σ_k A[k, ecur] / Σ_k A[k, full]`` work units and accrues
+    value ``z[ecur] · w / duration`` (an always-full job realizes exactly
+    one z draw's worth in total — ``duration=1`` on a family-free instance
+    reproduces the rigid loop bit-for-bit).  The work-units ledger conserves
+    exactly, the PR 8 failure-ledger way::
+
+        Σ dispatched = Σ done + Σ lost + residual  (work units, float64)
+
+    with ``lost`` the remaining units of shutdown jobs and ``residual`` the
+    units still in flight at the horizon.  Reconfiguration/shutdown costs
+    are charged to the slot's welfare AND to the affected job's bandit gain
+    exactly once per transition (``transitions`` counts them — the
+    hypothesis suite pins ``reconfig_cost_total == transitions ·
+    model.reconfig_cost``).
+    """
+
+    def __init__(self, model: MalleableModel, instance: Instance, T: int):
+        self.model = model
+        self.inst = instance
+        self.T = T
+        A = np.asarray(instance.A, np.int64)
+        self.A = A
+        self.c = np.asarray(instance.c, np.int64)
+        port, server = instance.port_of_edge, instance.edges[:, 1]
+        E = instance.n_edges
+        gang = A.sum(axis=0)
+        families: dict = {}
+        for e in range(E):
+            families.setdefault((int(port[e]), int(server[e])), []).append(e)
+        self.full_of = np.arange(E)
+        self.shrunk_of = np.full(E, -1)  # next-smaller config, -1 at bottom
+        self.parent_of = np.full(E, -1)  # next-larger config, -1 at full
+        for es in families.values():
+            es.sort(key=lambda e: (-gang[e], e))
+            for e in es:
+                self.full_of[e] = es[0]
+            for up, dn in zip(es, es[1:]):
+                self.shrunk_of[up] = dn
+                self.parent_of[dn] = up
+        self.rate = gang / np.maximum(gang[self.full_of], 1)
+        self.jobs: list[dict] = []  # start-ordered: {e0, ecur, rem, gain}
+        self._settled: list[tuple[int, float]] = []  # (e0, gain) this slot
+        self.ledger = {k: np.zeros(T, np.float64) for k in
+                       ("dispatched", "done", "lost",
+                        "reconfig_cost", "shutdown_cost")}
+        self.counts = {k: np.zeros(T, np.int32) for k in
+                       ("started", "completed", "shrinks", "grows",
+                        "shutdowns", "blocked", "running")}
+        self.occupancy = np.zeros((T, self.c.shape[0]), np.int64)
+        self.transitions = 0
+
+    def occupied(self) -> np.ndarray:
+        occ = np.zeros_like(self.c)
+        for j in self.jobs:
+            occ += self.A[:, j["ecur"]]
+        return occ
+
+    def residual(self) -> np.ndarray:
+        return self.c - self.occupied()
+
+    def _reconfig(self, t0: int, job: dict, to: int, grow: bool) -> None:
+        job["ecur"] = to
+        cost = self.model.reconfig_cost
+        self.ledger["reconfig_cost"][t0] += cost
+        job["gain"] -= cost
+        self.counts["grows" if grow else "shrinks"][t0] += 1
+        self.transitions += 1
+
+    def grow(self, t0: int) -> None:
+        """Regrow shrunk jobs toward their dispatched config (FIFO), one
+        config level per fit check — each level is one charged transition."""
+        if not self.model.grow_back:
+            return
+        for j in self.jobs:
+            while j["ecur"] != j["e0"]:
+                up = self.parent_of[j["ecur"]]
+                if up < 0:
+                    break
+                need = self.A[:, up] - self.A[:, j["ecur"]]
+                if np.all(need <= self.residual()):
+                    self._reconfig(t0, j, int(up), grow=True)
+                else:
+                    break
+
+    def _shrink_for_room(self, t0: int, need: np.ndarray) -> bool:
+        """Shrink running jobs (FIFO, one level each) until ``need`` fits
+        the residual; returns whether it fits."""
+        while True:
+            if np.all(need <= self.residual()):
+                return True
+            victim = next((j for j in self.jobs
+                           if self.shrunk_of[j["ecur"]] >= 0), None)
+            if victim is None:
+                return False
+            self._reconfig(t0, victim, int(self.shrunk_of[victim["ecur"]]),
+                           grow=False)
+
+    def _preempt_for_room(
+        self, t0: int, need: np.ndarray, value: float, vhat: np.ndarray
+    ) -> bool:
+        """Shut down running jobs whose estimated remaining value is below
+        the newcomer's until ``need`` fits; returns whether it fits."""
+        W = float(self.model.duration)
+        while not np.all(need <= self.residual()):
+            live = [(vhat[j["e0"]] * j["rem"] / W, i)
+                    for i, j in enumerate(self.jobs)]
+            if not live:
+                return False
+            remval, i = min(live)
+            if remval >= value:
+                return False
+            job = self.jobs.pop(i)
+            job["gain"] -= self.model.shutdown_cost
+            self.ledger["shutdown_cost"][t0] += self.model.shutdown_cost
+            self.ledger["lost"][t0] += job["rem"]
+            self.counts["shutdowns"][t0] += 1
+            self._settled.append((job["e0"], job["gain"]))
+        return True
+
+    def admit(self, t0: int, x: np.ndarray, vhat: np.ndarray) -> np.ndarray:
+        """Fit the slot's desired dispatch into the residual capacity.
+
+        Units are tried in descending estimated value; a unit that does not
+        fit triggers shrink (then, with ``preempt``, shutdown) of running
+        jobs; units that still do not fit are blocked (never started, never
+        ledgered as dispatched).  Returns the admitted dispatch vector."""
+        x = np.asarray(x, np.int64)
+        admitted = np.zeros_like(x)
+        units = [e for e in np.flatnonzero(x) for _ in range(int(x[e]))]
+        units.sort(key=lambda e: (-float(vhat[e]), e))
+        W = float(self.model.duration)
+        for e in units:
+            need = self.A[:, e]
+            ok = np.all(need <= self.residual())
+            if not ok:
+                ok = self._shrink_for_room(t0, need)
+            if not ok and self.model.preempt:
+                ok = self._preempt_for_room(t0, need, float(vhat[e]), vhat)
+            if not ok:
+                self.counts["blocked"][t0] += 1
+                continue
+            self.jobs.append({"e0": int(e), "ecur": int(e),
+                              "rem": W, "gain": 0.0})
+            self.ledger["dispatched"][t0] += W
+            self.counts["started"][t0] += 1
+            admitted[e] += 1
+        return admitted
+
+    def advance(self, t0: int, z: np.ndarray):
+        """Advance every running job one slot against the slot's realized
+        valuations; returns (slot welfare, settled (e0, gain) pairs)."""
+        self.occupancy[t0] = self.occupied()
+        W = float(self.model.duration)
+        accrual = 0.0
+        still: list[dict] = []
+        for j in self.jobs:
+            w = min(self.rate[j["ecur"]], j["rem"])
+            val = float(z[j["ecur"]]) * w / W
+            j["gain"] += val
+            j["rem"] -= w
+            accrual += val
+            self.ledger["done"][t0] += w
+            if j["rem"] <= 1e-9:
+                self.ledger["done"][t0] += j["rem"]  # absorb float residue
+                j["rem"] = 0.0
+                self.counts["completed"][t0] += 1
+                self._settled.append((j["e0"], j["gain"]))
+            else:
+                still.append(j)
+        self.jobs = still
+        self.counts["running"][t0] = len(still)
+        sw_t = (accrual - self.ledger["reconfig_cost"][t0]
+                - self.ledger["shutdown_cost"][t0])
+        settled, self._settled = self._settled, []
+        return sw_t, settled
+
+    @property
+    def residual_units(self) -> float:
+        return float(sum(j["rem"] for j in self.jobs))
+
+    def summary(self) -> dict:
+        led = {k: v.astype(np.float32) for k, v in self.ledger.items()}
+        return dict(
+            led,
+            **{k: v.copy() for k, v in self.counts.items()},
+            occupancy=self.occupancy.copy(),
+            transitions=self.transitions,
+            residual_units=self.residual_units,
+            **{f"total_{k}": float(v.sum()) for k, v in self.ledger.items()},
+            model=dataclasses.asdict(self.model),
+        )
+
+
 class ClusterSim:
     """Paired simulation of ESDP vs greedy policies on one cluster instance."""
 
@@ -313,6 +550,7 @@ class ClusterSim:
         warm_checkpoint_every: int = 8,
         failures: "FailureModel | None" = None,
         fallback: bool = False,
+        malleable: "MalleableModel | None" = None,
     ):
         """``incremental`` turns on cross-slot re-solve reuse for the ESDP
         policy (bit-identical in the default exact modes):
@@ -332,6 +570,11 @@ class ClusterSim:
         ``failures=FailureModel(...)`` turns on the failure-aware runtime
         (crash settlement, redundancy, checkpointing, detection — see
         :class:`FailureModel`); single-seed ``run()`` only.
+        ``malleable=MalleableModel(...)`` turns on the malleable-jobs
+        runtime (multi-slot jobs, shrink/grow between config-family edges,
+        reconfiguration/shutdown costs — see :class:`MalleableModel`);
+        single-seed ``run()`` only, mutually exclusive with ``failures``
+        (both settle work host-side and their interplay is undefined).
         ``fallback=True`` wraps the backend in a
         ``core.solvers.FallbackSolver`` degradation chain (host-side
         per-slot solves, exact results whichever link serves); mutually
@@ -367,6 +610,11 @@ class ClusterSim:
         self.s_cap = stats_mod.s_cap_for_horizon(T, self.m)
         self.u_max = stats_mod.u_max_for_horizon(T, self.m)
         self.failures = failures
+        if failures is not None and malleable is not None:
+            raise ValueError(
+                "failures= and malleable= are mutually exclusive: both "
+                "settle in-flight work host-side per slot")
+        self.malleable = malleable
         if fallback:
             if incremental is not None:
                 raise ValueError(
@@ -490,6 +738,16 @@ class ClusterSim:
                 "the failure-aware runtime settles crashes per seed "
                 "host-side and so runs single-seed only (run()); loop "
                 "run() over seeds for a failure-aware fleet")
+        if self.malleable is not None:
+            raise NotImplementedError(
+                "the malleable-jobs runtime tracks per-seed in-flight "
+                "jobs host-side and so runs single-seed only (run()); "
+                "loop run() over seeds for a malleable fleet")
+        from .engine import LOCKSTEP_POLICIES
+        if policy not in LOCKSTEP_POLICIES:
+            raise ValueError(
+                f"unknown policy {policy!r}; valid lockstep policies: "
+                f"{', '.join(LOCKSTEP_POLICIES)}")
         inst, tables = self.inst, self.tables
         E, R = inst.n_edges, inst.n_servers
         port = inst.port_of_edge

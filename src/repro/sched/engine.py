@@ -61,12 +61,16 @@ from ..core.env import Scenario
 from ..core.graph import Instance
 from ..core.solvers import Solver, get_solver
 
-__all__ = ["BACKPRESSURE_POLICIES", "VariantSpec", "EngineConfig",
-           "EngineOutput", "DispatchEngine", "feasible_ports",
-           "lockstep_run"]
+__all__ = ["BACKPRESSURE_POLICIES", "LOCKSTEP_POLICIES", "VariantSpec",
+           "EngineConfig", "EngineOutput", "DispatchEngine",
+           "feasible_ports", "lockstep_run"]
 
 BACKPRESSURE_POLICIES = ("drop_oldest", "block", "shed_by_utility")
 VARIANT_KINDS = ("esdp", "hswf", "lcf", "lwtf")
+# named policies the host lockstep loop implements (ClusterSim.run /
+# run_batch validate against this — an unknown name used to silently fall
+# through to lwtf)
+LOCKSTEP_POLICIES = ("esdp", "hswf", "lcf", "lwtf")
 
 _EMPTY = -1  # queue sentinel: no job in this slot of the FIFO
 
@@ -842,10 +846,18 @@ def lockstep_run(sim, policy: str = "esdp", tiebreak: float = 1e-4):
     semantics (every arrival dispatchable the slot it lands, f64 bandit
     accumulators, host RNG tie-breaks, failure settlement) are frozen as
     the reference the streaming engine is benchmarked against —
-    ``tests/test_engine.py`` pins its outputs on all six registered
-    regimes.
+    ``tests/test_engine.py`` pins its outputs across the registered
+    regimes.  With ``sim.malleable`` set, the slot flow gains the
+    malleable phases (grow → solve → admit/shrink/preempt → advance) and
+    the bandit is fed realized per-job gains at completion; with it None
+    the original rigid path runs unchanged.
     """
-    from .dispatcher import FailureRuntime, SimOutput
+    from .dispatcher import FailureRuntime, MalleableRuntime, SimOutput
+
+    if policy not in LOCKSTEP_POLICIES:
+        raise ValueError(
+            f"unknown policy {policy!r}; valid lockstep policies: "
+            f"{', '.join(LOCKSTEP_POLICIES)}")
 
     inst, tables = sim.inst, sim.tables
     E, R = inst.n_edges, inst.n_servers
@@ -888,6 +900,8 @@ def lockstep_run(sim, policy: str = "esdp", tiebreak: float = 1e-4):
 
     fr = (FailureRuntime(sim.failures, inst, sim.T, sim.alive_fn, sim.seed)
           if sim.failures is not None else None)
+    mr = (MalleableRuntime(sim.malleable, inst, sim.T)
+          if getattr(sim, "malleable", None) is not None else None)
 
     for t0 in range(sim.T):
         t = t0 + 1  # 1-based for the bandit schedules
@@ -897,6 +911,8 @@ def lockstep_run(sim, policy: str = "esdp", tiebreak: float = 1e-4):
         allowed = arrived & alive
         if fr is not None:
             allowed = fr.eligibility(allowed, server)
+        if mr is not None:
+            mr.grow(t0)
         vhat = np.where(n > 0, sumz / np.maximum(n, 1), 0.0).astype(
             np.float32)
 
@@ -918,7 +934,11 @@ def lockstep_run(sim, policy: str = "esdp", tiebreak: float = 1e-4):
 
         x = x * allowed
         z = sim._z(t0, noise[t0])
-        if fr is None:
+        settled = None
+        if mr is not None:
+            x = mr.admit(t0, x, vhat)
+            sw[t0], settled = mr.advance(t0, z)
+        elif fr is None:
             sw[t0] = float((x * z).sum())
             bandit_z = x * z
         else:
@@ -931,8 +951,15 @@ def lockstep_run(sim, policy: str = "esdp", tiebreak: float = 1e-4):
                                        jnp.asarray(allowed)))
         regret[t0] = float((v_true * x_star).sum() - (v_true * x).sum())
 
-        n += x
-        sumz += bandit_z
+        if mr is not None:
+            # the bandit learns realized per-job totals at settlement
+            # (completion or shutdown) — mid-flight jobs are not yet signal
+            for e0, gain in settled:
+                n[e0] += 1
+                sumz[e0] += max(gain, 0.0)
+        else:
+            n += x
+            sumz += bandit_z
         served = np.zeros(inst.n_ports, bool)
         np.maximum.at(served, port, x > 0)
         waiting = np.where(served, 0, waiting + arrivals[t0])
@@ -943,4 +970,5 @@ def lockstep_run(sim, policy: str = "esdp", tiebreak: float = 1e-4):
                      asw=float(sw.sum()),
                      solve_stats=(sim._solve_stats()
                                   if policy == "esdp" else None),
-                     failures=fr.summary() if fr is not None else None)
+                     failures=fr.summary() if fr is not None else None,
+                     malleable=mr.summary() if mr is not None else None)

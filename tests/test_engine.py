@@ -37,7 +37,7 @@ from repro.sched import (BACKPRESSURE_POLICIES, ClusterSim, DispatchEngine,
                          VariantSpec, feasible_ports, validate_jobs)
 
 REGIMES = ("iid", "markov_dvfs", "mmpp_arrivals", "chronic_straggler",
-           "transient_brownout", "elastic_outage")
+           "transient_brownout", "elastic_outage", "power_coupled")
 
 AB = EngineConfig(variants=(VariantSpec("esdp", weight=0.9),
                             VariantSpec("challenger", kind="hswf",
@@ -276,8 +276,13 @@ def test_single_variant_routes_everything(inst):
 # scaling: one jitted call per trace, batch == per-seed
 # ---------------------------------------------------------------------------
 
-def test_jaxpr_single_scan_horizon_independent(inst):
-    eng = DispatchEngine(inst, 1000)
+@pytest.mark.parametrize("scenario", [None, "power_coupled"])
+def test_jaxpr_single_scan_horizon_independent(inst, scenario):
+    """The stream path stays ONE jitted lax.scan with a horizon-independent
+    jaxpr — including under the coupled-speed regime, whose schedule enters
+    as precomputed scan inputs rather than extra equations."""
+    scn = get_scenario(scenario) if scenario else None
+    eng = DispatchEngine(inst, 1000, scenario=scn)
     j1 = eng.make_stream_jaxpr(1_000)
     j2 = eng.make_stream_jaxpr(1_000_000)
     scans = [e for e in j1.jaxpr.eqns if e.primitive.name == "scan"]

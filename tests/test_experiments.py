@@ -110,7 +110,9 @@ def test_default_scenario_matches_no_scenario(small):
 def test_get_scenario_overrides_and_unknown():
     scn = get_scenario("chronic_straggler", straggler_speed=0.1)
     assert scn.params["straggler_speed"] == 0.1
-    with pytest.raises(KeyError):
+    # unknown regimes raise ValueError and name the registry, so a typo'd
+    # SweepSpec fails with the valid choices instead of a raw KeyError
+    with pytest.raises(ValueError, match="chronic_straggler"):
         get_scenario("no_such_regime")
 
 

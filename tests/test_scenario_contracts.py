@@ -1,0 +1,409 @@
+"""Scenario-contract suite: metamorphic invariants over EVERY registered
+fluctuation regime, plus golden-trace regression pins and property tests.
+
+A regime added to ``experiments.scenarios`` is *automatically* covered
+here — the parametrizations iterate ``scenario_names()`` — so the
+contract the rest of the stack relies on cannot silently erode:
+
+  * declared bounds — realized speeds stay inside the regime's
+    ``Scenario.speed_bounds``, arrival scales are non-negative, alive
+    masks are boolean;
+  * bit-identical replay — the same seed unrolls and simulates to the
+    same trace, twice;
+  * batch faithfulness — ``simulate_batch`` row i equals
+    ``simulate(seed=seeds[i])`` slice for slice (decisions exactly,
+    welfare to 1 float32 ulp — the documented vmap reduction caveat);
+  * stream ≡ lockstep — the streaming engine's single ``lax.scan`` path
+    and the host-driven path agree bit for bit under every regime, and
+    both conserve the arrival/units ledgers;
+  * ledger conservation — wherever a ledger exists (the PR 8 failure
+    ledger, the malleable work-units ledger) the books balance exactly;
+  * golden traces — per-regime × per-policy mean utility on a small
+    fixed grid is pinned to ``tests/goldens/scenario_goldens.json``
+    (regenerate deliberately via ``tools/regen_goldens.py``);
+  * boundary errors — unknown regime/policy names raise ``ValueError``
+    naming the registry at every public entry point.
+
+Property tests use ``hypothesis`` when available (CI installs it) and
+fall back to deterministic sweeps when not — the invariants are always
+exercised, the randomized search is a bonus.
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import build_tables, generate_instance, simulate, \
+    simulate_batch
+from repro.core.baselines import msr_greedy_factory, msr_index_factory
+from repro.experiments import (SweepSpec, get_scenario, run_spec,
+                               scenario_names, unroll_scenario)
+from repro.experiments.scenarios import power_allocation
+from repro.experiments.sweep import default_policies
+from repro.sched import (ClusterSim, DispatchEngine, FailureModel, JobType,
+                         MalleableModel, Slice, build_instance, rate_matrix)
+from repro.sched.engine import LOCKSTEP_POLICIES
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:  # the container may not ship hypothesis; CI does
+    HAS_HYPOTHESIS = False
+
+REGIMES = tuple(scenario_names())
+
+ENGINE_FIELDS = ("sw", "regret", "dispatch_share", "n", "sumz", "queue_len")
+
+GOLDEN_PATH = pathlib.Path(__file__).parent / "goldens" \
+    / "scenario_goldens.json"
+
+
+@pytest.fixture(scope="module")
+def small():
+    inst = generate_instance(seed=3, n_ports=4, n_servers=10, edge_prob=0.3)
+    return inst, build_tables(inst.A, inst.c)
+
+
+@pytest.fixture(scope="module")
+def golden_grid():
+    goldens = json.loads(GOLDEN_PATH.read_text())
+    grid = goldens["grid"]
+    inst = generate_instance(**grid["instance_kwargs"])
+    return goldens, grid, inst, build_tables(inst.A, inst.c)
+
+
+def _malleable_cluster():
+    slices = [Slice("pod-a", "v5e", 256, 32, 4),
+              Slice("pod-b", "v5e", 256, 32, 4),
+              Slice("pod-c", "v5p", 256, 32, 4)]
+    jobs = [JobType("train", "qwen2.5-32b", "train_4k", ("v5e", "v5p"),
+                    256, 32, 4, value_rate=1.0, malleable=True,
+                    min_chips=128, min_hosts=16, min_ici_domains=2),
+            JobType("decode", "deepseek-v3-671b", "decode_32k", ("v5e",),
+                    256, 32, 4, value_rate=1.2, malleable=True,
+                    min_chips=64, min_hosts=8, min_ici_domains=1)]
+    rates = rate_matrix(jobs, slices)
+    inst, _ = build_instance(slices, jobs, rates, seed=0)
+    return inst
+
+
+# ---------------------------------------------------------------------------
+# declared bounds: speed_bounds is a contract, not a hint
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("regime", REGIMES)
+def test_speeds_within_declared_bounds(regime):
+    scn = get_scenario(regime)
+    lo, hi = scn.speed_bounds
+    assert 0.0 <= lo <= hi
+    for seed in (0, 7):
+        arr, speed, alive = unroll_scenario(scn, 200, 12, seed=seed,
+                                            n_ports=4)
+        assert np.isfinite(speed).all(), regime
+        assert (speed >= lo - 1e-6).all(), (regime, float(speed.min()))
+        assert (speed <= hi + 1e-6).all(), (regime, float(speed.max()))
+        assert (arr >= 0).all(), regime
+        assert alive.dtype == bool and alive.shape == speed.shape
+
+
+@pytest.mark.parametrize("regime", REGIMES)
+def test_unroll_replay_bit_identical(regime):
+    scn = get_scenario(regime)
+    a = unroll_scenario(scn, 150, 9, seed=4, n_ports=3)
+    b = unroll_scenario(scn, 150, 9, seed=4, n_ports=3)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y), regime)
+
+
+@pytest.mark.parametrize("regime", REGIMES)
+def test_simulate_replay_bit_identical(small, regime):
+    inst, tables = small
+    policy = default_policies(names=("hswf",))["hswf"](inst, 80, tables)
+    scn = get_scenario(regime)
+    a = simulate(inst, policy, 80, seed=5, tables=tables, scenario=scn)
+    b = simulate(inst, policy, 80, seed=5, tables=tables, scenario=scn)
+    np.testing.assert_array_equal(a.sw, b.sw, regime)
+    np.testing.assert_array_equal(a.n_dispatched, b.n_dispatched, regime)
+
+
+# ---------------------------------------------------------------------------
+# simulate ≡ simulate_batch, slice for slice, per regime
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("regime", REGIMES)
+def test_batch_matches_per_seed_per_regime(small, regime):
+    inst, tables = small
+    T, seeds = 90, (2, 3)
+    policy = default_policies(names=("esdp",))["esdp"](inst, T, tables)
+    scn = get_scenario(regime)
+    batch = simulate_batch(inst, policy, T, seeds, tables=tables,
+                           scenario=scn)
+    for i, s in enumerate(seeds):
+        one = simulate(inst, policy, T, seed=s, tables=tables, scenario=scn)
+        np.testing.assert_array_equal(batch.n_dispatched[i],
+                                      one.n_dispatched, regime)
+        np.testing.assert_array_equal(batch.regret[i], one.regret, regime)
+        np.testing.assert_allclose(batch.sw[i], one.sw, rtol=1e-6,
+                                   atol=1e-6, err_msg=regime)
+
+
+# ---------------------------------------------------------------------------
+# streaming engine: stream ≡ lockstep bit for bit, under every regime
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("regime", REGIMES)
+def test_engine_stream_matches_lockstep_per_regime(small, regime):
+    inst, _ = small
+    scn = get_scenario(regime)
+    eng = DispatchEngine(inst, 70, seed=6, scenario=scn)
+    o_s, o_l = eng.run(mode="stream"), eng.run(mode="lockstep")
+    for f in ENGINE_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(o_s, f)),
+                                      np.asarray(getattr(o_l, f)),
+                                      err_msg=f"{regime}: {f}")
+    for out in (o_s, o_l):
+        led = out.ledger
+        assert led["total_arrivals"] == (led["total_rejected"]
+                                         + led["total_blocked"]
+                                         + led["total_admitted"]), regime
+        assert led["total_admitted"] == (led["total_dispatched"]
+                                         + led["total_dropped"]
+                                         + led["total_shed"]
+                                         + led["final_queue"]), regime
+
+
+# ---------------------------------------------------------------------------
+# ledger conservation wherever a ledger exists
+# ---------------------------------------------------------------------------
+
+def test_failure_ledger_conserves_under_scenario():
+    inst = _malleable_cluster()
+    fm = FailureModel(p_crash=0.08, checkpoints=1)
+    scn = get_scenario("server_failures", p_crash=0.05)
+    out = ClusterSim(inst, 100, scenario=scn, seed=1, failures=fm).run("esdp")
+    led = out.failures
+    np.testing.assert_allclose(
+        led["total_dispatched"],
+        led["total_completed"] + led["total_salvaged"] + led["total_lost"],
+        rtol=1e-6)
+    assert led["total_dispatched"] > 0
+
+
+@pytest.mark.parametrize("preempt", [False, True])
+def test_malleable_units_ledger_conserves(preempt):
+    inst = _malleable_cluster()
+    mm = MalleableModel(duration=4, preempt=preempt)
+    out = ClusterSim(inst, 150, seed=2, malleable=mm).run("esdp")
+    mal = out.malleable
+    assert mal is not None
+    lhs = mal["total_dispatched"]
+    rhs = mal["total_done"] + mal["total_lost"] + mal["residual_units"]
+    assert lhs == pytest.approx(rhs, abs=1e-9)
+    assert lhs > 0
+    # shrink/grow never violates residual capacity: Ax ≤ c every slot
+    c = np.asarray(inst.c)
+    assert (mal["occupancy"] <= c[None, :]).all()
+    # reconfiguration cost is charged exactly once per transition
+    assert mal["total_reconfig_cost"] == pytest.approx(
+        mal["transitions"] * mm.reconfig_cost, rel=1e-6)
+    assert mal["shutdowns"].sum() == (0 if not preempt
+                                      else mal["shutdowns"].sum())
+    if preempt:
+        assert mal["total_shutdown_cost"] == pytest.approx(
+            mal["shutdowns"].sum() * mm.shutdown_cost, rel=1e-6)
+    else:
+        assert mal["total_lost"] == 0.0 and mal["shutdowns"].sum() == 0
+
+
+def test_malleable_duration_one_reduces_to_rigid():
+    """On a family-free instance, duration=1 malleable is the rigid loop."""
+    inst = generate_instance(seed=0, n_ports=6, n_servers=12, edge_prob=0.25)
+    rigid = ClusterSim(inst, 80, seed=3).run("esdp")
+    mall = ClusterSim(inst, 80, seed=3,
+                      malleable=MalleableModel(duration=1)).run("esdp")
+    np.testing.assert_array_equal(rigid.sw, mall.sw)
+    np.testing.assert_array_equal(rigid.regret, mall.regret)
+
+
+# ---------------------------------------------------------------------------
+# golden traces: per-regime × per-policy mean utility on the fixed grid
+# ---------------------------------------------------------------------------
+
+def test_goldens_cover_every_regime_and_policy(golden_grid):
+    goldens, grid, _, _ = golden_grid
+    for regime in scenario_names():
+        for pname in grid["policies"]:
+            assert f"{regime}/{pname}" in goldens["values"], \
+                f"{regime}/{pname} missing — run tools/regen_goldens.py"
+
+
+@pytest.mark.parametrize("regime", REGIMES)
+def test_golden_traces(golden_grid, regime):
+    """Mean utility per (regime, policy) matches the committed golden.
+
+    Tolerance 2e-3 relative: loose enough to survive jax-version float
+    reassociation across the CI matrix, tight enough that any behavioral
+    change to a regime or policy trips it."""
+    goldens, grid, inst, tables = golden_grid
+    T, seeds = grid["T"], tuple(grid["seeds"])
+    scn = get_scenario(regime)
+    for pname, factory in default_policies(
+            names=tuple(grid["policies"])).items():
+        policy = factory(inst, T, tables)
+        res = simulate_batch(inst, policy, T, seeds, tables=tables,
+                             scenario=scn)
+        want = goldens["values"][f"{regime}/{pname}"]
+        got_asw = float(res.asw[:, -1].mean())
+        got_reg = float(res.regret[:, -1].mean())
+        assert got_asw == pytest.approx(want["asw_final_mean"],
+                                        rel=2e-3, abs=1e-4), \
+            (regime, pname, "asw")
+        assert got_reg == pytest.approx(want["regret_final_mean"],
+                                        rel=2e-3, abs=1e-4), \
+            (regime, pname, "regret")
+
+
+# ---------------------------------------------------------------------------
+# property tests: power allocation + malleable invariants
+# (hypothesis-driven when installed, deterministic sweeps otherwise)
+# ---------------------------------------------------------------------------
+
+def _check_power_allocation(demand, budget):
+    p = np.asarray(power_allocation(jnp.asarray(demand), budget))
+    assert (p >= -1e-6).all()
+    assert (p <= np.asarray(demand) + 1e-6).all()
+    assert p.sum() <= budget + 1e-4 * max(budget, 1.0)
+
+
+def _check_power_monotone(demand, b_lo, b_hi):
+    p_lo = np.asarray(power_allocation(jnp.asarray(demand), b_lo))
+    p_hi = np.asarray(power_allocation(jnp.asarray(demand), b_hi))
+    assert (p_hi >= p_lo - 1e-5).all()
+
+
+if HAS_HYPOTHESIS:
+
+    @settings(deadline=None, max_examples=50)
+    @given(st.lists(st.floats(0.0, 10.0), min_size=1, max_size=16),
+           st.floats(0.0, 50.0))
+    def test_power_allocation_respects_budget(demand, budget):
+        _check_power_allocation(demand, budget)
+
+    @settings(deadline=None, max_examples=50)
+    @given(st.lists(st.floats(0.0, 10.0), min_size=1, max_size=16),
+           st.floats(0.0, 30.0), st.floats(0.0, 30.0))
+    def test_power_allocation_monotone_in_budget(demand, b1, b2):
+        _check_power_monotone(demand, min(b1, b2), max(b1, b2))
+
+else:
+
+    def test_power_allocation_respects_budget():
+        rng = np.random.default_rng(0)
+        for _ in range(50):
+            d = rng.uniform(0.0, 10.0, rng.integers(1, 17))
+            _check_power_allocation(d, float(rng.uniform(0.0, 50.0)))
+
+    def test_power_allocation_monotone_in_budget():
+        rng = np.random.default_rng(1)
+        for _ in range(50):
+            d = rng.uniform(0.0, 10.0, rng.integers(1, 17))
+            b = sorted(rng.uniform(0.0, 30.0, 2))
+            _check_power_monotone(d, float(b[0]), float(b[1]))
+
+
+def _check_malleable_run(duration, seed, preempt):
+    inst = _malleable_cluster()
+    mm = MalleableModel(duration=duration, preempt=preempt)
+    out = ClusterSim(inst, 60, seed=seed, malleable=mm).run("esdp")
+    mal = out.malleable
+    c = np.asarray(inst.c)
+    assert (mal["occupancy"] <= c[None, :]).all()
+    assert mal["total_dispatched"] == pytest.approx(
+        mal["total_done"] + mal["total_lost"] + mal["residual_units"],
+        abs=1e-9)
+    assert mal["total_reconfig_cost"] == pytest.approx(
+        mal["transitions"] * mm.reconfig_cost, rel=1e-6)
+
+
+if HAS_HYPOTHESIS:
+
+    @settings(deadline=None, max_examples=12)
+    @given(st.integers(1, 6), st.integers(0, 100), st.booleans())
+    def test_malleable_invariants_property(duration, seed, preempt):
+        _check_malleable_run(duration, seed, preempt)
+
+else:
+
+    @pytest.mark.parametrize("duration,seed,preempt",
+                             [(1, 0, False), (3, 1, False), (4, 2, True),
+                              (6, 3, True), (2, 4, False), (5, 5, True)])
+    def test_malleable_invariants_property(duration, seed, preempt):
+        _check_malleable_run(duration, seed, preempt)
+
+
+# ---------------------------------------------------------------------------
+# boundary errors: unknown names raise ValueError naming the registry
+# ---------------------------------------------------------------------------
+
+def test_unknown_scenario_raises_value_error():
+    with pytest.raises(ValueError, match="power_coupled"):
+        get_scenario("not_a_regime")
+
+
+def test_unknown_policy_raises_value_error():
+    with pytest.raises(ValueError, match="msr_greedy"):
+        default_policies(names=("esdp", "not_a_policy"))
+
+
+def test_sweep_spec_unknown_scenario_raises(small):
+    inst, _ = small
+    spec = SweepSpec(name="bad", T=10, seeds=(0,),
+                     policies=default_policies(names=("hswf",)),
+                     scenario="not_a_regime",
+                     instance_kwargs={"seed": 3, "n_ports": 4,
+                                      "n_servers": 10, "edge_prob": 0.3})
+    with pytest.raises(ValueError, match="registered scenarios"):
+        run_spec(spec)
+
+
+def test_cluster_sim_unknown_policy_raises():
+    inst = _malleable_cluster()
+    with pytest.raises(ValueError, match="esdp"):
+        ClusterSim(inst, 10).run("not_a_policy")
+    assert set(LOCKSTEP_POLICIES) == {"esdp", "hswf", "lcf", "lwtf"}
+
+
+def test_cluster_sim_malleable_excludes_failures():
+    inst = _malleable_cluster()
+    with pytest.raises(ValueError):
+        ClusterSim(inst, 10, malleable=MalleableModel(),
+                   failures=FailureModel(p_crash=0.1))
+
+
+def test_run_batch_rejects_malleable():
+    inst = _malleable_cluster()
+    sim = ClusterSim(inst, 10, malleable=MalleableModel())
+    with pytest.raises(NotImplementedError):
+        sim.run_batch([0, 1])
+
+
+# ---------------------------------------------------------------------------
+# MSR baselines behave like policies (finite, registered, distinct)
+# ---------------------------------------------------------------------------
+
+def test_msr_policies_run_and_differ(small):
+    inst, tables = small
+    T = 100
+    outs = {}
+    for factory in (msr_greedy_factory(), msr_index_factory()):
+        policy = factory(inst, T, tables)
+        res = simulate(inst, policy, T, seed=0, tables=tables,
+                       scenario=get_scenario("markov_dvfs"))
+        assert np.isfinite(res.sw).all() and np.isfinite(res.regret).all()
+        outs[factory.policy_name] = np.asarray(res.sw)
+    # the UCB exploration bonus must actually change behaviour
+    assert not np.array_equal(outs["msr_greedy"], outs["msr_index"])

@@ -1,0 +1,73 @@
+#!/usr/bin/env python
+"""Regenerate the golden-trace regression file used by
+``tests/test_scenario_contracts.py``.
+
+The goldens pin the mean utility (final average social welfare and final
+cumulative regret, averaged over seeds) of every registered fluctuation
+regime x a representative policy slate on one small fixed grid.  They
+are a *tripwire*, not a spec: a legitimate change to a regime, a policy,
+or the simulator should regenerate them with
+
+    PYTHONPATH=src python tools/regen_goldens.py
+
+and the diff of ``tests/goldens/scenario_goldens.json`` becomes part of
+the review — silent drift in any regime/policy pair fails the golden
+test instead of sailing through.
+
+The grid is deliberately tiny (3 ports x 8 servers, T=120, 2 seeds) so
+the whole matrix regenerates in well under a minute on CPU.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import build_tables, generate_instance, simulate_batch
+from repro.experiments import get_scenario, scenario_names
+from repro.experiments.sweep import default_policies
+
+GOLDEN_PATH = (pathlib.Path(__file__).resolve().parents[1]
+               / "tests" / "goldens" / "scenario_goldens.json")
+
+# the fixed grid — changing any of these invalidates every golden, so
+# the test file asserts they match what it replays
+GRID = dict(instance_kwargs=dict(seed=5, n_ports=3, n_servers=8,
+                                 edge_prob=0.4),
+            T=120, seeds=(0, 1),
+            policies=("esdp", "hswf", "msr_greedy", "msr_index"))
+
+
+def regenerate() -> dict:
+    inst = generate_instance(**GRID["instance_kwargs"])
+    tables = build_tables(inst.A, inst.c)
+    T, seeds = GRID["T"], GRID["seeds"]
+    factories = default_policies(names=GRID["policies"])
+    goldens: dict = {"grid": {**GRID, "seeds": list(seeds),
+                              "policies": list(GRID["policies"])},
+                     "values": {}}
+    for regime in scenario_names():
+        scn = get_scenario(regime)
+        for pname, factory in factories.items():
+            policy = factory(inst, T, tables)
+            res = simulate_batch(inst, policy, T, seeds, tables=tables,
+                                 scenario=scn)
+            goldens["values"][f"{regime}/{pname}"] = {
+                "asw_final_mean": float(res.asw[:, -1].mean()),
+                "regret_final_mean": float(res.regret[:, -1].mean()),
+            }
+    return goldens
+
+
+def main() -> None:
+    goldens = regenerate()
+    GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+    GOLDEN_PATH.write_text(json.dumps(goldens, indent=2, sort_keys=True)
+                           + "\n")
+    print(f"wrote {len(goldens['values'])} goldens -> {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    main()
